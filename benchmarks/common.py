@@ -1,0 +1,33 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from contextlib import contextmanager
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
+
+
+def save(name: str, payload: dict) -> str:
+    os.makedirs(ART, exist_ok=True)
+    path = os.path.join(ART, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=str)
+    return path
+
+
+@contextmanager
+def timed(label: str):
+    t0 = time.time()
+    yield
+    print(f"[{label}] {time.time() - t0:.2f}s")
+
+
+def fmt_table(rows: list[list], headers: list[str]) -> str:
+    widths = [max(len(str(r[i])) for r in [headers] + rows)
+              for i in range(len(headers))]
+    def line(r):
+        return "  ".join(str(c).ljust(w) for c, w in zip(r, widths))
+    sep = "  ".join("-" * w for w in widths)
+    return "\n".join([line(headers), sep] + [line(r) for r in rows])

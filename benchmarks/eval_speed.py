@@ -1,0 +1,59 @@
+"""§V-E evaluation speed: scalar vs vectorized MCCM vs the paper's 6.3 ms.
+
+Reports µs/design for (a) the scalar reference evaluator (the paper-style
+object walker), (b) the jitted batch evaluator at several batch sizes.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.cnn.registry import get_cnn
+from repro.core.batch_eval import encode_specs, evaluate_batch, make_tables
+from repro.core.evaluator import evaluate_design
+from repro.fpga.archs import make_arch
+from repro.fpga.boards import get_board
+
+from .common import fmt_table, save
+
+PAPER_US = 6300.0
+
+
+def run(verbose: bool = True) -> dict:
+    net, dev = get_cnn("xception"), get_board("vcu110")
+    specs = [make_arch(a, net, n)
+             for a in ("segmented", "segmented_rr", "hybrid")
+             for n in range(2, 12)]
+
+    t0 = time.time()
+    for s in specs:
+        evaluate_design(s, net, dev)
+    scalar_us = (time.time() - t0) / len(specs) * 1e6
+
+    tables = make_tables(net)
+    rows = [["scalar (reference)", f"{scalar_us:.0f}",
+             f"{PAPER_US/scalar_us:.1f}x"]]
+    out = {"scalar_us": scalar_us, "paper_us": PAPER_US}
+    for mult in (1, 8, 64):
+        batch = encode_specs(specs * mult, len(net))
+        r = evaluate_batch(batch, tables, dev)
+        jax.block_until_ready(r["latency_s"])
+        t0 = time.time()
+        reps = 3
+        for _ in range(reps):
+            r = evaluate_batch(batch, tables, dev)
+            jax.block_until_ready(r["latency_s"])
+        us = (time.time() - t0) / reps / (len(specs) * mult) * 1e6
+        out[f"batch{len(specs)*mult}_us"] = us
+        rows.append([f"batched jit (B={len(specs)*mult})", f"{us:.1f}",
+                     f"{PAPER_US/us:.0f}x"])
+    if verbose:
+        print(fmt_table(rows, ["evaluator", "us/design", "vs paper 6300us"]))
+    save("eval_speed", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,64 @@
+"""Paper Fig. 5 + Fig. 8: throughput-vs-accesses (ResNet50/ZC706) and
+throughput-vs-buffers (XCp/VCU110) fronts, 10 instances per architecture.
+
+Checks (paper's reading of the figures):
+* Fig. 5 — SegmentedRR instances have considerably more off-chip accesses
+  than Segmented/Hybrid on the small-BRAM ZC706;
+* Fig. 8 — the fronts trade throughput against buffers; the best-throughput
+  and min-buffer instances come from different architectures/CE counts.
+"""
+from __future__ import annotations
+
+from repro.cnn.registry import get_cnn
+from repro.core.evaluator import evaluate_design
+from repro.fpga.archs import ARCH_NAMES, make_arch
+from repro.fpga.boards import get_board
+
+from .common import save
+
+
+def _sweep(cnn: str, board: str) -> dict:
+    net, dev = get_cnn(cnn), get_board(board)
+    pts = {}
+    for arch in ARCH_NAMES:
+        pts[arch] = []
+        for n in range(2, 12):
+            m = evaluate_design(make_arch(arch, net, n), net, dev)
+            pts[arch].append(dict(n=n, throughput=m.throughput_ips,
+                                  accesses=m.access_bytes,
+                                  buffers=float(m.buffer_bytes)))
+    return pts
+
+
+def run(verbose: bool = True) -> dict:
+    fig5 = _sweep("resnet50", "zc706")
+    fig8 = _sweep("xception", "vcu110")
+
+    import numpy as np
+    rr_acc = np.mean([p["accesses"] for p in fig5["segmented_rr"]])
+    other_acc = np.mean([p["accesses"]
+                         for a in ("segmented", "hybrid") for p in fig5[a]])
+    best_tp = max(((a, p) for a in ARCH_NAMES for p in fig8[a]),
+                  key=lambda t: t[1]["throughput"])
+    min_buf = min(((a, p) for a in ARCH_NAMES for p in fig8[a]),
+                  key=lambda t: t[1]["buffers"])
+    checks = {
+        "fig5_segmented_rr_access_heavy": bool(rr_acc > 1.3 * other_acc),
+        "fig8_best_tp_and_min_buf_differ":
+            (best_tp[0], best_tp[1]["n"]) != (min_buf[0], min_buf[1]["n"]),
+    }
+    if verbose:
+        print(f"Fig5 ZC706/Res50: mean accesses segmented_rr "
+              f"{rr_acc/1e6:.1f} MB vs others {other_acc/1e6:.1f} MB")
+        print(f"Fig8 VCU110/XCp: best throughput {best_tp[0]}[{best_tp[1]['n']}]"
+              f" = {best_tp[1]['throughput']:.1f} ips; min buffers "
+              f"{min_buf[0]}[{min_buf[1]['n']}] = "
+              f"{min_buf[1]['buffers']/2**20:.2f} MiB")
+        print("checks:", checks)
+    out = {"fig5": fig5, "fig8": fig8, "checks": checks}
+    save("fig5_fig8_fronts", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,86 @@
+"""Paper Fig. 6 + Fig. 7: fine-grained bottleneck analysis on ResNet50/ZC706.
+
+Fig. 6 — per-segment compute vs memory-access time of (a) the best-
+throughput SegmentedRR and (b) the best-throughput Segmented: SegmentedRR
+has memory-bound segments (paper: CEs idle waiting for data ~29% of time);
+Segmented has none.
+
+Fig. 7 — off-chip access breakdown (weights vs FMs) of each architecture's
+best-throughput instance: weights dominate SegmentedRR and Hybrid accesses
+(so FM compression would be pure overhead — the paper's point).
+"""
+from __future__ import annotations
+
+from repro.cnn.registry import get_cnn
+from repro.core.evaluator import evaluate_design
+from repro.fpga.archs import make_arch
+from repro.fpga.boards import get_board
+
+from .common import save
+
+
+def _best_tp(arch, net, dev):
+    cands = [(evaluate_design(make_arch(arch, net, n), net, dev), n)
+             for n in range(2, 12)]
+    return max(cands, key=lambda t: t[0].throughput_ips)
+
+
+def run(verbose: bool = True) -> dict:
+    net, dev = get_cnn("resnet50"), get_board("zc706")
+    best = {a: _best_tp(a, net, dev)
+            for a in ("segmented_rr", "segmented", "hybrid")}
+
+    # ---- Fig 6: segment compute vs memory time ----
+    fig6 = {}
+    for arch in ("segmented_rr", "segmented"):
+        m, n = best[arch]
+        total = sum(max(s.compute_s, s.mem_s) for s in m.per_segment) or 1.0
+        fig6[arch] = {
+            "n_ces": n,
+            "segments": [dict(idx=s.index, compute=s.compute_s / total,
+                              mem=s.mem_s / total,
+                              mem_bound=s.mem_s > s.compute_s)
+                         for s in m.per_segment],
+        }
+    # per-layer granularity for the SegmentedRR block (its single block
+    # spans all layers; paper's "segments 22-26" are layer groups)
+    m_rr, _ = best["segmented_rr"]
+    blk = m_rr.blocks[0]
+    mem_bound_layers = [r.layer.index for r in blk.per_layer
+                        if r.mem_cycles > r.compute_cycles]
+    idle_frac = (sum(max(r.mem_cycles - r.compute_cycles, 0.0)
+                     for r in blk.per_layer)
+                 / sum(max(r.mem_cycles, r.compute_cycles)
+                       for r in blk.per_layer))
+    fig6["segmented_rr"]["mem_bound_layers"] = mem_bound_layers
+    fig6["segmented_rr"]["idle_fraction"] = idle_frac
+
+    # ---- Fig 7: access breakdown ----
+    fig7 = {}
+    for arch, (m, n) in best.items():
+        fig7[arch] = dict(n_ces=n, weights=m.weight_access_bytes,
+                          fms=m.fm_access_bytes, total=m.access_bytes)
+
+    seg_mem_bound = any(s["mem_bound"] for s in fig6["segmented"]["segments"])
+    checks = {
+        "segmented_rr_has_memory_bound_layers": len(mem_bound_layers) > 0,
+        "segmented_has_no_memory_bound_segments": not seg_mem_bound,
+        "weights_dominate_rr_and_hybrid": all(
+            fig7[a]["weights"] > fig7[a]["fms"]
+            for a in ("segmented_rr", "hybrid")),
+    }
+    if verbose:
+        print(f"SegmentedRR[{fig6['segmented_rr']['n_ces']}]: "
+              f"{len(mem_bound_layers)} memory-bound layers, idle fraction "
+              f"{idle_frac:.0%} (paper: 29%)")
+        for a, d in fig7.items():
+            print(f"Fig7 {a}[{d['n_ces']}]: weights {d['weights']/1e6:.1f} MB"
+                  f" / FMs {d['fms']/1e6:.1f} MB")
+        print("checks:", checks)
+    out = {"fig6": fig6, "fig7": fig7, "checks": checks}
+    save("fig6_fig7_breakdown", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,43 @@
+"""§Roofline report: three terms per (arch × shape) on the single-pod mesh
+(the assignment's baseline table), from the dry-run artifacts.
+
+Run ``python -m repro.launch.dryrun`` first (or let run.py use whatever
+artifacts exist).
+"""
+from __future__ import annotations
+
+from repro.roofline.analysis import analyze_cell, load_artifacts
+
+from .common import fmt_table, save
+
+
+def run(verbose: bool = True) -> dict:
+    recs = load_artifacts(mesh="single")
+    if not recs:
+        print("no dry-run artifacts found — run "
+              "`PYTHONPATH=src python -m repro.launch.dryrun` first")
+        return {"checks": {"artifacts_present": False}}
+    rows, cells = [], {}
+    for rec in recs:
+        c = analyze_cell(rec)
+        cells[c.cell] = c.__dict__
+        rows.append(c.as_row())
+    rows.sort(key=lambda r: (r[0], r[1]))
+    dominant_counts: dict[str, int] = {}
+    for c in cells.values():
+        dominant_counts[c["dominant"]] = \
+            dominant_counts.get(c["dominant"], 0) + 1
+    if verbose:
+        print(fmt_table(rows, ["arch", "shape", "mesh", "comp ms", "mem ms",
+                               "coll ms", "dominant", "useful", "roofline",
+                               "HBM GiB"]))
+        print("dominant-term census:", dominant_counts)
+    out = {"cells": cells, "dominant_counts": dominant_counts,
+           "checks": {"artifacts_present": True,
+                      "all_cells_analyzed": len(recs) == len(cells)}}
+    save("roofline_report", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

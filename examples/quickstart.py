@@ -1,0 +1,48 @@
+"""Quickstart: express, build, and evaluate multiple-CE accelerators with
+MCCM — the paper's §III-B notation end to end.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.cnn.registry import get_cnn
+from repro.core.evaluator import evaluate_design
+from repro.core.notation import format_spec, parse
+from repro.fpga.archs import make_arch
+from repro.fpga.boards import get_board
+
+net = get_cnn("resnet50")           # paper Table III workload
+dev = get_board("zcu102")           # paper Table II board
+
+print(f"CNN: {net.name} ({len(net)} conv layers, "
+      f"{net.total_weights/1e6:.1f}M weights); board: {dev.name} "
+      f"({dev.pes} DSPs, {dev.on_chip_bytes/2**20:.1f} MiB BRAM)\n")
+
+# -- 1. the paper's notation ------------------------------------------------
+designs = {
+    "SegmentedRR {L1-Last:CE1-CE4}": parse("{L1-Last:CE1-CE4}", len(net)),
+    "Hybrid      {L1:CE1, L2:CE2, L3:CE3, L4-Last:CE4}":
+        parse("{L1:CE1, L2:CE2, L3:CE3, L4-Last:CE4}", len(net)),
+    "Segmented   (4 MAC-balanced single-CE segments)":
+        make_arch("segmented", net, 4),
+}
+
+print(f"{'design':55s} {'latency':>9s} {'thpt':>7s} {'buffer':>9s} "
+      f"{'access':>9s}")
+for name, spec in designs.items():
+    m = evaluate_design(spec, net, dev)
+    print(f"{name:55s} {m.latency_s*1e3:7.1f}ms {m.throughput_ips:6.1f}/s "
+          f"{m.buffer_bytes/2**20:7.2f}MiB {m.access_bytes/1e6:7.1f}MB")
+
+# -- 2. fine-grained bottleneck view (paper use case 2) ----------------------
+m = evaluate_design(make_arch("segmented", net, 4), net, dev)
+print("\nper-segment breakdown (Segmented, 4 CEs):")
+for s in m.per_segment:
+    kind = "MEM-bound" if s.mem_s > s.compute_s else "compute-bound"
+    print(f"  seg {s.index}: {s.n_layers:3d} layers  busy {s.busy_s*1e3:6.1f}ms"
+          f"  util {s.utilization:5.1%}  {kind}")
+
+# -- 3. any custom arrangement in one line -----------------------------------
+custom = parse("{L1-L10:CE1-CE5, L11-L30:CE6, L31-Last:CE7}", len(net))
+m = evaluate_design(custom, net, dev)
+print(f"\ncustom {format_spec(custom, len(net))}:")
+print(f"  latency {m.latency_s*1e3:.1f} ms, throughput "
+      f"{m.throughput_ips:.1f}/s, buffers {m.buffer_bytes/2**20:.2f} MiB")

@@ -1,0 +1,41 @@
+"""End-to-end training of a ~100M-param transformer for a few hundred steps
+on CPU — the assignment's (b) end-to-end driver, using the same launcher a
+pod run would use (checkpointing, prefetching, straggler log).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+~100M params: 8 layers, d_model=512, d_ff=2048, vocab 32000.
+"""
+import argparse
+import sys
+
+sys.argv = [sys.argv[0]]  # re-parse inside the launcher
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+args, _ = ap.parse_known_args()
+
+import dataclasses
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig
+
+# a ~100M llama-style config
+cfg = ModelConfig(
+    name="lm-100m", family="dense", n_layers=8, d_model=512, n_heads=8,
+    n_kv_heads=8, d_ff=2048, vocab_size=32_000, rope_theta=1e4,
+)
+print(f"model: {cfg.name}, {cfg.param_count()/1e6:.1f}M params")
+
+# register it so the launcher can find it, then delegate
+import repro.configs as C
+
+C.ARCHS[cfg.name] = cfg
+from repro.launch.train import main
+
+sys.exit(main([
+    "--arch", cfg.name, "--steps", str(args.steps),
+    "--batch", "8", "--seq", "128", "--shape", "custom",
+    "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "100",
+    "--lr", "1e-3", "--log-every", "25",
+]))

@@ -1,0 +1,44 @@
+"""CNN zoo registry — the paper's five workloads (Table III)."""
+from __future__ import annotations
+
+from functools import lru_cache
+
+from ..core.workload import Network
+from .densenet import densenet121
+from .mobilenetv2 import mobilenetv2
+from .resnet import resnet50, resnet152
+from .xception import xception
+
+_FACTORIES = {
+    "resnet152": resnet152,
+    "resnet50": resnet50,
+    "xception": xception,
+    "densenet121": densenet121,
+    "mobilenetv2": mobilenetv2,
+}
+
+# Paper Table III: (abbrev, weights in millions, conv layer count)
+TABLE_III = {
+    "resnet152": ("Res152", 60.4, 155),
+    "resnet50": ("Res50", 25.6, 53),
+    "xception": ("XCp", 22.9, 74),
+    "densenet121": ("Dns121", 8.1, 120),
+    "mobilenetv2": ("MobV2", 3.5, 52),
+}
+
+CNN_NAMES = tuple(_FACTORIES)
+
+
+@lru_cache(maxsize=None)
+def get_cnn(name: str) -> Network:
+    """Conv-layer network for MCCM evaluation."""
+    if name not in _FACTORIES:
+        raise KeyError(f"unknown CNN {name!r}; known: {sorted(_FACTORIES)}")
+    return _FACTORIES[name]()[0]
+
+
+@lru_cache(maxsize=None)
+def total_params(name: str) -> int:
+    """Conv weights + classifier weights (for Table III validation)."""
+    net, fc = _FACTORIES[name]()
+    return net.total_weights + fc

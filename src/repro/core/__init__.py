@@ -1,0 +1,50 @@
+"""MCCM core: the paper's analytical cost model (Eqs. 1-9) and builder."""
+from .accelerator import ConcreteAccelerator, Metrics, SegmentMetrics, evaluate
+from .blocks import (
+    CE,
+    BlockResult,
+    LayerResult,
+    best_parallelism,
+    eval_pipelined,
+    eval_single_ce,
+    layer_cycles,
+    layer_utilization,
+    pipelined_min_buffer,
+    single_ce_min_buffer,
+)
+from .builder import BuilderOptions, build
+from .device import DeviceSpec, mib
+from .evaluator import build_design, evaluate_design
+from .notation import AcceleratorSpec, SegmentSpec, format_spec, parse
+from .workload import DIMS, ConvLayer, Network, make_network
+
+__all__ = [
+    "CE",
+    "DIMS",
+    "AcceleratorSpec",
+    "BlockResult",
+    "BuilderOptions",
+    "ConcreteAccelerator",
+    "ConvLayer",
+    "DeviceSpec",
+    "LayerResult",
+    "Metrics",
+    "Network",
+    "SegmentMetrics",
+    "SegmentSpec",
+    "best_parallelism",
+    "build",
+    "build_design",
+    "evaluate",
+    "evaluate_design",
+    "eval_pipelined",
+    "eval_single_ce",
+    "format_spec",
+    "layer_cycles",
+    "layer_utilization",
+    "make_network",
+    "mib",
+    "parse",
+    "pipelined_min_buffer",
+    "single_ce_min_buffer",
+]

@@ -1,0 +1,554 @@
+"""Vectorized MCCM: evaluate thousands of multiple-CE designs as ONE jitted
+JAX program.
+
+The scalar path (``evaluator.evaluate_design``) walks Python objects at
+~100 µs–1 ms per design; the paper's own C++/Python model reports 6.3 ms.
+Here every design in a batch is encoded as fixed-shape arrays (segments
+padded to ``NS``, CEs to ``NC``) and Eqs. 1–9 are evaluated with masked
+tensor ops — the whole DSE sample becomes a handful of XLA kernels.
+
+Exactness: this is the *same* model, not an approximation —
+``tests/test_batch_eval.py`` asserts agreement with the scalar evaluator on
+every baseline architecture × CNN × CE-count (largest-remainder PE
+distribution, the discrete ⟨pf, ph, pw⟩ parallelism search, Eq. 6's two
+buffered-access options, and the exact pipeline stage-sum via the
+prefix/suffix-max identity all replicated in vector form).
+
+Layout
+------
+* ``NetTables``  — static per-CNN arrays (layer dims, ceil-div tables).
+* ``DesignBatch`` — (B, NS) segment encoding: end layer (exclusive),
+  pipelined flag, CE count; plus a per-design inter-segment-pipelining bit.
+* ``evaluate_batch`` — jitted core: DesignBatch -> metric arrays.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .blocks import CANDIDATES_DEFAULT
+from .device import DeviceSpec
+from .notation import AcceleratorSpec
+from .workload import Network
+
+NS = 12          # max segments per design
+NC = 16          # max CEs per design
+NEG = -1.0e30
+
+
+# --------------------------------------------------------------------------
+# static per-network tables
+# --------------------------------------------------------------------------
+@dataclass(frozen=True, eq=False)      # eq=False: identity hash — the
+class NetTables:                       # tables are static jit args
+    name: str
+    L: int
+    F: np.ndarray          # out channels
+    CKK: np.ndarray        # c * kh * kw  (c=1 for depthwise)
+    OH: np.ndarray
+    OW: np.ndarray
+    MACS: np.ndarray
+    W: np.ndarray          # weights (elements)
+    IFM: np.ndarray
+    OFM: np.ndarray
+    EXTRA: np.ndarray      # residual OFM copy (elements)
+    BAND: np.ndarray       # in_ch * kh * iw  (IFM row band)
+    OFM_ROW: np.ndarray    # out_ch * ow
+    CEIL_F: np.ndarray     # (L, NCAND) ceil(F / cand)
+    CEIL_OH: np.ndarray
+    CEIL_OW: np.ndarray
+    CAND: np.ndarray
+
+
+def make_tables(net: Network,
+                candidates=CANDIDATES_DEFAULT) -> NetTables:
+    cand = np.asarray(candidates, np.int32)
+    L = len(net)
+    dims = [l.dims() for l in net]
+    F = np.array([d["f"] for d in dims], np.float64)
+    CKK = np.array([d["c"] * d["kh"] * d["kw"] for d in dims], np.float64)
+    OH = np.array([d["oh"] for d in dims], np.float64)
+    OW = np.array([d["ow"] for d in dims], np.float64)
+    return NetTables(
+        name=net.name, L=L, F=F, CKK=CKK, OH=OH, OW=OW,
+        MACS=np.array([l.macs for l in net], np.float64),
+        W=np.array([l.weights_size for l in net], np.float64),
+        IFM=np.array([l.ifm_size for l in net], np.float64),
+        OFM=np.array([l.ofm_size for l in net], np.float64),
+        EXTRA=np.array([l.ofm_size if l.residual else 0 for l in net],
+                       np.float64),
+        BAND=np.array([l.in_ch * l.kh * l.iw for l in net], np.float64),
+        OFM_ROW=np.array([l.out_ch * l.ow for l in net], np.float64),
+        CEIL_F=np.ceil(F[:, None] / cand[None, :]),
+        CEIL_OH=np.ceil(OH[:, None] / cand[None, :]),
+        CEIL_OW=np.ceil(OW[:, None] / cand[None, :]),
+        CAND=cand,
+    )
+
+
+# --------------------------------------------------------------------------
+# design encoding
+# --------------------------------------------------------------------------
+@jax.tree_util.register_dataclass
+@dataclass
+class DesignBatch:
+    """(B, NS) arrays; invalid segments have end == previous end."""
+
+    seg_end: jnp.ndarray       # int32 (B, NS) exclusive end layer
+    seg_pipe: jnp.ndarray      # bool  (B, NS)
+    seg_nce: jnp.ndarray       # int32 (B, NS) >= 1
+    inter_pipe: jnp.ndarray    # bool  (B,)
+
+    @property
+    def batch(self) -> int:
+        return self.seg_end.shape[0]
+
+
+def encode_specs(specs: list[AcceleratorSpec], n_layers: int) -> DesignBatch:
+    B = len(specs)
+    seg_end = np.full((B, NS), n_layers, np.int32)
+    seg_pipe = np.zeros((B, NS), bool)
+    seg_nce = np.ones((B, NS), np.int32)
+    inter = np.zeros((B,), bool)
+    for b, spec in enumerate(specs):
+        if len(spec.segments) > NS:
+            raise ValueError(f"{spec.name}: more than {NS} segments")
+        end = 0
+        for s, seg in enumerate(spec.segments):
+            end = seg.layer_hi + 1
+            seg_end[b, s] = end
+            seg_pipe[b, s] = seg.pipelined
+            seg_nce[b, s] = seg.n_ces
+        seg_end[b, len(spec.segments):] = end
+        inter[b] = spec.inter_segment_pipelining
+    return DesignBatch(jnp.asarray(seg_end), jnp.asarray(seg_pipe),
+                       jnp.asarray(seg_nce), jnp.asarray(inter))
+
+
+# --------------------------------------------------------------------------
+# helpers
+# --------------------------------------------------------------------------
+def _largest_remainder(shares, total, valid):
+    """Vectorized largest-remainder rounding (floor 1 per valid CE).
+
+    shares: (B, NC) f64; total: scalar; valid: (B, NC) bool.
+    Mirrors builder._largest_remainder including tie-breaking by index.
+    """
+    n = valid.sum(-1)                                  # (B,)
+    s = jnp.where(shares.sum(-1) > 0, shares.sum(-1), 1.0)
+    raw = jnp.maximum(shares / s[:, None] * total, 1.0)
+    raw = jnp.where(valid, raw, 0.0)
+    out = jnp.where(valid, jnp.maximum(jnp.floor(raw), 1.0), 0.0)
+    rem = total - out.sum(-1)                          # (B,) can be +/-
+    frac = jnp.where(valid, raw - jnp.floor(raw), -1.0)
+    # positive remainder: +1 to the rem largest fractions (cyclically the
+    # scalar hands out one each in frac order; rem < n in practice)
+    order = jnp.argsort(-frac, axis=-1, stable=True)
+    rank = jnp.argsort(order, axis=-1, stable=True)    # rank in frac order
+    give = rank < jnp.maximum(rem, 0)[:, None]
+    out = out + jnp.where(valid & give, 1.0, 0.0)
+    # negative remainder: take from the largest allocations (scalar loops;
+    # one pass suffices when floors forced the overflow)
+    deficit = jnp.maximum(-rem, 0.0)
+    big_order = jnp.argsort(-out, axis=-1, stable=True)
+    big_rank = jnp.argsort(big_order, axis=-1, stable=True)
+    take = (big_rank < deficit[:, None]) & (out > 1.0)
+    out = out - jnp.where(take, 1.0, 0.0)
+    return out
+
+
+def _seg_onehot(seg_of_layer, valid_layer):
+    """(B, L, NS) one-hot of each layer's segment id."""
+    oh = jax.nn.one_hot(seg_of_layer, NS, dtype=jnp.float32)
+    return oh * valid_layer[..., None]
+
+
+def _seg_sum(x, onehot):
+    """sum of per-layer x (B, L) into segments -> (B, NS)."""
+    return jnp.einsum("bl,bls->bs", x, onehot)
+
+
+def _seg_max(x, onehot):
+    big = jnp.where(onehot > 0, x[..., None], NEG)
+    return big.max(axis=1)
+
+
+# --------------------------------------------------------------------------
+# the jitted core
+# --------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("tables", "dev", "fm_tile_rows"))
+def evaluate_batch(design: DesignBatch, tables: NetTables, dev: DeviceSpec,
+                   fm_tile_rows: int = 2) -> dict[str, jnp.ndarray]:
+    t, B, L = tables, design.batch, tables.L
+    wb = float(dev.wordbytes)
+    bpc = dev.off_chip_bytes_per_cycle
+    cand = jnp.asarray(t.CAND, jnp.float32)
+    ncand = cand.shape[0]
+    layer_ix = jnp.arange(L)
+
+    # ---- layer -> segment / CE maps --------------------------------------
+    seg_end = design.seg_end                      # (B, NS)
+    seg_start = jnp.concatenate(
+        [jnp.zeros((B, 1), jnp.int32), seg_end[:, :-1]], axis=1)
+    seg_len = seg_end - seg_start                 # (B, NS)
+    seg_valid = seg_len > 0
+    n_seg = seg_valid.sum(-1)                     # (B,)
+
+    # seg of layer: first segment with end > l
+    seg_of_layer = jnp.sum(
+        (layer_ix[None, :, None] >= seg_end[:, None, :]).astype(jnp.int32),
+        axis=-1)                                  # (B, L)
+    valid_layer = jnp.ones((B, L), jnp.float32)   # all layers always covered
+    onehot = _seg_onehot(seg_of_layer, valid_layer)     # (B, L, NS)
+
+    idx_in_seg = layer_ix[None, :] - jnp.take_along_axis(
+        seg_start, seg_of_layer, axis=1)
+    nce_of_layer = jnp.take_along_axis(design.seg_nce, seg_of_layer, axis=1)
+    pipe_of_layer = jnp.take_along_axis(
+        design.seg_pipe.astype(jnp.int32), seg_of_layer, axis=1) > 0
+    slot_of_layer = idx_in_seg % jnp.maximum(nce_of_layer, 1)
+    round_of_layer = idx_in_seg // jnp.maximum(nce_of_layer, 1)
+
+    ce_base = jnp.cumsum(design.seg_nce * seg_valid, axis=-1) \
+        - design.seg_nce * seg_valid
+    ce_of_layer = jnp.take_along_axis(ce_base, seg_of_layer, axis=1) \
+        + slot_of_layer                            # (B, L) in [0, NC)
+    ce_oh = jax.nn.one_hot(ce_of_layer, NC, dtype=jnp.float32)  # (B, L, NC)
+
+    # ---- 1. PE distribution (largest remainder over per-CE MACs) --------
+    macs = jnp.asarray(t.MACS)
+    macs_ce = jnp.einsum("l,blc->bc", macs, ce_oh)       # (B, NC)
+    ce_valid = jnp.einsum("blc->bc", ce_oh) > 0
+    pes_ce = _largest_remainder(macs_ce, float(dev.pes), ce_valid)  # (B, NC)
+
+    # ---- 2. parallelism search: best <pf, ph, pw> per CE -----------------
+    # pw index per (B, NC, i, j): largest cand with pf*ph*pw <= pes
+    pf_ph = cand[:, None] * cand[None, :]                # (i, j)
+    budget = pes_ce[:, :, None, None] / pf_ph[None, None]
+    pw_idx = jnp.clip(
+        jnp.searchsorted(cand, jnp.floor(budget), side="right") - 1,
+        0, ncand - 1)                                    # (B, NC, i, j)
+    feasible = budget >= 1.0                             # pf*ph <= pes
+
+    ceil_f = jnp.asarray(t.CEIL_F)                       # (L, i)
+    ceil_oh = jnp.asarray(t.CEIL_OH)                     # (L, j)
+    ceil_ow = jnp.asarray(t.CEIL_OW)                     # (L, w)
+    ckk = jnp.asarray(t.CKK)
+
+    # cost accumulation as ONE batched GEMM: per-layer cycles for every
+    # (i, j) with the layer's own CE's pw budget, then contract over layers
+    # against the CE one-hot.  (A lax.scan formulation was 50x slower —
+    # 53 dispatches moving a (B, NC, 18, 18) carry each step.)
+    pw_sel = jnp.take_along_axis(
+        pw_idx, ce_of_layer[:, :, None, None], axis=1)   # (B, L, i, j)
+    cow_sel = ceil_ow[jnp.arange(L)[None, :, None, None], pw_sel]
+    Hmat = (ceil_f[None, :, :, None] * ckk[None, :, None, None]
+            * ceil_oh[None, :, None, :] * cow_sel)       # (B, L, i, j)
+    cost_ce = jnp.einsum("blk,blc->bck",
+                         Hmat.reshape(B, L, ncand * ncand),
+                         ce_oh).reshape(B, NC, ncand, ncand)
+    cost_ce = jnp.where(feasible, cost_ce, jnp.inf)
+    flat = cost_ce.reshape(B, NC, -1)
+    best = jnp.argmin(flat, axis=-1)                     # (B, NC)
+    bi, bj = best // ncand, best % ncand
+    pf_ce = cand[bi]                                     # (B, NC)
+    ph_ce = cand[bj]
+    pw_ce = cand[jnp.take_along_axis(
+        pw_idx.reshape(B, NC, -1), best[..., None], axis=-1)[..., 0]]
+
+    # ---- per-layer compute cycles & utilization --------------------------
+    pf_l = jnp.einsum("bc,blc->bl", pf_ce, ce_oh)        # (B, L)
+    ph_l = jnp.einsum("bc,blc->bl", ph_ce, ce_oh)
+    pw_l = jnp.einsum("bc,blc->bl", pw_ce, ce_oh)
+    F = jnp.asarray(t.F)
+    OH = jnp.asarray(t.OH)
+    OW = jnp.asarray(t.OW)
+    comp = (jnp.ceil(F[None] / pf_l) * ckk[None]
+            * jnp.ceil(OH[None] / ph_l) * jnp.ceil(OW[None] / pw_l))
+    par_total = pf_l * ph_l * pw_l
+    util = macs[None] / jnp.maximum(comp * par_total, 1.0)
+
+    # ---- 3. buffer floors / desires (Eq. 4 / 5) ---------------------------
+    W = jnp.asarray(t.W)
+    IFM = jnp.asarray(t.IFM)
+    OFM = jnp.asarray(t.OFM)
+    EXTRA = jnp.asarray(t.EXTRA)
+    BAND = jnp.asarray(t.BAND)
+    OFM_ROW = jnp.asarray(t.OFM_ROW)
+    FMS = IFM + OFM + EXTRA
+
+    wtile = jnp.minimum(pf_l, F[None]) * ckk[None] * wb  # (B, L)
+    fm_tile2 = 2.0 * OFM_ROW[None] * fm_tile_rows * wb
+
+    pipe_l = pipe_of_layer.astype(jnp.float32)
+    # pipelined: floor = sum(2*fm_tile + wtile); desire = sum(W + 2*fm_tile)
+    floor_pipe = _seg_sum((fm_tile2 + wtile) * pipe_l, onehot)
+    desire_pipe = _seg_sum((W[None] * wb + fm_tile2) * pipe_l, onehot)
+    # single: floor = max(wtile + band + ofm_row); desire = max FMS + max wtile
+    single_l = 1.0 - pipe_l
+    floor_single = _seg_max(
+        jnp.where(single_l > 0, wtile + (BAND + OFM_ROW)[None] * wb, NEG),
+        onehot)
+    max_fms = _seg_max(jnp.where(single_l > 0, FMS[None] * wb, NEG), onehot)
+    max_wtile = _seg_max(jnp.where(single_l > 0, wtile, NEG), onehot)
+    desire_single = max_fms + max_wtile
+
+    is_pipe_seg = design.seg_pipe & seg_valid
+    floors = jnp.where(is_pipe_seg, floor_pipe,
+                       jnp.where(seg_valid, jnp.maximum(floor_single, 0.0),
+                                 0.0))
+    desires = jnp.where(is_pipe_seg, desire_pipe,
+                        jnp.where(seg_valid,
+                                  jnp.maximum(desire_single, 0.0), 0.0))
+    desires = jnp.maximum(desires, floors)
+
+    budget_b = float(dev.on_chip_bytes)
+    alloc = floors
+    over = alloc.sum(-1) > budget_b
+    scale = jnp.where(over, budget_b / jnp.maximum(alloc.sum(-1), 1.0), 1.0)
+    alloc = jnp.floor(alloc * scale[:, None])
+    remaining = budget_b - alloc.sum(-1)                 # (B,)
+
+    # ---- 4. inter-segment double buffers, smallest-first ------------------
+    # boundary i lives after segment i (valid while i < n_seg - 1)
+    b_ix = jnp.arange(NS)
+    bound_valid = (b_ix[None, :] < (n_seg - 1)[:, None])
+    last_of_seg = jnp.clip(seg_end - 1, 0, L - 1)        # (B, NS)
+    bound_size = OFM[last_of_seg] * wb                   # (B, NS)
+    bound_size = jnp.where(bound_valid, bound_size, jnp.inf)
+    order = jnp.argsort(bound_size, axis=-1, stable=True)
+    sorted_sz = jnp.take_along_axis(bound_size, order, axis=-1)
+    csum = jnp.cumsum(jnp.where(jnp.isfinite(sorted_sz), 2 * sorted_sz, 0.0),
+                      axis=-1)
+    fit_sorted = (csum <= remaining[:, None]) & jnp.isfinite(sorted_sz)
+    fit = jnp.zeros_like(fit_sorted).at[
+        jnp.arange(B)[:, None], order].set(fit_sorted)
+    inter_onchip = fit & bound_valid & design.inter_pipe[:, None]
+    remaining = remaining - (2 * jnp.where(inter_onchip, OFM[last_of_seg]
+                                           * wb, 0.0)).sum(-1)
+
+    # ---- 5. grant remaining toward minimum-access desires -----------------
+    gaps = jnp.maximum(desires - alloc, 0.0)
+    gap_sum = gaps.sum(-1)
+    grant = jnp.minimum(jnp.maximum(remaining, 0.0), gap_sum)
+    alloc = alloc + jnp.where(gap_sum[:, None] > 0,
+                              jnp.floor(grant[:, None] * gaps
+                                        / jnp.maximum(gap_sum[:, None], 1.0)),
+                              0.0)
+
+    # ---- pipelined per-CE buffer split (desire share within segment) ------
+    ce_desire_l = (W[None] * wb + fm_tile2) * pipe_l     # (B, L)
+    ce_desire = jnp.einsum("bl,blc->bc", ce_desire_l, ce_oh)
+    seg_of_ce_desire = _seg_sum(ce_desire_l, onehot)     # (B, NS) == desire_pipe
+    alloc_of_layer = jnp.take_along_axis(alloc, seg_of_layer, axis=1)
+    segdes_of_layer = jnp.take_along_axis(
+        jnp.maximum(seg_of_ce_desire, 1.0), seg_of_layer, axis=1)
+    cedes_of_layer = jnp.einsum("bc,blc->bl", ce_desire, ce_oh)
+    ce_buf_of_layer = jnp.floor(
+        alloc_of_layer * cedes_of_layer / segdes_of_layer)
+
+    # weights resident (Eq. 5 regime): alloc covers the Eq. 5 requirement
+    # (mirrors builder: resident = alloc >= pipelined_min_buffer)
+    resident_seg = (alloc >= desire_pipe) & is_pipe_seg
+    resident_l = jnp.take_along_axis(
+        resident_seg.astype(jnp.int32), seg_of_layer, axis=1) > 0
+
+    # n_tiles per layer: max OH over the layers of the same (seg, round)
+    # round key: seg * 256 + round  (round < 256 given L <= 255)
+    rkey = seg_of_layer * 256 + jnp.clip(round_of_layer, 0, 255)
+    # max OH per key via segment max over sorted keys: use scatter-max
+    ntile_map = jnp.full((B, NS * 256), 0.0).at[
+        jnp.arange(B)[:, None], rkey].max(OH[None].repeat(B, 0))
+    n_tiles_l = jnp.take_along_axis(ntile_map, rkey, axis=1)
+    n_tiles_l = jnp.maximum(n_tiles_l, 1.0)
+
+    # ---- 6. off-chip accesses --------------------------------------------
+    # pipelined (Eq. 7)
+    w_bytes = W[None] * wb
+    w_acc_pipe = jnp.where(
+        resident_l, 0.0,
+        jnp.where(ce_buf_of_layer >= w_bytes, w_bytes,
+                  w_bytes * n_tiles_l))
+    mem_cyc_pipe = w_acc_pipe / bpc
+
+    # single (Eq. 6) — fully vectorized: the ifm_onchip "chain" has no true
+    # recurrence (layer l's residency verdict doesn't depend on the carry),
+    # so it's a shift-by-one within each segment, not a scan.
+    buf = alloc_of_layer                                 # (B, L)
+    wl = W[None] * wb
+    ifml = IFM[None] * wb
+    ofml = OFM[None] * wb
+    extral = EXTRA[None] * wb
+    ideal = ifml + ofml + extral + wtile <= buf          # (B, L)
+
+    ifm_tile = jnp.minimum(ifml, BAND[None] * wb)
+    ofm_on = ofml + extral + wtile + ifm_tile <= buf
+    ofm_res = jnp.where(ofm_on, ofml + extral, 0.0)
+    ofm_acc = jnp.where(ofm_on, 0.0, ofml)
+
+    # layer l leaves its OFM on-chip for l+1 iff ideal or ofm_on
+    next_on = jnp.where(ideal, True, ofm_on)             # (B, L)
+    prev_on = jnp.concatenate(
+        [jnp.zeros((B, 1), bool), next_on[:, :-1]], axis=1)
+    is_seg_start = idx_in_seg == 0
+    prev_boundary_onchip = jnp.take_along_axis(
+        inter_onchip, jnp.maximum(seg_of_layer - 1, 0), axis=1) \
+        & (seg_of_layer > 0)
+    ifm_onchip = jnp.where(is_seg_start, prev_boundary_onchip, prev_on)
+
+    fm_ideal = jnp.where(ifm_onchip, 0.0, ifml)
+    acc_prev_resident = ofm_acc + wl                     # ifm already on-chip
+    ifm_buf = jnp.maximum(buf - ofm_res - wtile, ifm_tile)
+    loads_a = jnp.where(ifm_buf < ifml,
+                        wl * jnp.ceil(ifml / jnp.maximum(ifm_buf, 1.0))
+                        + ifml,
+                        wl + ifml)
+    wacc_a = loads_a - ifml
+    w_buf = jnp.maximum(buf - ofm_res - ifm_tile, wtile)
+    loads_b = jnp.where(w_buf < wl,
+                        ifml * jnp.ceil(wl / jnp.maximum(w_buf, 1.0)) + wl,
+                        ifml + wl)
+    facc_b = loads_b - wl
+    use_a = loads_a <= loads_b
+    acc_opt = ofm_acc + jnp.where(use_a, loads_a, loads_b)
+    wacc_opt = jnp.where(use_a, wacc_a, wl)
+    facc_opt = ofm_acc + jnp.where(use_a, ifml, facc_b)
+
+    acc_single = jnp.where(ideal, wl + fm_ideal,
+                           jnp.where(ifm_onchip, acc_prev_resident, acc_opt))
+    wacc_single = jnp.where(ideal, wl,
+                            jnp.where(ifm_onchip, wl, wacc_opt))
+    facc_single = jnp.where(ideal, fm_ideal,
+                            jnp.where(ifm_onchip, ofm_acc, facc_opt))
+    mem_cyc_single = acc_single / bpc
+
+    # ---- latency / busy ---------------------------------------------------
+    lat_l_single = jnp.maximum(comp, mem_cyc_single) * single_l
+    seg_lat_single = _seg_sum(lat_l_single, onehot)      # (B, NS)
+
+    # pipelined: tile lat per layer; exact stage-sum per round via the
+    # prefix/suffix-max identity.  The within-round running maxima are
+    # *segmented* max-scans — associative, so log2(L) vector steps.
+    tile_lat = jnp.maximum(comp, mem_cyc_pipe) / n_tiles_l   # (B, L)
+
+    def seg_scan_max(vals, start_flags, reverse=False):
+        """Running max within groups delimited by start_flags (B, L)."""
+        def combine(a, b):
+            fa, va = a
+            fb, vb = b
+            return fa | fb, jnp.where(fb, vb, jnp.maximum(va, vb))
+        flags = start_flags[..., ::-1] if reverse else start_flags
+        v = vals[..., ::-1] if reverse else vals
+        # shift flags so each element STARTS its own group when flagged
+        _, out = jax.lax.associative_scan(combine, (flags, v), axis=1)
+        return out[..., ::-1] if reverse else out
+
+    is_round_start = slot_of_layer == 0
+    is_round_last = (slot_of_layer == nce_of_layer - 1) | \
+        (idx_in_seg == jnp.take_along_axis(seg_len, seg_of_layer, axis=1) - 1)
+    pmax_seq = seg_scan_max(tile_lat, is_round_start)
+    smax_seq = seg_scan_max(tile_lat, is_round_last, reverse=True)
+    pipe_f = pipe_of_layer
+    prefix_sum_all = jnp.where(pipe_f, pmax_seq, 0.0).sum(-1)
+    suffix_sum_all = jnp.where(pipe_f, smax_seq, 0.0).sum(-1)
+    gmax_l = jnp.where(pipe_f & is_round_last, pmax_seq, 0.0)
+
+    # round latency = prefix_sum(0..n-1) + suffix_sum(0..n-1) - gmax
+    #                 + (T - n) * gmax            [T = n_tiles, n = slots]
+    # prefix_sum_all already sums prefix maxes over all slots (incl. last =
+    # gmax); suffix likewise. slots per round:
+    slots_round = jnp.where(pipe_of_layer & is_round_last,
+                            slot_of_layer.astype(jnp.float32) + 1.0, 0.0)
+    T_round = jnp.where(pipe_of_layer & is_round_last, n_tiles_l, 0.0)
+    lat_pipe_total = (prefix_sum_all + suffix_sum_all
+                      + ((T_round - slots_round - 1.0) * gmax_l).sum(-1))
+    seg_lat_pipe_share = None  # folded into total below
+
+    # per-CE busy (Eq. 3 / throughput)
+    busy_l = jnp.maximum(comp, mem_cyc_pipe)             # pipelined layers
+    busy_slot = jnp.einsum("bl,blc->bc", busy_l * pipe_l, ce_oh)  # (B, NC)
+    # pipelined block busy = max over its slots; map back per segment:
+    # compute per (B, NS) = max over CEs in segment
+    seg_of_ce = jnp.sum(
+        (jnp.arange(NC)[None, :, None]
+         >= (ce_base + design.seg_nce * seg_valid)[:, None, :]),
+        axis=-1)                                         # (B, NC)
+    seg_ce_oh = jax.nn.one_hot(seg_of_ce, NS, dtype=jnp.float32)
+    busy_pipe_seg = jnp.where(
+        is_pipe_seg,
+        jnp.max(jnp.where(seg_ce_oh > 0, busy_slot[..., None], NEG), axis=1),
+        0.0)
+    busy_single_seg = jnp.where(~design.seg_pipe & seg_valid,
+                                seg_lat_single, 0.0)
+
+    # single-CE ids may serve multiple segments: busy adds per CE
+    ce_busy = busy_slot * 0.0
+    ce_first = ce_base                                   # (B, NS)
+    add_single = jnp.zeros((B, NC)).at[
+        jnp.arange(B)[:, None], ce_first].add(
+        jnp.where(~design.seg_pipe & seg_valid, busy_single_seg, 0.0))
+    add_pipe = jnp.zeros((B, NC)).at[
+        jnp.arange(B)[:, None], ce_first].add(busy_pipe_seg)
+    ce_busy = add_single + add_pipe
+
+    # ---- interfaces: mandatory IO + Eq. 9 ---------------------------------
+    access = (acc_single * single_l + w_acc_pipe * pipe_l).sum(-1)
+    w_access = (wacc_single * single_l + w_acc_pipe * pipe_l).sum(-1)
+    fm_access = (facc_single * single_l).sum(-1)
+    mandatory = (t.IFM[0] + t.OFM[-1]) * wb
+    access = access + mandatory
+    fm_access = fm_access + mandatory
+
+    bound_sz = jnp.where(bound_valid, OFM[last_of_seg] * wb, 0.0)
+    spill = bound_valid & ~inter_onchip
+    access = access + (2 * jnp.where(spill, bound_sz, 0.0)).sum(-1)
+    fm_access = fm_access + (2 * jnp.where(spill, bound_sz, 0.0)).sum(-1)
+    bps = dev.off_chip_gbps * 1e9
+    comm_cyc = ((jnp.where(spill, 2 * bound_sz, bound_sz) / bps)
+                * dev.clock_hz * bound_valid).sum(-1)
+
+    latency_cyc = seg_lat_single.sum(-1) + lat_pipe_total + comm_cyc
+    latency_s = latency_cyc / dev.clock_hz
+
+    multi = (n_seg > 1) & design.inter_pipe
+    bottleneck = jnp.where(multi, ce_busy.max(-1),
+                           jnp.where(n_seg > 1, latency_cyc,
+                                     jnp.maximum(ce_busy.max(-1), 1.0)))
+    throughput = dev.clock_hz / jnp.maximum(bottleneck, 1.0)
+
+    buffer_alloc = alloc.sum(-1) + (
+        2 * jnp.where(inter_onchip, bound_sz, 0.0)).sum(-1)
+    # Eq. 8 requirement (what the paper's buffer metric reports)
+    buffer_req = desires.sum(-1) + jnp.where(
+        design.inter_pipe, (2 * bound_sz).sum(-1), 0.0)
+
+    util_avg = (util * macs[None]).sum(-1) / macs.sum()
+
+    return {
+        "latency_s": latency_s,
+        "throughput_ips": throughput,
+        "buffer_bytes": buffer_req,
+        "buffer_alloc_bytes": buffer_alloc,
+        "access_bytes": access,
+        "weight_access_bytes": w_access,
+        "fm_access_bytes": fm_access,
+        "utilization": util_avg,
+        "n_ces": ce_valid.sum(-1),
+    }
+
+
+def evaluate_specs(specs: list[AcceleratorSpec], net: Network,
+                   dev: DeviceSpec, chunk: int = 2048) -> dict[str, np.ndarray]:
+    """Convenience wrapper: specs -> stacked metric arrays (chunked)."""
+    tables = make_tables(net)
+    outs: list[dict] = []
+    for i in range(0, len(specs), chunk):
+        batch = encode_specs(specs[i:i + chunk], len(net))
+        outs.append({k: np.asarray(v)
+                     for k, v in evaluate_batch(batch, tables, dev).items()})
+    return {k: np.concatenate([o[k] for o in outs]) for k in outs[0]}

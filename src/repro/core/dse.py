@@ -1,0 +1,162 @@
+"""Design-space exploration over multiple-CE arrangements (paper §V-E).
+
+The paper's use case 3: take the bottleneck insights from fine-grained
+evaluation, define a *custom* architecture family (a Hybrid-like pipelined
+first block followed by Segmented-like single-CE blocks), sample the space
+(~97.1e9 designs for XCp with 2–11 CEs), and evaluate 100 000 samples fast
+enough to find designs that dominate the fixed templates.
+
+``sample_custom``  — random designs from the paper's custom family;
+``sample_mixed``   — broader family: every segment independently single or
+                     pipelined (superset of all three templates);
+``pareto``         — non-dominated front over (maximize, minimize) metrics;
+``explore``        — end-to-end driver returning the evaluated sample.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .batch_eval import NS, DesignBatch, evaluate_batch, make_tables
+from .device import DeviceSpec
+from .notation import AcceleratorSpec, SegmentSpec
+from .workload import Network
+
+
+def _random_partition(rng: np.random.Generator, n_layers: int,
+                      n_parts: int) -> np.ndarray:
+    """Random contiguous partition: sorted cut points (exclusive ends)."""
+    cuts = rng.choice(np.arange(1, n_layers), size=n_parts - 1, replace=False)
+    return np.sort(np.concatenate([cuts, [n_layers]]))
+
+
+def sample_custom(rng: np.random.Generator, n_layers: int, n: int,
+                  min_ces: int = 2, max_ces: int = 11) -> DesignBatch:
+    """The paper's custom family: pipelined first block (one CE per layer),
+    then 1..k single-CE segments, coarse pipelining between segments."""
+    seg_end = np.full((n, NS), n_layers, np.int32)
+    seg_pipe = np.zeros((n, NS), bool)
+    seg_nce = np.ones((n, NS), np.int32)
+    for i in range(n):
+        total_ces = rng.integers(min_ces, max_ces + 1)
+        first = rng.integers(1, total_ces)         # CEs in the pipelined head
+        rest = total_ces - first                   # single-CE segments after
+        head_end = int(first)                      # one layer per head CE
+        tail_layers = n_layers - head_end
+        rest = max(1, min(rest, tail_layers))
+        ends = head_end + _random_partition(rng, tail_layers, rest)
+        seg_end[i, 0] = head_end
+        seg_pipe[i, 0] = first > 1
+        seg_nce[i, 0] = first
+        seg_end[i, 1:1 + rest] = ends
+        seg_end[i, 1 + rest:] = n_layers
+    import jax.numpy as jnp
+    return DesignBatch(jnp.asarray(seg_end), jnp.asarray(seg_pipe),
+                       jnp.asarray(seg_nce),
+                       jnp.ones((n,), bool))
+
+
+def sample_mixed(rng: np.random.Generator, n_layers: int, n: int,
+                 min_ces: int = 2, max_ces: int = 11,
+                 max_segments: int = 6) -> DesignBatch:
+    """Superset family: each segment independently single or pipelined."""
+    seg_end = np.full((n, NS), n_layers, np.int32)
+    seg_pipe = np.zeros((n, NS), bool)
+    seg_nce = np.ones((n, NS), np.int32)
+    inter = np.zeros((n,), bool)
+    for i in range(n):
+        total = rng.integers(min_ces, max_ces + 1)
+        n_seg = int(rng.integers(1, min(max_segments, total) + 1))
+        ends = _random_partition(rng, n_layers, n_seg)
+        # distribute CEs over segments (>=1 each)
+        alloc = np.ones(n_seg, np.int64)
+        for _ in range(total - n_seg):
+            alloc[rng.integers(0, n_seg)] += 1
+        seg_end[i, :n_seg] = ends
+        seg_nce[i, :n_seg] = alloc
+        seg_pipe[i, :n_seg] = alloc > 1
+        inter[i] = n_seg > 1 and bool(rng.integers(0, 2))
+    import jax.numpy as jnp
+    return DesignBatch(jnp.asarray(seg_end), jnp.asarray(seg_pipe),
+                       jnp.asarray(seg_nce), jnp.asarray(inter))
+
+
+def decode_design(batch: DesignBatch, i: int, n_layers: int) -> AcceleratorSpec:
+    """Row i of a DesignBatch -> AcceleratorSpec (for the scalar evaluator
+    or for pretty-printing in the paper's notation)."""
+    seg_end = np.asarray(batch.seg_end[i])
+    seg_pipe = np.asarray(batch.seg_pipe[i])
+    seg_nce = np.asarray(batch.seg_nce[i])
+    segs, lo, ce = [], 0, 0
+    for s in range(NS):
+        hi = int(seg_end[s])
+        if hi <= lo:
+            continue
+        n = int(seg_nce[s]) if seg_pipe[s] else 1
+        segs.append(SegmentSpec(lo, hi - 1, ce, ce + n - 1))
+        ce += n
+        lo = hi
+        if hi >= n_layers:
+            break
+    return AcceleratorSpec(name=f"custom[{i}]", segments=tuple(segs),
+                           inter_segment_pipelining=bool(batch.inter_pipe[i]))
+
+
+def pareto(points: np.ndarray) -> np.ndarray:
+    """Indices of the non-dominated front.  ``points`` (N, M): every metric
+    oriented so LOWER is better."""
+    n = points.shape[0]
+    order = np.lexsort(points.T[::-1])
+    keep = []
+    best = np.full(points.shape[1], np.inf)
+    for i in order:
+        if np.any(points[i] < best - 1e-12) or not keep:
+            if not any(np.all(points[j] <= points[i]) and
+                       np.any(points[j] < points[i]) for j in keep):
+                keep.append(i)
+                best = np.minimum(best, points[i])
+    return np.asarray(sorted(keep))
+
+
+@dataclass
+class DSEResult:
+    batch: DesignBatch
+    metrics: dict[str, np.ndarray]
+    seconds: float
+    per_design_us: float
+
+
+def explore(net: Network, dev: DeviceSpec, n: int = 100_000, *,
+            family: str = "custom", seed: int = 0,
+            chunk: int = 4096) -> DSEResult:
+    """Sample + evaluate ``n`` designs; returns metrics for the whole sample."""
+    import time
+
+    import jax
+
+    rng = np.random.default_rng(seed)
+    sampler = sample_custom if family == "custom" else sample_mixed
+    tables = make_tables(net)
+    outs: list[dict] = []
+    batches: list[DesignBatch] = []
+    t0 = time.time()
+    done = 0
+    while done < n:
+        b = min(chunk, n - done)
+        batch = sampler(rng, len(net), b)
+        out = evaluate_batch(batch, tables, dev)
+        jax.block_until_ready(out["latency_s"])
+        outs.append({k: np.asarray(v) for k, v in out.items()})
+        batches.append(batch)
+        done += b
+    dt = time.time() - t0
+    import jax.numpy as jnp
+    merged = DesignBatch(
+        jnp.concatenate([b.seg_end for b in batches]),
+        jnp.concatenate([b.seg_pipe for b in batches]),
+        jnp.concatenate([b.seg_nce for b in batches]),
+        jnp.concatenate([b.inter_pipe for b in batches]))
+    metrics = {k: np.concatenate([o[k] for o in outs]) for k in outs[0]}
+    return DSEResult(batch=merged, metrics=metrics, seconds=dt,
+                     per_design_us=dt / n * 1e6)

@@ -1,0 +1,40 @@
+"""Scalar MCCM facade: notation/spec + CNN + board -> Metrics.
+
+This is the exact (reference) evaluation path; ``batch_eval`` mirrors it in
+vectorised JAX for design-space exploration.
+"""
+from __future__ import annotations
+
+from .accelerator import ConcreteAccelerator, Metrics, evaluate
+from .builder import BuilderOptions, build
+from .device import DeviceSpec
+from .notation import AcceleratorSpec, parse
+from .workload import Network
+
+
+def evaluate_design(
+    design: str | AcceleratorSpec,
+    net: Network,
+    dev: DeviceSpec,
+    opts: BuilderOptions | None = None,
+    inter_segment_pipelining: bool = True,
+) -> Metrics:
+    if isinstance(design, str):
+        spec = parse(design, len(net), inter_segment_pipelining=inter_segment_pipelining)
+    else:
+        spec = design
+    acc = build(spec, net, dev, opts)
+    return evaluate(acc)
+
+
+def build_design(
+    design: str | AcceleratorSpec,
+    net: Network,
+    dev: DeviceSpec,
+    opts: BuilderOptions | None = None,
+) -> ConcreteAccelerator:
+    if isinstance(design, str):
+        spec = parse(design, len(net))
+    else:
+        spec = design
+    return build(spec, net, dev, opts)

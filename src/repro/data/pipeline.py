@@ -1,0 +1,115 @@
+"""Synthetic sharded token pipeline with host-side prefetch.
+
+Stands in for a production data loader: deterministic per-step synthetic
+batches (seeded, reproducible across restarts — the checkpoint stores the
+step, and the pipeline regenerates the exact stream from it), placed onto
+the mesh with the plan's batch sharding, with a background prefetch queue so
+host data generation overlaps device compute.
+
+The token stream is a mixture of Zipf-distributed ids with a repeating
+n-gram structure, so the loss actually *decreases* during the example runs
+(pure-uniform tokens would pin the loss at ln(V))."""
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass
+from typing import Any, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig, ShapeSpec
+
+
+@dataclass
+class DataSpec:
+    batch: int
+    seq_len: int
+    vocab_size: int
+    seed: int = 0
+
+
+def _zipf_tokens(rng: np.random.Generator, shape, vocab: int) -> np.ndarray:
+    """Zipf-ish token ids with local n-gram repetition (learnable)."""
+    ranks = rng.zipf(1.3, size=shape).astype(np.int64)
+    toks = (ranks - 1) % vocab
+    # inject repeated bigrams: token[t] == token[t-2] with prob ~ 0.3
+    rep = rng.random(shape) < 0.3
+    toks[..., 2:] = np.where(rep[..., 2:], toks[..., :-2], toks[..., 2:])
+    return toks.astype(np.int32)
+
+
+def synth_batch(cfg: ModelConfig, shape: ShapeSpec, step: int, *,
+                seed: int = 0, batch_override: int | None = None) -> dict:
+    """One deterministic synthetic batch for (cfg, shape, step)."""
+    rng = np.random.default_rng(np.random.SeedSequence([seed, step]))
+    B = batch_override or shape.global_batch
+    S = shape.seq_len
+    if cfg.family == "encdec":
+        S_dec = max(S // cfg.dec_ratio, 8)
+        toks = _zipf_tokens(rng, (B, S_dec + 1), cfg.vocab_size)
+        return {
+            "frames": rng.standard_normal((B, S, cfg.frontend_dim),
+                                          dtype=np.float32).astype(np.float16),
+            "tokens": toks[:, :-1],
+            "labels": toks[:, 1:],
+        }
+    if cfg.family == "vlm":
+        S_text = max(S - cfg.n_patches, 8)
+        toks = _zipf_tokens(rng, (B, S_text + 1), cfg.vocab_size)
+        return {
+            "patches": rng.standard_normal((B, cfg.n_patches, cfg.frontend_dim),
+                                           dtype=np.float32).astype(np.float16),
+            "tokens": toks[:, :-1],
+            "labels": toks[:, 1:],
+        }
+    toks = _zipf_tokens(rng, (B, S + 1), cfg.vocab_size)
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+class Pipeline:
+    """Background-prefetching iterator of device-placed batches."""
+
+    def __init__(self, cfg: ModelConfig, shape: ShapeSpec, *,
+                 shardings: Any | None = None, seed: int = 0,
+                 start_step: int = 0, prefetch: int = 2,
+                 batch_override: int | None = None):
+        self.cfg, self.shape = cfg, shape
+        self.shardings = shardings
+        self.seed = seed
+        self.batch_override = batch_override
+        self._q: queue.Queue = queue.Queue(maxsize=prefetch)
+        self._step = start_step
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._producer, daemon=True)
+        self._thread.start()
+
+    def _producer(self):
+        step = self._step
+        while not self._stop.is_set():
+            host = synth_batch(self.cfg, self.shape, step, seed=self.seed,
+                               batch_override=self.batch_override)
+            self._q.put((step, host))
+            step += 1
+
+    def __iter__(self) -> Iterator[tuple[int, dict]]:
+        return self
+
+    def __next__(self) -> tuple[int, dict]:
+        step, host = self._q.get()
+        if self.shardings is not None:
+            dev = jax.tree.map(
+                lambda a, s: jax.device_put(a, s), host, self.shardings)
+        else:
+            dev = jax.tree.map(jnp.asarray, host)
+        return step, dev
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass

@@ -1,0 +1,29 @@
+"""jit'd wrapper + the Eq. 1 cycle predictor the kernel's grid realizes."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import conv_ce_call
+
+
+@partial(jax.jit, static_argnames=("stride", "par_f", "par_oh", "par_ow",
+                                   "interpret"))
+def conv_ce(x, w, *, stride: int = 1, par_f: int = 8, par_oh: int = 4,
+            par_ow: int = 4, interpret: bool = True):
+    return conv_ce_call(x, w, stride=stride, par_f=par_f, par_oh=par_oh,
+                        par_ow=par_ow, interpret=interpret)
+
+
+def predicted_cycles(F: int, C: int, KH: int, KW: int, OH: int, OW: int,
+                     par_f: int, par_oh: int, par_ow: int) -> int:
+    """Eq. 1: prod_d ceil(|d|/Par(d)) — with C, KH, KW unparallelized this
+    is the kernel's grid size × its inner-loop trip count."""
+    grid = (-(-F // par_f)) * (-(-OH // par_oh)) * (-(-OW // par_ow))
+    return grid * C * KH * KW
+
+
+def grid_size(F: int, OH: int, OW: int, par_f: int, par_oh: int,
+              par_ow: int) -> int:
+    return (-(-F // par_f)) * (-(-OH // par_oh)) * (-(-OW // par_ow))

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the conv_ce kernel (valid-padding direct conv)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def conv_ref(x, w, stride: int = 1):
+    """x: (C, H, W); w: (F, C, KH, KW) -> (F, OH, OW), valid padding."""
+    out = jax.lax.conv_general_dilated(
+        x[None].astype(jnp.float32), w.astype(jnp.float32),
+        window_strides=(stride, stride), padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    return out[0].astype(x.dtype)

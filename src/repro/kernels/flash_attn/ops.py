@@ -1,0 +1,33 @@
+"""jit'd public wrapper: (B, S, H, D) GQA layout -> flash kernel layout."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_fwd
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "q_blk", "kv_blk",
+                                   "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: int | None = None, q_blk: int = 256,
+                    kv_blk: int = 256, interpret: bool = True):
+    """q: (B, Sq, H, D); k/v: (B, Sk, Hkv, D) — GQA heads broadcast.
+
+    Returns (B, Sq, H, D).  ``interpret=True`` runs the kernel body in
+    Python on CPU (this container); on TPU pass interpret=False.
+    """
+    B, Sq, H, D = q.shape
+    Hkv = k.shape[2]
+    rep = H // Hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qt = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
+    kt = k.transpose(0, 2, 1, 3).reshape(B * H, -1, D)
+    vt = v.transpose(0, 2, 1, 3).reshape(B * H, -1, D)
+    out = flash_fwd(qt, kt, vt, causal=causal, window=window,
+                    q_blk=q_blk, kv_blk=kv_blk, interpret=interpret)
+    return out.reshape(B, H, Sq, D).transpose(0, 2, 1, 3)

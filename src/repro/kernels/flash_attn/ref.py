@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  window: int | None = None,
+                  scale: float | None = None):
+    """Materialised-scores attention.  q: (B, H, Sq, D); k/v: (B, H, Sk, D).
+
+    fp32 softmax; masked rows return zeros (matching the kernel)."""
+    B, H, Sq, D = q.shape
+    Sk = k.shape[2]
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    m = s.max(-1, keepdims=True)
+    m = jnp.where(jnp.isneginf(m), 0.0, m)
+    p = jnp.exp(s - m)
+    p = jnp.where(mask[None, None], p, 0.0)
+    l = p.sum(-1, keepdims=True)
+    l = jnp.where(l == 0.0, 1.0, l)
+    out = jnp.einsum("bhqk,bhkd->bhqd", (p / l).astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)

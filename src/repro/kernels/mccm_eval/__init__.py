@@ -1,0 +1,1 @@
+from .ops import mccm_latency  # noqa: F401

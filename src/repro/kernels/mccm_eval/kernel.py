@@ -1,0 +1,59 @@
+"""MCCM Eq. 1 latency sweep as a Pallas TPU kernel.
+
+The DSE hot loop: for a tile of designs, compute per-layer ceil-div cycle
+counts and reduce to per-design totals.  Grid: (ceil(B / design_blk),);
+each instance holds a (design_blk, L, 3) parallelism tile + the shared
+(L, 4) layer-dim table in VMEM and writes (design_blk,) totals.
+
+design_blk × L × 3 × 4 B must fit VMEM: with L ≤ 256 and design_blk = 512,
+the tile is ~1.5 MiB — far under the ~128 MiB v5e VMEM, leaving room for
+the multi-buffer pipeline Mosaic builds across grid steps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mccm_kernel(dims_ref, par_ref, tot_ref, cyc_ref):
+    dims = dims_ref[...]                        # (L, 4)
+    par = par_ref[...]                          # (design_blk, L, 3)
+    F, CKK = dims[:, 0], dims[:, 1]
+    OH, OW = dims[:, 2], dims[:, 3]
+    cyc = (jnp.ceil(F[None] / par[..., 0]) * CKK[None]
+           * jnp.ceil(OH[None] / par[..., 1])
+           * jnp.ceil(OW[None] / par[..., 2]))  # (design_blk, L)
+    cyc_ref[...] = cyc
+    tot_ref[...] = cyc.sum(-1)
+
+
+def mccm_latency_call(dims, par, *, design_blk: int = 512,
+                      interpret: bool = True):
+    """dims: (L, 4) f32; par: (B, L, 3) f32 -> ((B,) totals, (B, L) cycles)."""
+    B, L, _ = par.shape
+    nb = -(-B // design_blk)
+    pad = nb * design_blk - B
+    if pad:
+        par = jnp.pad(par, ((0, pad), (0, 0), (0, 0)),
+                      constant_values=1.0)
+    tot, cyc = pl.pallas_call(
+        _mccm_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((L, 4), lambda i: (0, 0)),
+            pl.BlockSpec((design_blk, L, 3), lambda i: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((design_blk,), lambda i: (i,)),
+            pl.BlockSpec((design_blk, L), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb * design_blk,), jnp.float32),
+            jax.ShapeDtypeStruct((nb * design_blk, L), jnp.float32),
+        ],
+        interpret=interpret,
+    )(dims, par)
+    return tot[:B], cyc[:B]

@@ -1,0 +1,18 @@
+"""jit'd wrapper for the MCCM latency kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import mccm_latency_call
+
+
+@partial(jax.jit, static_argnames=("design_blk", "interpret"))
+def mccm_latency(dims, par, *, design_blk: int = 512,
+                 interpret: bool = True):
+    """dims (L, 4) f32 [F, C*KH*KW, OH, OW]; par (B, L, 3) f32 ⟨pf, ph, pw⟩.
+
+    Returns ((B,) total Eq. 1 cycles, (B, L) per-layer cycles)."""
+    return mccm_latency_call(dims, par, design_blk=design_blk,
+                             interpret=interpret)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the MCCM latency kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mccm_latency_ref(dims, par):
+    """Eq. 1 over a design batch.
+
+    dims: (L, 4) f32 — per-layer (F, CKK, OH, OW);
+    par : (B, L, 3) f32 — per-design per-layer ⟨pf, ph, pw⟩ (already
+          gathered from the layer's CE).
+    Returns (B,) total cycles and (B, L) per-layer cycles.
+    """
+    F, CKK, OH, OW = dims[:, 0], dims[:, 1], dims[:, 2], dims[:, 3]
+    cyc = (jnp.ceil(F[None] / par[..., 0]) * CKK[None]
+           * jnp.ceil(OH[None] / par[..., 1])
+           * jnp.ceil(OW[None] / par[..., 2]))
+    return cyc.sum(-1), cyc

@@ -1,0 +1,181 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove every (arch × shape × mesh) cell lowers,
+compiles, and fits — without real hardware.
+
+The two lines above MUST precede any jax import (jax locks the device count
+on first init); do not move them.  Each cell:
+
+    with mesh:
+        lowered  = jax.jit(step, in_shardings=…, out_shardings=…) \
+                      .lower(**input_specs(arch))
+        compiled = lowered.compile()
+        memory_analysis(), cost_analysis(), HLO collective census
+
+Results are appended to a JSON artifact (``artifacts/dryrun/<cell>.json``)
+that ``benchmarks/roofline_report.py`` and EXPERIMENTS.md read.  Already-
+present cells are skipped, so the sweep is resumable.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun                 # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b \
+        --shape train_4k --mesh single,multi
+    PYTHONPATH=src python -m repro.launch.dryrun --list
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from ..configs import ARCH_NAMES, SHAPES, cells, get_config
+from ..tpu.hlo_stats import collective_stats
+from ..tpu.hlo_walk import walk as hlo_walk
+from .mesh import make_production_mesh
+from .steps import build_step
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "artifacts", "dryrun")
+
+MESHES = ("single", "multi")
+
+
+def cell_id(arch: str, shape: str, mesh: str) -> str:
+    return f"{arch}__{shape}__{mesh}"
+
+
+def _artifact_path(cid: str, out_dir: str) -> str:
+    return os.path.join(out_dir, cid + ".json")
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str,
+             out_dir: str = ART_DIR, plan=None, tag: str | None = None,
+             force: bool = False) -> dict:
+    """Lower + compile one cell; return (and persist) its analysis record."""
+    os.makedirs(out_dir, exist_ok=True)
+    cid = cell_id(arch, shape_name, mesh_name) + (f"__{tag}" if tag else "")
+    path = _artifact_path(cid, out_dir)
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    rec: dict = {
+        "cell": cid, "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "mesh_shape": dict(mesh.shape), "kind": shape.kind,
+        "plan": None, "ok": False,
+    }
+    t0 = time.time()
+    try:
+        with mesh:
+            built = build_step(cfg, shape, mesh, plan)
+            rec["plan"] = {
+                k: v for k, v in vars(built.plan).items()
+                if isinstance(v, (str, int, float, bool, tuple, type(None)))
+            }
+            lowered = built.lower()
+            t_lower = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time()
+
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+            coll = collective_stats(hlo)
+            walked = hlo_walk(hlo)  # trip-count-multiplied per-device costs
+
+            rec.update(
+                ok=True,
+                lower_s=round(t_lower - t0, 2),
+                compile_s=round(t_compile - t_lower, 2),
+                memory=_mem_dict(mem),
+                cost={k: float(v) for k, v in cost.items()
+                      if isinstance(v, (int, float)) and
+                      not k.startswith(("utilization", "bytes accessed"))},
+                collectives=coll.as_dict(),
+                walk=walked.as_dict(),
+                hlo_bytes=len(hlo),
+            )
+    except Exception as e:  # noqa: BLE001 — recorded, sweep continues
+        rec.update(ok=False, error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+    rec["total_s"] = round(time.time() - t0, 2)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def _mem_dict(mem) -> dict:
+    if mem is None:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes", "host_argument_size_in_bytes",
+              "host_output_size_in_bytes", "host_temp_size_in_bytes",
+              "peak_memory_in_bytes", "serialized_size_in_bytes"):
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None,
+                    help="comma-separated arch ids (default: all)")
+    ap.add_argument("--shape", default=None,
+                    help="comma-separated shape names (default: all)")
+    ap.add_argument("--mesh", default="single,multi")
+    ap.add_argument("--out", default=ART_DIR)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--list", action="store_true",
+                    help="list the assigned cells and exit")
+    args = ap.parse_args(argv)
+
+    assigned = cells(include_skipped=True)
+    if args.list:
+        for arch, shape, skip in assigned:
+            print(f"{arch:24s} {shape:12s} {'SKIP' if skip else ''}")
+        return 0
+
+    archs = args.arch.split(",") if args.arch else list(ARCH_NAMES)
+    shapes = args.shape.split(",") if args.shape else list(SHAPES)
+    meshes = args.mesh.split(",")
+
+    n_dev = len(jax.devices())
+    assert n_dev == 512, f"dry-run needs 512 placeholder devices, got {n_dev}"
+
+    want_skip = {(a, s): sk for a, s, sk in assigned}
+    failed = 0
+    for arch in archs:
+        for shape in shapes:
+            skip = want_skip.get((arch, shape))
+            if skip is None:
+                continue
+            if skip:
+                print(f"[skip] {arch} × {shape} — sub-quadratic only "
+                      "(DESIGN.md §Arch-applicability)")
+                continue
+            for mesh in meshes:
+                rec = run_cell(arch, shape, mesh, args.out, force=args.force)
+                status = "ok" if rec["ok"] else "FAIL"
+                peak = rec.get("memory", {}).get("peak_memory_in_bytes", 0)
+                extra = (f"peak={peak/2**30:.2f}GiB "
+                         f"wire={rec.get('collectives', {}).get('total_wire', 0)/2**30:.2f}GiB"
+                         if rec["ok"] else rec.get("error", ""))
+                print(f"[{status}] {rec['cell']}  "
+                      f"(lower {rec.get('lower_s', '-')}s, "
+                      f"compile {rec.get('compile_s', '-')}s)  {extra}",
+                      flush=True)
+                failed += 0 if rec["ok"] else 1
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+Functions, not module-level constants, so importing this module never
+touches jax device state.  The dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any jax
+import (see dryrun.py); smoke tests and benches see the real single device.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def _mesh(shape, axes):
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 chips per pod (TPU v5e-256); 2 pods when multi_pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mesh(shape, axes)
+
+
+def make_mesh_spec(data: int, model: int, pod: int = 1):
+    """Arbitrary mesh for DSE / hillclimbing (device count permitting)."""
+    if pod > 1:
+        return _mesh((pod, data, model), ("pod", "data", "model"))
+    return _mesh((data, model), ("data", "model"))
+
+
+def make_host_mesh():
+    """Whatever the current host offers (tests: 1 CPU device)."""
+    n = len(jax.devices())
+    return _mesh((n, 1), ("data", "model"))

@@ -1,0 +1,306 @@
+"""Parallelism plans: how an architecture is laid out on a mesh.
+
+A :class:`ParallelPlan` is the TPU analogue of the paper's *CE arrangement*:
+it decides which mesh axes carry data/tensor/expert parallelism, whether
+parameters are FSDP-sharded, the remat policy, and the MoE dispatch
+strategy.  ``repro.tpu.cost_model`` evaluates plans analytically (the MCCM
+adaptation); this module materialises one into concrete
+``jax.sharding.NamedSharding`` pytrees for pjit.
+
+Sharding rules are *suffix-matched* on parameter paths, with leading ``None``
+padding for scan-stacked leading axes — one table covers every family.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeSpec
+from ..models.runtime import Runtime
+
+Pytree = Any
+
+
+@dataclass(frozen=True)
+class ParallelPlan:
+    name: str = "default"
+    dp_axes: tuple[str, ...] = ("data",)     # batch axes
+    tp_axis: str | None = "model"            # tensor parallelism
+    fsdp_axes: tuple[str, ...] = ()          # ZeRO-3 param sharding axes
+    ep_axis: str | None = None               # expert parallelism (MoE)
+    moe_impl: str = "local"                  # local | ep | ep_a2a
+    seq_shard_cache: bool = False            # shard KV cache on sequence
+    remat: bool = True
+    remat_group: int = 1                     # layers per remat block
+    act_shard: str = "none"                  # none | seq (Megatron-SP style)
+    loss_chunk: int = 512
+    attn_mode: str = "auto"
+    accum: int = 1                           # gradient-accumulation steps
+    # optimizer memory policy (per-plan: the 1T cell needs factored+bf16)
+    opt_state_dtype: str = "float32"
+    opt_factored: bool = False
+    opt_momentum: bool = True
+
+    def runtime(self, mesh) -> Runtime:
+        return Runtime(
+            mesh=mesh,
+            dp_axes=tuple(a for a in self.dp_axes if a in mesh.shape),
+            tp_axis=self.tp_axis,
+            ep_axis=self.ep_axis or self.tp_axis,
+            moe_impl=self.moe_impl,
+            attn_mode=self.attn_mode,
+            remat=self.remat,
+            remat_group=self.remat_group,
+            act_shard=self.act_shard,
+            loss_chunk=self.loss_chunk,
+        )
+
+
+def default_plan(cfg: ModelConfig, shape: ShapeSpec, mesh) -> ParallelPlan:
+    """Baseline plan per (arch x shape x mesh) — the paper-faithful starting
+    point that §Perf hillclimbs from.
+
+    Train defaults are ZeRO-3 everywhere (params+opt sharded over dp): the
+    dominant HBM term at 4k×256 is optimizer state, and replicating it fits
+    almost no cell.  Deep/wide nets additionally get sequence-sharded
+    activations (act_shard='seq') and grouped remat so the saved residuals
+    term stays sub-GiB/chip (derivation in EXPERIMENTS.md §Dry-run)."""
+    axes = list(mesh.shape.keys())
+    dp = tuple(a for a in ("pod", "data") if a in axes)
+    tp = "model" if "model" in axes else None
+    kw: dict = dict(
+        name=f"{cfg.name}:{shape.name}:baseline",
+        dp_axes=dp, tp_axis=tp,
+    )
+    if cfg.n_experts:
+        # a2a dispatch: tokens stay S-sharded over the EP axis, so the
+        # (tokens·k, d) dispatch/combine buffers shrink by the EP width —
+        # the psum variant ("ep") replicates tokens over EP and is kept as
+        # the ablation baseline (EXPERIMENTS.md §Perf).
+        kw.update(ep_axis=tp, moe_impl="ep_a2a")
+    if shape.kind == "train":
+        kw.update(fsdp_axes=dp)                       # ZeRO-3 default
+        if tp and cfg.d_model * shape.tokens * 2 > 64e9:
+            kw.update(act_shard="seq")                # big residual stream
+        if cfg.n_layers >= 32:
+            kw.update(remat_group=4)                  # deep stacks
+    else:
+        kw.update(remat=False, loss_chunk=0)
+        big = cfg.param_count() * 2 > 8e9             # >8 GB of bf16 params
+        if big:
+            kw.update(fsdp_axes=dp)                   # weights won't replicate
+    if cfg.name == "kimi-k2-1t-a32b":
+        # 1T params: factored second moment, bf16 state, no momentum buffer —
+        # params+grads alone are 4.2 TB of the 4.4 TB single-pod HBM.
+        # remat_group stays 1: grouped remat keeps g layers of *gathered
+        # expert weights* live in the group backward, which dwarfs the
+        # residual saving for MoE (measured 48→118 GiB temp, §Dry-run).
+        kw.update(opt_factored=True, opt_state_dtype="bfloat16",
+                  opt_momentum=False, fsdp_axes=dp)
+        if shape.kind == "train":
+            kw.update(act_shard="seq", remat_group=1)
+    if shape.name == "long_500k":
+        kw.update(dp_axes=(), seq_shard_cache=True)
+    return ParallelPlan(**kw)
+
+
+# --------------------------------------------------------------------------
+# parameter sharding rules (suffix-matched)
+# --------------------------------------------------------------------------
+# symbols: "tp" -> plan.tp_axis, "fsdp" -> plan.fsdp_axes, "ep" -> plan.ep_axis
+_RULES: tuple[tuple[str, tuple], ...] = (
+    ("embed/table", ("tp", "fsdp")),
+    ("embed/pos", (None, None)),
+    ("head/w", ("fsdp", "tp")),
+    ("attn/wq", ("fsdp", "tp")),
+    ("attn/wk", ("fsdp", "tp")),
+    ("attn/wv", ("fsdp", "tp")),
+    ("attn/wo", ("tp", "fsdp")),
+    ("attn/bq", ("tp",)),
+    ("attn/bk", ("tp",)),
+    ("attn/bv", ("tp",)),
+    ("moe/router", (None, None)),
+    ("moe/wg", ("ep", "fsdp", None)),
+    ("moe/wu", ("ep", "fsdp", None)),
+    ("moe/wd", ("ep", "fsdp", None)),
+    ("shared/wg", ("fsdp", "tp")),      # moe shared expert / zamba shared mlp
+    ("shared/wu", ("fsdp", "tp")),
+    ("shared/wd", ("tp", "fsdp")),
+    ("mlp/wg", ("fsdp", "tp")),
+    ("mlp/wu", ("fsdp", "tp")),
+    ("mlp/wd", ("tp", "fsdp")),
+    ("mlp/bu", ("tp",)),
+    ("mlp/bd", (None,)),
+    ("mixer/in_proj", ("fsdp", "tp")),
+    ("mixer/conv_w", (None, "tp")),
+    ("mixer/conv_b", ("tp",)),
+    ("mixer/A_log", (None,)),
+    ("mixer/dt_bias", (None,)),
+    ("mixer/D", (None,)),
+    ("mixer/out_proj", ("tp", "fsdp")),
+    ("projector/w", (None, "fsdp")),
+    ("projector/b", (None,)),
+    ("adapter/w", (None, "fsdp")),
+    ("enc_pos", (None, None)),
+)
+
+
+def _resolve(sym, plan: ParallelPlan):
+    if sym is None:
+        return None
+    if sym == "tp":
+        return plan.tp_axis
+    if sym == "ep":
+        return plan.ep_axis or plan.tp_axis
+    if sym == "fsdp":
+        return plan.fsdp_axes if plan.fsdp_axes else None
+    raise KeyError(sym)
+
+
+def _path_key(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(getattr(p, "idx", p)))
+    return "/".join(parts)
+
+
+def spec_for(path_key: str, ndim: int, plan: ParallelPlan) -> P:
+    for suffix, symbols in _RULES:
+        if path_key.endswith(suffix):
+            resolved = tuple(_resolve(s, plan) for s in symbols)
+            pad = ndim - len(resolved)
+            if pad < 0:   # leaf has fewer dims than rule (shouldn't happen)
+                resolved = resolved[-ndim:] if ndim else ()
+                pad = 0
+            return P(*(((None,) * pad) + resolved))
+    return P(*((None,) * ndim))
+
+
+def param_pspecs(params_tree: Pytree, plan: ParallelPlan) -> Pytree:
+    """PartitionSpec pytree matching ``params_tree`` (arrays or SDS)."""
+    def one(path, leaf):
+        return spec_for(_path_key(path), len(leaf.shape), plan)
+    return jax.tree_util.tree_map_with_path(one, params_tree)
+
+
+def opt_pspecs(opt_tree: Pytree, param_specs: Pytree, plan: ParallelPlan) -> Pytree:
+    """Optimizer-state specs: moments inherit the param spec; factored
+    row/col factors drop the corresponding trailing dim."""
+    def one(path, leaf):
+        key = _path_key(path)
+        if key == "count":
+            return P()
+        # strip the trailing /m /v /v_row /v_col and the leading mu/
+        parts = key.split("/")
+        tail = parts[-1]
+        pkey = "/".join(parts[1:-1])
+        # factored leaves drop exactly one param dim (v_row: last, v_col:
+        # second-to-last), so the param spec has leaf.ndim + 1 entries
+        pad = 1 if tail in ("v_row", "v_col") else 0
+        base = tuple(spec_for(pkey, len(leaf.shape) + pad, plan))
+        if tail == "v_row":
+            return P(*base[:-1])
+        if tail == "v_col":
+            return P(*(base[:-2] + base[-1:]))
+        return P(*base)
+    return jax.tree_util.tree_map_with_path(one, opt_tree)
+
+
+def batch_pspecs(batch_tree: Pytree, plan: ParallelPlan) -> Pytree:
+    dp = plan.dp_axes
+
+    def one(leaf):
+        if not dp:
+            return P(*((None,) * len(leaf.shape)))
+        return P(*((dp,) + (None,) * (len(leaf.shape) - 1)))
+    return jax.tree.map(one, batch_tree)
+
+
+def cache_pspecs(cache_tree: Pytree, plan: ParallelPlan, cfg: ModelConfig,
+                 mesh=None) -> Pytree:
+    """KV/SSM cache sharding: batch over dp, kv-heads over tp (falling back
+    to head_dim when n_kv_heads doesn't divide the tp width — GQA caches
+    with 8 kv-heads on a 16-wide model axis); sequence over data when the
+    plan says so (long-context, batch=1 cells)."""
+    dp, tp = plan.dp_axes, plan.tp_axis
+    tp_size = mesh.shape[tp] if (mesh is not None and tp) else 1
+
+    def heads_divide(n: int) -> bool:
+        return tp is not None and n and n % max(tp_size, 1) == 0
+
+    def one(path, leaf):
+        key = _path_key(path)
+        nd = len(leaf.shape)
+        if key == "len":
+            return P()
+        if key == "enc_out":                      # (B, S_enc, D)
+            seq = ("data",) if plan.seq_shard_cache else None
+            return P(dp or None, seq, None)
+        if key in ("k", "v", "shared_k", "shared_v"):
+            # (L, B, S, Hkv, hd) or (G, B, S, Hkv, hd)
+            seq = ("data",) if plan.seq_shard_cache else None
+            if heads_divide(cfg.n_kv_heads):
+                return P(None, dp or None, seq, tp, None)
+            # kv heads don't divide tp: shard the SEQUENCE — the decode
+            # softmax then pays tiny stat all-reduces instead of the
+            # full-cache f32 gathers a head_dim sharding caused (§Perf D)
+            if seq is None:
+                return P(None, dp or None, tp, None, None)
+            if heads_divide(cfg.head_dim):
+                return P(None, dp or None, seq, None, tp)
+            return P(None, dp or None, seq, None, None)
+        if key.endswith("conv"):                  # (L.., B, K-1, C)
+            pad = nd - 3
+            conv_dim = leaf.shape[-1]
+            ctp = tp if heads_divide(conv_dim) else None
+            return P(*((None,) * pad), dp or None, None, ctp)
+        if key.endswith("ssm"):                   # (L.., B, H, P, N)
+            pad = nd - 4
+            htp = tp if heads_divide(cfg.n_ssm_heads) else None
+            return P(*((None,) * pad), dp or None, htp, None, None)
+        return P(*((None,) * nd))
+    return jax.tree_util.tree_map_with_path(one, cache_tree)
+
+
+def sanitize_pspecs(spec_tree: Pytree, sds_tree: Pytree, mesh) -> Pytree:
+    """Drop sharding on any dim the mesh axes don't divide evenly.
+
+    jit ``in_shardings`` require exact divisibility; rather than hand-tuning
+    every rule per architecture, non-dividing axes degrade to replication
+    (correct, occasionally sub-optimal — the cost model sees the real spec).
+    """
+    def axis_size(a) -> int:
+        if a is None:
+            return 1
+        if isinstance(a, (tuple, list)):
+            n = 1
+            for x in a:
+                n *= mesh.shape[x]
+            return n
+        return mesh.shape[a]
+
+    def one(spec, sds):
+        nd = len(sds.shape)
+        dims = (tuple(spec) + (None,) * nd)[:nd]
+        fixed = tuple(
+            d if sds.shape[i] % axis_size(d) == 0 else None
+            for i, d in enumerate(dims))
+        return P(*fixed)
+
+    return jax.tree.map(one, spec_tree, sds_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def to_shardings(spec_tree: Pytree, mesh) -> Pytree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,153 @@
+"""Step builders: (arch × shape × mesh × plan) -> lowered-ready jitted fns.
+
+One place that knows how to assemble a *distributed* train / prefill /
+decode step: model api + optimizer + in/out shardings.  Used by
+
+* ``launch/dryrun.py`` — ``.lower(**ShapeDtypeStructs).compile()`` proof;
+* ``launch/train.py`` / ``launch/serve.py`` — the real drivers;
+* ``benchmarks/`` and the §Perf hillclimb harness.
+
+Shape convention (assignment brief): ``decode_*`` / ``long_*`` cells lower
+``serve_step`` — one new token against a KV cache of ``seq_len`` — not
+``train_step``; ``prefill_*`` cells lower the prompt pass.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeSpec
+from ..models import registry as model_registry
+from ..models.runtime import Runtime
+from ..train.optimizer import AdamW, make_optimizer
+from ..train.train_step import TrainState, make_train_step
+from . import plans as PL
+
+Pytree = Any
+
+
+@dataclass
+class BuiltStep:
+    """A jitted step plus everything needed to lower or run it."""
+
+    kind: str                  # train | prefill | decode
+    fn: Callable               # jitted
+    arg_specs: tuple           # ShapeDtypeStruct pytrees, positional
+    in_shardings: tuple
+    plan: PL.ParallelPlan
+    rt: Runtime
+    cfg: ModelConfig
+    shape: ShapeSpec
+
+    def lower(self):
+        return self.fn.lower(*self.arg_specs)
+
+
+def _named(tree: Pytree, mesh) -> Pytree:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def make_optimizer_for(plan: PL.ParallelPlan, cfg: ModelConfig) -> AdamW:
+    return make_optimizer(
+        "adamw",
+        state_dtype=plan.opt_state_dtype,
+        factored=plan.opt_factored,
+        momentum=plan.opt_momentum,
+    )
+
+
+def build_train(cfg: ModelConfig, shape: ShapeSpec, mesh,
+                plan: PL.ParallelPlan | None = None) -> BuiltStep:
+    plan = plan or PL.default_plan(cfg, shape, mesh)
+    rt = plan.runtime(mesh)
+    api = model_registry.get_model(cfg)
+    opt = make_optimizer_for(plan, cfg)
+    step = make_train_step(api, rt, opt, accum=plan.accum)
+
+    # ---- specs (no allocation) ----
+    params_sds = model_registry.param_specs(cfg)
+    opt_sds = jax.eval_shape(opt.init, params_sds)
+    state_sds = TrainState(params=params_sds, opt=opt_sds,
+                           step=jax.ShapeDtypeStruct((), jnp.int32))
+    batch_sds = model_registry.input_specs(cfg, shape)
+
+    # ---- shardings ----
+    p_specs = PL.sanitize_pspecs(PL.param_pspecs(params_sds, plan),
+                                 params_sds, mesh)
+    o_specs = PL.sanitize_pspecs(PL.opt_pspecs(opt_sds, p_specs, plan),
+                                 opt_sds, mesh)
+    state_specs = TrainState(params=p_specs, opt=o_specs, step=P())
+    b_specs = PL.batch_pspecs(batch_sds, plan)
+    in_sh = (_named(state_specs, mesh), _named(b_specs, mesh))
+    out_sh = (in_sh[0], None)  # metrics: let XLA replicate
+
+    jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=(0,))
+    return BuiltStep("train", jitted, (state_sds, batch_sds), in_sh,
+                     plan, rt, cfg, shape)
+
+
+def build_prefill(cfg: ModelConfig, shape: ShapeSpec, mesh,
+                  plan: PL.ParallelPlan | None = None) -> BuiltStep:
+    plan = plan or PL.default_plan(cfg, shape, mesh)
+    rt = plan.runtime(mesh)
+    api = model_registry.get_model(cfg)
+
+    def prefill_fn(params, batch):
+        return api.prefill(params, batch, rt)
+
+    params_sds = model_registry.param_specs(cfg)
+    batch_sds = model_registry.input_specs(cfg, shape)
+    p_specs = PL.sanitize_pspecs(PL.param_pspecs(params_sds, plan),
+                                 params_sds, mesh)
+    b_specs = PL.batch_pspecs(batch_sds, plan)
+    in_sh = (_named(p_specs, mesh), _named(b_specs, mesh))
+    jitted = jax.jit(prefill_fn, in_shardings=in_sh)
+    return BuiltStep("prefill", jitted, (params_sds, batch_sds), in_sh,
+                     plan, rt, cfg, shape)
+
+
+def build_decode(cfg: ModelConfig, shape: ShapeSpec, mesh,
+                 plan: PL.ParallelPlan | None = None) -> BuiltStep:
+    """serve_step: one new token with a KV cache of seq_len."""
+    plan = plan or PL.default_plan(cfg, shape, mesh)
+    rt = plan.runtime(mesh)
+    api = model_registry.get_model(cfg)
+
+    def decode_fn(params, cache, tokens):
+        return api.decode_step(params, cache, tokens, rt)
+
+    params_sds = model_registry.param_specs(cfg)
+    cache_sds = model_registry.cache_specs(cfg, shape, rt)
+    tok_sds = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+
+    p_specs = PL.sanitize_pspecs(PL.param_pspecs(params_sds, plan),
+                                 params_sds, mesh)
+    c_specs = PL.sanitize_pspecs(PL.cache_pspecs(cache_sds, plan, cfg, mesh),
+                                 cache_sds, mesh)
+    t_spec = P(plan.dp_axes or None, None)
+    in_sh = (_named(p_specs, mesh), _named(c_specs, mesh),
+             NamedSharding(mesh, t_spec))
+    out_sh = (None, in_sh[1])  # cache stays sharded in place
+    jitted = jax.jit(decode_fn, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=(1,))
+    return BuiltStep("decode", jitted, (params_sds, cache_sds, tok_sds),
+                     in_sh, plan, rt, cfg, shape)
+
+
+def build_step(cfg: ModelConfig, shape: ShapeSpec, mesh,
+               plan: PL.ParallelPlan | None = None) -> BuiltStep:
+    """Dispatch on the cell kind (train / prefill / decode)."""
+    if shape.kind == "train":
+        return build_train(cfg, shape, mesh, plan)
+    if shape.kind == "prefill":
+        return build_prefill(cfg, shape, mesh, plan)
+    return build_decode(cfg, shape, mesh, plan)

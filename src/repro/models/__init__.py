@@ -1,0 +1,7 @@
+"""Model zoo: the ten assigned architectures as composable JAX modules."""
+from .registry import (ModelApi, cache_specs, get_model, input_specs,
+                       param_specs)
+from .runtime import LOCAL, Runtime
+
+__all__ = ["LOCAL", "ModelApi", "Runtime", "cache_specs", "get_model",
+           "input_specs", "param_specs"]

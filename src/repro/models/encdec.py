@@ -1,0 +1,191 @@
+"""Whisper-style encoder-decoder (audio backbone; conv frontend stubbed).
+
+Inputs per the assignment: the modality frontend is a STUB — ``input_specs``
+hands *precomputed frame embeddings* (B, S_enc, frontend_dim); a learned
+linear adapter maps them to d_model.  Shape convention (DESIGN.md):
+``seq_len`` is the encoder length; decoder length = seq_len // dec_ratio for
+train/prefill and 1 (+cross-attn over seq_len encoder states) for decode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import layers as L
+from .transformer import cross_entropy
+
+
+# --------------------------------------------------------------------------
+# blocks
+# --------------------------------------------------------------------------
+def _init_enc_block(key, cfg):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": L.init_rmsnorm(cfg.d_model, cfg.np_dtype),
+        "attn": L.init_attention(ks[0], cfg),
+        "ln2": L.init_rmsnorm(cfg.d_model, cfg.np_dtype),
+        "mlp": L.init_mlp(ks[1], cfg),
+    }
+
+
+def _init_dec_block(key, cfg):
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": L.init_rmsnorm(cfg.d_model, cfg.np_dtype),
+        "attn": L.init_attention(ks[0], cfg),
+        "lnx": L.init_rmsnorm(cfg.d_model, cfg.np_dtype),
+        "xattn": L.init_attention(ks[1], cfg),
+        "ln2": L.init_rmsnorm(cfg.d_model, cfg.np_dtype),
+        "mlp": L.init_mlp(ks[2], cfg),
+    }
+
+
+def _enc_block_fwd(p, x, cfg, rt):
+    x = x + L.attention_fwd(p["attn"], L.rms_norm(x, p["ln1"], cfg.norm_eps),
+                            cfg, causal=False, mode=rt.attn_mode, rt=rt)
+    x = x + L.mlp_fwd(p["mlp"], L.rms_norm(x, p["ln2"], cfg.norm_eps), cfg)
+    return rt.constrain(x, *rt.act_spec(3))
+
+
+def _dec_block_fwd(p, x, enc_out, cfg, rt):
+    x = x + L.attention_fwd(p["attn"], L.rms_norm(x, p["ln1"], cfg.norm_eps),
+                            cfg, causal=True, mode=rt.attn_mode, rt=rt)
+    x = x + L.cross_attention_fwd(p["xattn"],
+                                  L.rms_norm(x, p["lnx"], cfg.norm_eps),
+                                  enc_out, cfg)
+    x = x + L.mlp_fwd(p["mlp"], L.rms_norm(x, p["ln2"], cfg.norm_eps), cfg)
+    return rt.constrain(x, *rt.act_spec(3))
+
+
+# --------------------------------------------------------------------------
+# model
+# --------------------------------------------------------------------------
+def init(key, cfg):
+    ks = jax.random.split(key, 6)
+    enc_keys = jax.random.split(ks[0], cfg.n_enc_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_dec_layers)
+    params = {
+        "adapter": {"w": L._dense_init(ks[2], (cfg.frontend_dim, cfg.d_model),
+                                       cfg.np_dtype)},
+        "enc_pos": L._dense_init(ks[3], (cfg.max_abs_positions, cfg.d_model),
+                                 cfg.np_dtype, scale=0.02),
+        "embed": L.init_embedding(ks[4], cfg),   # decoder tokens (+abs pos)
+        "enc_layers": jax.vmap(lambda k: _init_enc_block(k, cfg))(enc_keys),
+        "enc_norm": L.init_rmsnorm(cfg.d_model, cfg.np_dtype),
+        "dec_layers": jax.vmap(lambda k: _init_dec_block(k, cfg))(dec_keys),
+        "final_norm": L.init_rmsnorm(cfg.d_model, cfg.np_dtype),
+    }
+    head = L.init_lm_head(ks[5], cfg)
+    if head is not None:
+        params["head"] = head
+    return params
+
+
+def encode(params, frames, cfg, rt):
+    """frames: (B, S_enc, frontend_dim) precomputed stub embeddings."""
+    S = frames.shape[1]
+    x = frames.astype(cfg.np_dtype) @ params["adapter"]["w"]
+    x = x + lax.dynamic_slice_in_dim(params["enc_pos"], 0, S, axis=0)
+    x = rt.constrain(x, *rt.act_spec(3))
+
+    def body(x, lp):
+        return _enc_block_fwd(lp, x, cfg, rt), None
+    if rt.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = lax.scan(body, x, params["enc_layers"])
+    return L.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def decode_train(params, enc_out, tokens, cfg, rt):
+    x = L.embed(params["embed"], tokens, cfg)
+    x = rt.constrain(x, *rt.act_spec(3))
+
+    def body(x, lp):
+        return _dec_block_fwd(lp, x, enc_out, cfg, rt), None
+    if rt.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = lax.scan(body, x, params["dec_layers"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return L.unembed(params["embed"], params.get("head"), x, cfg)
+
+
+def loss(params, batch, cfg, rt):
+    """batch: {frames (B,S_enc,F), tokens (B,S_dec), labels (B,S_dec)}."""
+    enc_out = encode(params, batch["frames"], cfg, rt)
+    logits = decode_train(params, enc_out, batch["tokens"], cfg, rt)
+    nll = cross_entropy(logits, batch["labels"], batch.get("mask"))
+    return nll, {"nll": nll, "aux": jnp.zeros((), jnp.float32)}
+
+
+# --------------------------------------------------------------------------
+# serving
+# --------------------------------------------------------------------------
+def init_cache(cfg, batch: int, max_len: int, rt, dtype=None, enc_len=None):
+    """max_len: decoder self-attn capacity; enc_len: encoder states length."""
+    dtype = dtype or cfg.np_dtype
+    enc_len = enc_len or max_len
+    hd = cfg.head_dim
+    Ld = cfg.n_dec_layers
+    return {
+        "enc_out": jnp.zeros((batch, enc_len, cfg.d_model), dtype),
+        "k": jnp.zeros((Ld, batch, max_len, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((Ld, batch, max_len, cfg.n_kv_heads, hd), dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params, batch, cfg, rt, *, max_len: int | None = None):
+    """Encode frames + run decoder prompt -> (last logits, cache)."""
+    enc_out = encode(params, batch["frames"], cfg, rt)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = L.embed(params["embed"], tokens, cfg)
+
+    def body(x, lp):
+        h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q, k, v = L._qkv(lp["attn"], h, cfg)
+        o = L.dense_attention(q, k, v, causal=True, window=None)
+        x = x + o.reshape(B, S, -1) @ lp["attn"]["wo"]
+        x = x + L.cross_attention_fwd(lp["xattn"],
+                                      L.rms_norm(x, lp["lnx"], cfg.norm_eps),
+                                      enc_out, cfg)
+        x = x + L.mlp_fwd(lp["mlp"], L.rms_norm(x, lp["ln2"], cfg.norm_eps), cfg)
+        return x, (k, v)
+
+    x, (ks, vs) = lax.scan(body, x, params["dec_layers"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], params.get("head"), x[:, -1:], cfg)
+    if max_len is not None and max_len > ks.shape[2]:
+        pad = max_len - ks.shape[2]  # (Ld, B, S, Hkv, hd)
+        ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    cache = {"enc_out": enc_out, "k": ks, "v": vs,
+             "len": jnp.asarray(S, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(params, cache, tokens, cfg, rt):
+    """One decoder token; cross-attends the cached encoder states."""
+    x = jnp.take(params["embed"]["table"], tokens, axis=0)
+    x = x + lax.dynamic_slice_in_dim(params["embed"]["pos"], cache["len"], 1,
+                                     axis=0)
+
+    def body(x, inp):
+        lp, ck, cv = inp
+        h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        att, nk, nv = L.attention_decode(lp["attn"], h, cfg, ck, cv,
+                                         cache["len"])
+        x = x + att
+        x = x + L.cross_attention_fwd(lp["xattn"],
+                                      L.rms_norm(x, lp["lnx"], cfg.norm_eps),
+                                      cache["enc_out"], cfg)
+        x = x + L.mlp_fwd(lp["mlp"], L.rms_norm(x, lp["ln2"], cfg.norm_eps), cfg)
+        return x, (nk, nv)
+
+    x, (nk, nv) = lax.scan(body, x, (params["dec_layers"], cache["k"],
+                                     cache["v"]))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], params.get("head"), x, cfg)
+    return logits, {"enc_out": cache["enc_out"], "k": nk, "v": nv,
+                    "len": cache["len"] + 1}

@@ -1,0 +1,716 @@
+"""Core transformer layer primitives (pure JAX, pjit/SPMD-friendly).
+
+Conventions
+-----------
+* Params are nested dicts of jnp arrays; ``init_*`` builds them, ``*_fwd``
+  applies them.  Layer stacks are *scanned*: every per-layer param leaf gets a
+  leading ``n_layers`` axis (see ``models/transformer.py``) so the HLO stays
+  O(1) in depth.
+* Activations are ``cfg.dtype`` (bf16 by default); norms, softmax and the
+  final loss accumulate in fp32 (``preferred_element_type``).
+* Attention is GQA with RoPE.  Two execution paths:
+  - ``dense``: materialised scores — fine for short sequences;
+  - ``chunked``: lax.scan over KV blocks with an online softmax
+    (flash-attention recurrence in pure jnp) — the *functional twin* of
+    ``repro.kernels.flash_attn`` and the only path whose working set is
+    O(S·blk) instead of O(S^2), required for the 32k/500k shapes.
+* Sliding-window attention (h2o-danube) masks the same two paths.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Params = dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# initialisation helpers
+# --------------------------------------------------------------------------
+def _dense_init(key, shape, dtype, scale: float | None = None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    std = scale if scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def init_rmsnorm(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rms_norm(x, params: Params, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# rotary position embeddings
+# --------------------------------------------------------------------------
+def rope_angles(positions, head_dim: int, theta: float):
+    """(..., S) int positions -> cos/sin tables (..., S, head_dim/2), fp32."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (..., S, H, D). cos/sin: (..., S, D/2) broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :].astype(x.dtype) if x.ndim == cos.ndim + 2 else cos.astype(x.dtype)
+    s = sin[..., None, :].astype(x.dtype) if x.ndim == sin.ndim + 2 else sin.astype(x.dtype)
+    # rotate-half convention (llama/qwen)
+    if x.ndim == 4 and cos.ndim == 2:  # (B,S,H,D) with (S, half)
+        c = cos[None, :, None, :].astype(x.dtype)
+        s = sin[None, :, None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# attention (GQA + optional sliding window), dense and chunked paths
+# --------------------------------------------------------------------------
+def init_attention(key, cfg) -> Params:
+    d, hd = cfg.d_model, cfg.head_dim
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    dt = cfg.np_dtype
+    p = {
+        "wq": _dense_init(ks[0], (d, nq * hd), dt),
+        "wk": _dense_init(ks[1], (d, nkv * hd), dt),
+        "wv": _dense_init(ks[2], (d, nkv * hd), dt),
+        "wo": _dense_init(ks[3], (nq * hd, d), dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((nq * hd,), dt)
+        p["bk"] = jnp.zeros((nkv * hd,), dt)
+        p["bv"] = jnp.zeros((nkv * hd,), dt)
+    return p
+
+
+def _qkv(params, x, cfg):
+    B, S, _ = x.shape
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = q.reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    return q, k, v
+
+
+def _repeat_kv(k, n_rep: int):
+    if n_rep == 1:
+        return k
+    B, S, H, D = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (B, S, H, n_rep, D)).reshape(
+        B, S, H * n_rep, D
+    )
+
+
+def dense_attention(q, k, v, *, causal: bool, window: int | None,
+                    q_offset: int = 0, scale: float | None = None):
+    """Materialised-scores attention. q:(B,Sq,H,D) k/v:(B,Sk,Hkv,D)."""
+    B, Sq, H, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    k = _repeat_kv(k, H // Hkv)
+    v = _repeat_kv(v, H // Hkv)
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    qpos = jnp.arange(Sq)[:, None] + q_offset
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def _flash_mask(q_abs, k_abs, Sk_real, causal, window):
+    """(q_blk, kv_blk) bool validity mask for one block pair."""
+    msk = (k_abs < Sk_real)[None, :]
+    if causal:
+        msk &= k_abs[None, :] <= q_abs[:, None]
+    if window is not None:
+        msk &= k_abs[None, :] > q_abs[:, None] - window
+    return msk
+
+
+def _opaque_zero(x) -> jnp.ndarray:
+    """An int32 zero that is *data-dependent* so trace-time partial
+    evaluation cannot constant-fold it.
+
+    Flash block masks are pure functions of the loop counter; if that chain
+    is constant-foldable, scan linearization hoists every iteration's
+    broadcast mask into ONE stacked (nq, nk, B, H, q_blk, kv_blk) residual —
+    a full S² buffer (measured: 16 GiB/device on the kimi train cell).
+    Seeding the counter from runtime data keeps the masks inside the loop;
+    XLA later simplifies f - f == 0 locally without re-stacking."""
+    f = jnp.isnan(x.reshape(-1)[0]).astype(jnp.int32)
+    return f - f
+
+
+def _flash_hint(rt, n_heads: int, q_blk: int, kv_blk: int):
+    """Sharding-hint closure for the per-block tensors inside the flash
+    scans.  Without it, SPMD may shard head_dim — the contraction dim of
+    the scores einsum — forcing an all-reduce per (layer, q-block,
+    kv-block): measured 131k ARs / 2.9 TB on qwen2.5-32b prefill (§Perf
+    hillclimb A).
+
+    * heads divide tp  -> shard heads: every flash einsum is local;
+    * else             -> shard the q-block dim (fwd-only safe: backward
+      dk/dv einsums contract q, so this mode is applied to inference
+      paths; training keeps XLA's choice — documented limitation).
+    Returns f(x, role) with role in {"q", "kv", "stat"} or None."""
+    if rt is None or rt.mesh is None or not rt.tp_axis:
+        return None
+    tp = rt.mesh.shape.get(rt.tp_axis, 1)
+    if tp <= 1 or n_heads % tp != 0:
+        return None          # non-dividing heads are PADDED by the caller
+    dp = rt.dp_axes or None
+    ax = rt.tp_axis
+
+    def f(x, role):
+        if role == "stat":                 # (B, H, q_blk)
+            return rt.constrain(x, dp, ax, None)
+        return rt.constrain(x, dp, ax, None, None)
+    return f
+
+
+def _flash_fwd_blocks(q, k, v, causal, window, q_offset, q_blk, kv_blk,
+                      scale, Sk_real, hint=None):
+    """Blocked forward returning (out bf16-like, lse f32).
+
+    q: (nq, B, H, q_blk, D); k/v: (nk, B, H, kv_blk, D).
+
+    Block indices are *loop-carried* (not scanned iota inputs): constant-
+    derived masks would otherwise be hoisted by partial-eval into one
+    stacked (nq, nk, B, H, q_blk, kv_blk) tensor — a full S² buffer that
+    defeats the whole point of blocking (EXPERIMENTS.md §Perf).
+    """
+    nq, B, H, _, D = q.shape
+    nk = k.shape[0]
+
+    def q_block(carry_q, q_i):
+        qi = carry_q
+        if hint is not None:
+            q_i = hint(q_i, "q")
+        q_i = q_i * scale
+        q_abs = qi * q_blk + jnp.arange(q_blk) + q_offset
+
+        def kv_step(carry, inp):
+            kj, acc, m, l = carry
+            k_j, v_j = inp
+            if hint is not None:
+                k_j = hint(k_j, "kv")
+                v_j = hint(v_j, "kv")
+            s = jnp.einsum("bhqd,bhkd->bhqk", q_i, k_j,
+                           preferred_element_type=jnp.float32)
+            k_abs = kj * kv_blk + jnp.arange(kv_blk)
+            msk = _flash_mask(q_abs, k_abs, Sk_real, causal, window)
+            s = jnp.where(msk[None, None], s, -jnp.inf)
+            m_new = jnp.maximum(m, s.max(-1))
+            m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(msk[None, None], p, 0.0)
+            alpha = jnp.where(jnp.isneginf(m), 0.0, jnp.exp(m - m_safe))
+            l_new = l * alpha + p.sum(-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p.astype(v_j.dtype), v_j,
+                preferred_element_type=jnp.float32)
+            return (kj + 1, acc, m_new, l_new), None
+
+        acc0 = jnp.zeros((B, H, q_blk, D), jnp.float32)
+        m0 = jnp.full((B, H, q_blk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, H, q_blk), jnp.float32)
+        (_, acc, m, l), _ = lax.scan(
+            kv_step, (_opaque_zero(k), acc0, m0, l0), (k, v))
+        lse = jnp.where(l > 0.0, m + jnp.log(jnp.maximum(l, 1e-37)), -jnp.inf)
+        l = jnp.where(l == 0.0, 1.0, l)
+        out_i = (acc / l[..., None]).astype(v.dtype)  # (B,H,q,D)
+        return qi + 1, (out_i, lse)
+
+    _, (out, lse) = lax.scan(q_block, _opaque_zero(q), q)
+    return out, lse
+
+
+def _tri_eligible(causal, window, q_offset, q_blk, kv_blk, nq, nk):
+    """Split-half triangular iteration applies to plain causal self-attn
+    with square blocks and an even block count."""
+    return (causal and window is None and q_offset == 0
+            and q_blk == kv_blk and nq == nk and nq >= 2 and nq % 2 == 0)
+
+
+def _flash_fwd_tri(q, k, v, q_blk, scale, Sk_real, hint):
+    """Causal forward over the lower triangle only: row pair (t, nq-1-t)
+    shares one inner scan of nq+1 block steps — (nq/2)(nq+1) block pairs
+    instead of nq², i.e. ~2x fewer flash einsums AND k/v block reads
+    (§Perf hillclimb B).  Returns (out, lse) shaped like the dense path."""
+    nq, B, H, _, D = q.shape
+
+    def row_pair(carry_t, _):
+        t = carry_t
+        i_lo, i_hi = t, nq - 1 - t
+        q_lo = jax.lax.dynamic_index_in_dim(q, i_lo, 0, keepdims=False)
+        q_hi = jax.lax.dynamic_index_in_dim(q, i_hi, 0, keepdims=False)
+        if hint is not None:
+            q_lo = hint(q_lo, "q")
+            q_hi = hint(q_hi, "q")
+        q_lo = q_lo * scale
+        q_hi = q_hi * scale
+
+        def kv_step(carry, _):
+            (j, acc_lo, m_lo, l_lo, acc_hi, m_hi, l_hi) = carry
+            serve_lo = j <= i_lo
+            kj = jnp.where(serve_lo, j, j - i_lo - 1)
+            k_j = jax.lax.dynamic_index_in_dim(k, kj, 0, keepdims=False)
+            v_j = jax.lax.dynamic_index_in_dim(v, kj, 0, keepdims=False)
+            if hint is not None:
+                k_j = hint(k_j, "kv")
+                v_j = hint(v_j, "kv")
+            q_i = jnp.where(serve_lo, q_lo, q_hi)
+            i_cur = jnp.where(serve_lo, i_lo, i_hi)
+            s = jnp.einsum("bhqd,bhkd->bhqk", q_i, k_j,
+                           preferred_element_type=jnp.float32)
+            q_abs = i_cur * q_blk + jnp.arange(q_blk)
+            k_abs = kj * q_blk + jnp.arange(q_blk)
+            msk = (k_abs[None, :] <= q_abs[:, None]) & \
+                (k_abs < Sk_real)[None, :]
+            s = jnp.where(msk[None, None], s, -jnp.inf)
+            m_old = jnp.where(serve_lo, m_lo, m_hi)
+            l_old = jnp.where(serve_lo, l_lo, l_hi)
+            acc_old = jnp.where(serve_lo, acc_lo, acc_hi)
+            m_new = jnp.maximum(m_old, s.max(-1))
+            m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+            p = jnp.where(msk[None, None], jnp.exp(s - m_safe[..., None]),
+                          0.0)
+            alpha = jnp.where(jnp.isneginf(m_old), 0.0,
+                              jnp.exp(m_old - m_safe))
+            l_new = l_old * alpha + p.sum(-1)
+            acc_new = acc_old * alpha[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p.astype(v_j.dtype), v_j,
+                preferred_element_type=jnp.float32)
+            acc_lo = jnp.where(serve_lo, acc_new, acc_lo)
+            m_lo2 = jnp.where(serve_lo, m_new, m_lo)
+            l_lo2 = jnp.where(serve_lo, l_new, l_lo)
+            acc_hi = jnp.where(serve_lo, acc_hi, acc_new)
+            m_hi2 = jnp.where(serve_lo, m_hi, m_new)
+            l_hi2 = jnp.where(serve_lo, l_hi, l_new)
+            return (j + 1, acc_lo, m_lo2, l_lo2, acc_hi, m_hi2, l_hi2), None
+
+        z = jnp.zeros((B, H, q_blk, D), jnp.float32)
+        mi = jnp.full((B, H, q_blk), -jnp.inf, jnp.float32)
+        li = jnp.zeros((B, H, q_blk), jnp.float32)
+        (_, acc_lo, m_lo, l_lo, acc_hi, m_hi, l_hi), _ = lax.scan(
+            kv_step, (_opaque_zero(k), z, mi, li, z, mi, li), None,
+            length=nq + 1)
+
+        def fin(acc, m, l):
+            lse = jnp.where(l > 0.0, m + jnp.log(jnp.maximum(l, 1e-37)),
+                            -jnp.inf)
+            l = jnp.where(l == 0.0, 1.0, l)
+            return (acc / l[..., None]).astype(v.dtype), lse
+
+        o_lo, lse_lo = fin(acc_lo, m_lo, l_lo)
+        o_hi, lse_hi = fin(acc_hi, m_hi, l_hi)
+        return t + 1, (o_lo, lse_lo, o_hi, lse_hi)
+
+    _, (o_lo, lse_lo, o_hi, lse_hi) = lax.scan(
+        row_pair, _opaque_zero(q), None, length=nq // 2)
+    idx_lo = jnp.arange(nq // 2)
+    idx_hi = nq - 1 - idx_lo
+    out = jnp.zeros((nq, B, H, q_blk, D), o_lo.dtype)
+    out = out.at[idx_lo].set(o_lo).at[idx_hi].set(o_hi)
+    lse = jnp.zeros((nq, B, H, q_blk), lse_lo.dtype)
+    lse = lse.at[idx_lo].set(lse_lo).at[idx_hi].set(lse_hi)
+    return out, lse
+
+
+def _flash(causal, window, q_offset, q_blk, kv_blk, scale, Sq, Sk, hint,
+           q, k, v):
+    if _tri_eligible(causal, window, q_offset, q_blk, kv_blk,
+                     q.shape[0], k.shape[0]):
+        out, _ = _flash_fwd_tri(q, k, v, q_blk, scale, Sk, hint)
+        return out
+    out, _ = _flash_fwd_blocks(q, k, v, causal, window, q_offset, q_blk,
+                               kv_blk, scale, Sk, hint)
+    return out
+
+
+_flash = jax.custom_vjp(_flash, nondiff_argnums=(0, 1, 2, 3, 4, 5, 6, 7, 8))
+
+
+def _flash_vjp_fwd(causal, window, q_offset, q_blk, kv_blk, scale, Sq, Sk,
+                   hint, q, k, v):
+    if _tri_eligible(causal, window, q_offset, q_blk, kv_blk,
+                     q.shape[0], k.shape[0]):
+        out, lse = _flash_fwd_tri(q, k, v, q_blk, scale, Sk, hint)
+    else:
+        out, lse = _flash_fwd_blocks(q, k, v, causal, window, q_offset,
+                                     q_blk, kv_blk, scale, Sk, hint)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd_tri(q, k, v, out, lse, dout, q_blk, scale, Sk_real, hint):
+    """Triangular FlashAttention-2 backward: same split-half row pairing as
+    the forward — (nq/2)(nq+1) block pairs, dk/dv accumulated in-place at
+    the served kv index."""
+    nq, B, H, _, D = q.shape
+    Drow = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32), -1)
+    lse_safe = jnp.where(jnp.isneginf(lse), 0.0, lse)
+
+    def row_pair(carry, _):
+        t, dk_acc, dv_acc = carry
+        i_lo, i_hi = t, nq - 1 - t
+
+        def pick(a, i):
+            return jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False)
+
+        q_lo, q_hi = pick(q, i_lo), pick(q, i_hi)
+        do_lo, do_hi = pick(dout, i_lo), pick(dout, i_hi)
+        lse_lo, lse_hi = pick(lse_safe, i_lo), pick(lse_safe, i_hi)
+        D_lo, D_hi = pick(Drow, i_lo), pick(Drow, i_hi)
+        if hint is not None:
+            q_lo, q_hi = hint(q_lo, "q"), hint(q_hi, "q")
+            do_lo, do_hi = hint(do_lo, "q"), hint(do_hi, "q")
+            lse_lo, lse_hi = hint(lse_lo, "stat"), hint(lse_hi, "stat")
+            D_lo, D_hi = hint(D_lo, "stat"), hint(D_hi, "stat")
+
+        def kv_step(carry2, _):
+            j, dq_lo, dq_hi, dk_a, dv_a = carry2
+            serve_lo = j <= i_lo
+            kj = jnp.where(serve_lo, j, j - i_lo - 1)
+            k_j = jax.lax.dynamic_index_in_dim(k, kj, 0, keepdims=False)
+            v_j = jax.lax.dynamic_index_in_dim(v, kj, 0, keepdims=False)
+            if hint is not None:
+                k_j = hint(k_j, "kv")
+                v_j = hint(v_j, "kv")
+            q_i = jnp.where(serve_lo, q_lo, q_hi)
+            do_i = jnp.where(serve_lo, do_lo, do_hi)
+            lse_i = jnp.where(serve_lo, lse_lo, lse_hi)
+            D_i = jnp.where(serve_lo, D_lo, D_hi)
+            i_cur = jnp.where(serve_lo, i_lo, i_hi)
+            q_s = (q_i * scale).astype(q_i.dtype)
+            q_abs = i_cur * q_blk + jnp.arange(q_blk)
+            k_abs = kj * q_blk + jnp.arange(q_blk)
+            msk = (k_abs[None, :] <= q_abs[:, None]) & \
+                (k_abs < Sk_real)[None, :]
+            s = jnp.einsum("bhqd,bhkd->bhqk", q_s, k_j,
+                           preferred_element_type=jnp.float32)
+            p = jnp.where(msk[None, None],
+                          jnp.exp(s - lse_i[..., None]), 0.0)
+            dv_j = jnp.einsum("bhqk,bhqd->bhkd", p.astype(do_i.dtype), do_i,
+                              preferred_element_type=jnp.float32)
+            dp = jnp.einsum("bhqd,bhkd->bhqk", do_i, v_j,
+                            preferred_element_type=jnp.float32)
+            ds = p * (dp - D_i[..., None]) * scale
+            dsl = ds.astype(q_i.dtype)
+            dq_i = jnp.einsum("bhqk,bhkd->bhqd", dsl, k_j,
+                              preferred_element_type=jnp.float32)
+            dk_j = jnp.einsum("bhqk,bhqd->bhkd", dsl, q_i,
+                              preferred_element_type=jnp.float32)
+            dq_lo = jnp.where(serve_lo, dq_lo + dq_i, dq_lo)
+            dq_hi = jnp.where(serve_lo, dq_hi, dq_hi + dq_i)
+            old_k = jax.lax.dynamic_index_in_dim(dk_a, kj, 0, keepdims=False)
+            old_v = jax.lax.dynamic_index_in_dim(dv_a, kj, 0, keepdims=False)
+            dk_a = jax.lax.dynamic_update_index_in_dim(
+                dk_a, old_k + dk_j, kj, 0)
+            dv_a = jax.lax.dynamic_update_index_in_dim(
+                dv_a, old_v + dv_j, kj, 0)
+            return (j + 1, dq_lo, dq_hi, dk_a, dv_a), None
+
+        z = jnp.zeros((B, H, q_blk, D), jnp.float32)
+        (_, dq_lo, dq_hi, dk_acc, dv_acc), _ = lax.scan(
+            kv_step, (_opaque_zero(k), z, z, dk_acc, dv_acc), None,
+            length=nq + 1)
+        return (t + 1, dk_acc, dv_acc), (dq_lo, dq_hi)
+
+    zk = jnp.zeros((nq, B, H, q_blk, D), jnp.float32)
+    (_, dk, dv), (dq_lo, dq_hi) = lax.scan(
+        row_pair, (_opaque_zero(q), zk, zk), None, length=nq // 2)
+    idx_lo = jnp.arange(nq // 2)
+    idx_hi = nq - 1 - idx_lo
+    dq = jnp.zeros((nq, B, H, q_blk, D), jnp.float32)
+    dq = dq.at[idx_lo].set(dq_lo).at[idx_hi].set(dq_hi)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+def _flash_vjp_bwd(causal, window, q_offset, q_blk, kv_blk, scale, Sq, Sk,
+                   hint, res, dout):
+    """FlashAttention-2 backward: recompute scores blockwise from (q,k,v,lse)
+    — saves O(S) residuals instead of autodiff's O(S²) block probabilities
+    (the single largest HBM term of the naive chunked backward, see
+    EXPERIMENTS.md §Perf)."""
+    q, k, v, out, lse = res
+    if _tri_eligible(causal, window, q_offset, q_blk, kv_blk,
+                     q.shape[0], k.shape[0]):
+        return _flash_bwd_tri(q, k, v, out, lse, dout, q_blk, scale, Sk,
+                              hint)
+    nq, B, H, _, D = q.shape
+    nk = k.shape[0]
+    # D_i = rowsum(dO ⊙ O), (nq, B, H, q_blk), f32
+    Drow = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32), -1)
+    lse_safe = jnp.where(jnp.isneginf(lse), 0.0, lse)
+
+    def q_block_step(carry, inp):
+        qi, dk_acc, dv_acc = carry                  # (nk,B,H,kv,D) f32
+        q_i, do_i, lse_i, D_i = inp
+        if hint is not None:
+            q_i = hint(q_i, "q")
+            do_i = hint(do_i, "q")
+            lse_i = hint(lse_i, "stat")
+            D_i = hint(D_i, "stat")
+        q_abs = qi * q_blk + jnp.arange(q_blk) + q_offset
+        q_s = (q_i * scale).astype(q_i.dtype)
+
+        def kv_step(carry2, inp2):
+            kj, dq_acc = carry2
+            k_j, v_j = inp2
+            if hint is not None:
+                k_j = hint(k_j, "kv")
+                v_j = hint(v_j, "kv")
+            k_abs = kj * kv_blk + jnp.arange(kv_blk)
+            msk = _flash_mask(q_abs, k_abs, Sk, causal, window)
+            s = jnp.einsum("bhqd,bhkd->bhqk", q_s, k_j,
+                           preferred_element_type=jnp.float32)
+            p = jnp.where(msk[None, None],
+                          jnp.exp(s - lse_i[..., None]), 0.0)
+            dv_j = jnp.einsum("bhqk,bhqd->bhkd", p.astype(do_i.dtype), do_i,
+                              preferred_element_type=jnp.float32)
+            dp = jnp.einsum("bhqd,bhkd->bhqk", do_i, v_j,
+                            preferred_element_type=jnp.float32)
+            ds = p * (dp - D_i[..., None]) * scale
+            dsl = ds.astype(q_i.dtype)
+            dq_acc = dq_acc + jnp.einsum(
+                "bhqk,bhkd->bhqd", dsl, k_j,
+                preferred_element_type=jnp.float32)
+            dk_j = jnp.einsum("bhqk,bhqd->bhkd", dsl, q_i,
+                              preferred_element_type=jnp.float32)
+            return (kj + 1, dq_acc), (dk_j, dv_j)
+
+        dq0 = jnp.zeros((B, H, q_blk, D), jnp.float32)
+        (_, dq_i), (dk_p, dv_p) = lax.scan(
+            kv_step, (_opaque_zero(k), dq0), (k, v))
+        return (qi + 1, dk_acc + dk_p, dv_acc + dv_p), dq_i
+
+    zk = jnp.zeros((nk, B, H, kv_blk, D), jnp.float32)
+    (_, dk, dv), dq = lax.scan(
+        q_block_step, (_opaque_zero(q), zk, zk),
+        (q, dout, lse_safe, Drow))
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+def chunked_attention(q, k, v, *, causal: bool, window: int | None,
+                      q_offset: int = 0, q_blk: int = 512, kv_blk: int = 1024,
+                      scale: float | None = None, rt=None):
+    """Flash-style online-softmax attention, O(S*blk) working set — forward
+    AND backward (custom VJP, FlashAttention-2 recompute).
+
+    Pure-jnp twin of ``repro.kernels.flash_attn`` (the Pallas TPU kernel);
+    both are validated against ``dense_attention`` in tests.
+    """
+    B, Sq, H, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    k = _repeat_kv(k, H // Hkv)
+    v = _repeat_kv(v, H // Hkv)
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+
+    # heads that don't divide the tp width (qwen2.5: 40 on 16) are padded to
+    # the next multiple: ~20% attention-flops waste buys fully LOCAL flash
+    # einsums — vs 131k per-block all-reduces (2.9 TB) unguided, or 10 TB of
+    # k/v replication in a q-sharded layout (§Perf hillclimb A log).
+    Hp = H
+    if rt is not None and rt.mesh is not None and rt.tp_axis:
+        tp = rt.mesh.shape.get(rt.tp_axis, 1)
+        if tp > 1 and H % tp:
+            Hp = -(-H // tp) * tp
+            hp = Hp - H
+            q = jnp.pad(q, ((0, 0), (0, 0), (0, hp), (0, 0)))
+            k = jnp.pad(k, ((0, 0), (0, 0), (0, hp), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, 0), (0, hp), (0, 0)))
+
+    q_blk = min(q_blk, Sq)
+    kv_blk = min(kv_blk, Sk)
+    if causal and window is None and q_offset == 0 and Sq == Sk:
+        kv_blk = q_blk        # square blocks -> triangular split-half path
+    nq = -(-Sq // q_blk)
+    nk = -(-Sk // kv_blk)
+    pq, pk = nq * q_blk - Sq, nk * kv_blk - Sk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+
+    qb = q.reshape(B, nq, q_blk, Hp, D).transpose(1, 0, 3, 2, 4)  # (nq,B,H,q,D)
+    kb = k.reshape(B, nk, kv_blk, Hp, D).transpose(1, 0, 3, 2, 4)
+    vb = v.reshape(B, nk, kv_blk, Hp, D).transpose(1, 0, 3, 2, 4)
+
+    hint = _flash_hint(rt, Hp, q_blk, kv_blk)
+    out = _flash(causal, window, q_offset, q_blk, kv_blk, scale, Sq, Sk,
+                 hint, qb, kb, vb)
+    out = out.transpose(1, 0, 3, 2, 4).reshape(B, nq * q_blk, Hp, D)
+    return out[:, :Sq, :H]
+
+
+def attention_fwd(params: Params, x, cfg, *, positions=None, causal=True,
+                  mode: str = "auto", q_offset: int = 0, rt=None):
+    """Self-attention over x:(B,S,D) -> (B,S,D).
+
+    ``rt`` pins q/k/v to a batch+head sharding before the blocked flash
+    path: without the hint, SPMD picks a layout for the 5-D blocked
+    tensors that forces a reduction per (q, kv) block pair — measured
+    131k all-reduces / 2.9 TB wire on the qwen2.5 prefill cell
+    (EXPERIMENTS.md §Perf hillclimb A)."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(params, x, cfg)
+    if positions is None:
+        positions = jnp.arange(S) + q_offset
+    if cfg.pos_emb == "rope":
+        cos, sin = rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    window = cfg.sliding_window
+    if mode == "auto":
+        mode = "chunked" if S > 2048 else "dense"
+    if mode == "chunked":
+        out = chunked_attention(q, k, v, causal=causal, window=window,
+                                q_offset=q_offset, rt=rt)
+    else:
+        out = dense_attention(q, k, v, causal=causal, window=window,
+                              q_offset=q_offset)
+    out = out.reshape(B, S, cfg.n_heads * cfg.head_dim)
+    return out @ params["wo"]
+
+
+def attention_decode(params: Params, x, cfg, cache_k, cache_v, cache_len):
+    """One-token decode with a KV cache.
+
+    x: (B, 1, D); cache_k/v: (B, S_max, Hkv, hd); cache_len: () int32 —
+    number of valid cache positions.  Returns (out, new_k, new_v).
+    """
+    B = x.shape[0]
+    q, k, v = _qkv(params, x, cfg)
+    pos = jnp.full((1,), cache_len, jnp.int32)
+    if cfg.pos_emb == "rope":
+        cos, sin = rope_angles(pos, cfg.head_dim, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    new_k = lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), cache_len, axis=1)
+    new_v = lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), cache_len, axis=1)
+
+    S_max, Hkv = new_k.shape[1], new_k.shape[2]
+    H = cfg.n_heads
+    rep = H // Hkv
+    # grouped-GQA einsum: the kv cache is NEVER repeated — a materialized
+    # repeat of an (L, B, S, Hkv, hd) cache forced a full f32 all-gather of
+    # the cache per layer per token (§Perf hillclimb D)
+    qg = q.reshape(B, 1, Hkv, rep, cfg.head_dim)
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    s = jnp.einsum("bqkrd,bskd->bkrqs", qg, new_k,
+                   preferred_element_type=jnp.float32) * scale
+    kpos = jnp.arange(S_max)
+    valid = kpos <= cache_len
+    if cfg.sliding_window is not None:
+        valid &= kpos > cache_len - cfg.sliding_window
+    s = jnp.where(valid[None, None, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkrqs,bskd->bqkrd", p, new_v)
+    out = out.reshape(B, 1, H * cfg.head_dim) @ params["wo"]
+    return out, new_k, new_v
+
+
+def cross_attention_fwd(params: Params, x, enc_out, cfg):
+    """Decoder cross-attention: queries from x, keys/values from enc_out."""
+    B, Sq, _ = x.shape
+    Sk = enc_out.shape[1]
+    q = (x @ params["wq"]).reshape(B, Sq, cfg.n_heads, cfg.head_dim)
+    k = (enc_out @ params["wk"]).reshape(B, Sk, cfg.n_kv_heads, cfg.head_dim)
+    v = (enc_out @ params["wv"]).reshape(B, Sk, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qkv_bias:
+        q = q + params["bq"].reshape(1, 1, cfg.n_heads, cfg.head_dim)
+        k = k + params["bk"].reshape(1, 1, cfg.n_kv_heads, cfg.head_dim)
+        v = v + params["bv"].reshape(1, 1, cfg.n_kv_heads, cfg.head_dim)
+    mode = chunked_attention if max(Sq, Sk) > 2048 else dense_attention
+    out = mode(q, k, v, causal=False, window=None)
+    return out.reshape(B, Sq, cfg.n_heads * cfg.head_dim) @ params["wo"]
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+def init_mlp(key, cfg, d_ff: int | None = None) -> Params:
+    d = cfg.d_model
+    f = d_ff if d_ff is not None else cfg.d_ff
+    dt = cfg.np_dtype
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_act == "swiglu":
+        return {
+            "wg": _dense_init(ks[0], (d, f), dt),
+            "wu": _dense_init(ks[1], (d, f), dt),
+            "wd": _dense_init(ks[2], (f, d), dt),
+        }
+    return {  # gelu 2-matrix MLP (whisper)
+        "wu": _dense_init(ks[0], (d, f), dt),
+        "bu": jnp.zeros((f,), dt),
+        "wd": _dense_init(ks[1], (f, d), dt),
+        "bd": jnp.zeros((d,), dt),
+    }
+
+
+def mlp_fwd(params: Params, x, cfg):
+    if "wg" in params:
+        return (jax.nn.silu(x @ params["wg"]) * (x @ params["wu"])) @ params["wd"]
+    h = jax.nn.gelu(x @ params["wu"] + params["bu"])
+    return h @ params["wd"] + params["bd"]
+
+
+# --------------------------------------------------------------------------
+# embeddings / unembedding
+# --------------------------------------------------------------------------
+def init_embedding(key, cfg) -> Params:
+    dt = cfg.np_dtype
+    p = {"table": _dense_init(key, (cfg.padded_vocab, cfg.d_model), dt, scale=0.02)}
+    if cfg.pos_emb == "abs":
+        p["pos"] = _dense_init(
+            jax.random.fold_in(key, 1), (cfg.max_abs_positions, cfg.d_model), dt, scale=0.02
+        )
+    return p
+
+
+def embed(params: Params, tokens, cfg, *, offset: int = 0):
+    x = jnp.take(params["table"], tokens, axis=0)
+    if cfg.pos_emb == "abs":
+        S = tokens.shape[-1]
+        x = x + lax.dynamic_slice_in_dim(params["pos"], offset, S, axis=0)
+    return x
+
+
+def unembed(params_emb: Params, params_head: Params | None, x, cfg):
+    """Project to vocab logits (fp32). Tied or separate head."""
+    w = params_emb["table"] if params_head is None else params_head["w"]
+    if params_head is None:
+        return jnp.einsum("bsd,vd->bsv", x, w, preferred_element_type=jnp.float32)
+    return jnp.einsum("bsd,dv->bsv", x, w, preferred_element_type=jnp.float32)
+
+
+def init_lm_head(key, cfg) -> Params | None:
+    if cfg.tie_embeddings:
+        return None
+    return {"w": _dense_init(key, (cfg.d_model, cfg.padded_vocab), cfg.np_dtype, scale=0.02)}

@@ -1,0 +1,128 @@
+"""Uniform model API + dry-run input specs.
+
+``get_model(cfg)`` returns a :class:`ModelApi` wrapping the family module.
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+step input of a given assigned shape cell — weak-type-correct, shardable,
+and allocation-free, for ``jax.jit(...).lower(...)`` dry-runs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeSpec
+from . import encdec, ssm_lm, transformer, vlm
+from .runtime import Runtime
+
+
+@dataclass(frozen=True)
+class ModelApi:
+    cfg: ModelConfig
+    init: Callable
+    loss: Callable
+    init_cache: Callable
+    prefill: Callable
+    decode_step: Callable
+    forward: Callable | None = None
+
+
+def get_model(cfg: ModelConfig) -> ModelApi:
+    if cfg.family in ("dense", "moe"):
+        m = transformer
+    elif cfg.family in ("ssm", "hybrid"):
+        m = ssm_lm
+    elif cfg.family == "encdec":
+        m = encdec
+    elif cfg.family == "vlm":
+        m = vlm
+    else:
+        raise KeyError(f"unknown family {cfg.family!r}")
+    # dense/moe/ssm/hybrid prefill on a token array; encdec/vlm on the batch
+    # dict (they consume the frontend stub inputs too).
+    tok_only = cfg.family in ("dense", "moe", "ssm", "hybrid")
+
+    def _prefill(params, batch, rt, **kw):
+        inp = batch["tokens"] if (tok_only and isinstance(batch, dict)) else batch
+        return m.prefill(params, inp, cfg, rt, **kw)
+
+    return ModelApi(
+        cfg=cfg,
+        init=lambda key: m.init(key, cfg),
+        loss=lambda params, batch, rt: m.loss(params, batch, cfg, rt),
+        init_cache=lambda batch, max_len, rt, **kw: m.init_cache(
+            cfg, batch, max_len, rt, **kw),
+        prefill=_prefill,
+        decode_step=lambda params, cache, tokens, rt: m.decode_step(
+            params, cache, tokens, cfg, rt),
+        forward=(lambda params, tokens, rt, **kw: m.forward(
+            params, tokens, cfg, rt, **kw))
+        if hasattr(m, "forward") else None,
+    )
+
+
+# --------------------------------------------------------------------------
+# input specs (ShapeDtypeStructs) per assigned shape cell
+# --------------------------------------------------------------------------
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict[str, Any]:
+    """Batch-input stand-ins for the step lowered for this cell.
+
+    train  -> loss() batch;   prefill -> prefill() inputs;
+    decode -> decode_step() (tokens only — cache specs via cache_specs()).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32, dt = jnp.int32, cfg.np_dtype
+
+    if cfg.family == "encdec":
+        S_dec = max(S // cfg.dec_ratio, 8)
+        if shape.kind == "train":
+            return {"frames": _sds((B, S, cfg.frontend_dim), dt),
+                    "tokens": _sds((B, S_dec), i32),
+                    "labels": _sds((B, S_dec), i32)}
+        if shape.kind == "prefill":
+            return {"frames": _sds((B, S, cfg.frontend_dim), dt),
+                    "tokens": _sds((B, S_dec), i32)}
+        return {"tokens": _sds((B, 1), i32)}
+
+    if cfg.family == "vlm":
+        P = cfg.n_patches
+        S_text = max(S - P, 8)
+        if shape.kind == "train":
+            return {"patches": _sds((B, P, cfg.frontend_dim), dt),
+                    "tokens": _sds((B, S_text), i32),
+                    "labels": _sds((B, S_text), i32)}
+        if shape.kind == "prefill":
+            return {"patches": _sds((B, P, cfg.frontend_dim), dt),
+                    "tokens": _sds((B, S_text), i32)}
+        return {"tokens": _sds((B, 1), i32)}
+
+    if shape.kind == "train":
+        return {"tokens": _sds((B, S), i32), "labels": _sds((B, S), i32)}
+    if shape.kind == "prefill":
+        return {"tokens": _sds((B, S), i32)}
+    return {"tokens": _sds((B, 1), i32)}
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeSpec, rt: Runtime):
+    """ShapeDtypeStructs of the decode cache for this cell."""
+    api = get_model(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    kw = {}
+    if cfg.family == "encdec":
+        kw["enc_len"] = S
+        max_len = max(S // cfg.dec_ratio, 8) + 8
+    else:
+        max_len = S
+    return jax.eval_shape(lambda: api.init_cache(B, max_len, rt, **kw))
+
+
+def param_specs(cfg: ModelConfig):
+    """ShapeDtypeStructs of the parameter pytree (no allocation)."""
+    api = get_model(cfg)
+    return jax.eval_shape(lambda: api.init(jax.random.key(0)))

@@ -1,0 +1,51 @@
+"""Runtime: how a model executes on a mesh (orthogonal to ModelConfig).
+
+``ModelConfig`` says *what* the network is; ``Runtime`` says *how* it runs —
+which mesh axes exist, which MoE dispatch strategy, attention path, remat.
+The launcher builds one from a :class:`repro.launch.plans.ParallelPlan`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class Runtime:
+    mesh: Any = None                    # jax.sharding.Mesh | None
+    dp_axes: tuple[str, ...] = ()       # batch-sharding axes ("pod","data")
+    tp_axis: str | None = None          # tensor-parallel axis ("model")
+    ep_axis: str | None = None          # expert-parallel axis (defaults tp)
+    moe_impl: str = "local"             # local | ep | ep_a2a
+    attn_mode: str = "auto"             # dense | chunked | auto
+    remat: bool = False
+    remat_group: int = 1                # layers per remat block (g>1: save
+                                        # only every g-th residual — trades
+                                        # recompute for HBM, see §Perf)
+    act_shard: str = "none"             # none | seq — Megatron-SP-style
+                                        # residual-stream sharding over tp
+    ssd_chunk: int = 256
+    loss_chunk: int = 0                 # 0 = unchunked cross-entropy
+
+    def constrain(self, x, *spec):
+        """with_sharding_constraint if a mesh is attached, else no-op."""
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(self.mesh, P(*spec)))
+
+    def act_spec(self, ndim: int):
+        """Activation spec for the (B, S, ...) residual stream: batch over dp
+        axes; sequence over tp when act_shard == 'seq' (the saved remat
+        residuals shrink by the tp width; XLA re-gathers at use sites)."""
+        seq = (self.tp_axis if (self.act_shard == "seq" and self.tp_axis)
+               else None)
+        if ndim < 2:
+            return (self.dp_axes,) + (None,) * (ndim - 1)
+        return (self.dp_axes, seq) + (None,) * (ndim - 2)
+
+
+LOCAL = Runtime()

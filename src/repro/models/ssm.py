@@ -1,0 +1,222 @@
+"""Mamba2 (SSD — state-space duality) blocks, pure JAX.
+
+Training/prefill uses the *chunked SSD* algorithm of Dao & Gu (2024): the
+sequence is split into chunks of Q tokens; within a chunk the recurrence is
+computed as a masked (decay-weighted) attention-like matmul (MXU-friendly),
+across chunks a short ``lax.scan`` carries the (H, P, N) state.  Decode is the
+O(1) recurrent step on the carried state — this is what makes the
+``long_500k`` shape feasible where full attention is quadratic.
+
+Shapes: d_inner = expand*d_model; H heads of headdim P (H*P = d_inner);
+state size N (= cfg.ssm_state); G groups share B/C projections.
+
+``repro.kernels.ssd_chunk`` is the Pallas TPU kernel for the intra-chunk
+term; :func:`ssd_chunked` is its pure-jnp oracle (ref) and the default path.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .layers import _dense_init, rms_norm
+
+Params = dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# parameter init
+# --------------------------------------------------------------------------
+def init_mamba(key, cfg) -> Params:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    H = di // cfg.ssm_headdim
+    G, N, K = cfg.n_ssm_groups, cfg.ssm_state, cfg.ssm_conv
+    dt = cfg.np_dtype
+    conv_dim = di + 2 * G * N
+    ks = jax.random.split(key, 4)
+    return {
+        # fused in-projection: [z (di), x (di), B (G*N), C (G*N), dt (H)]
+        "in_proj": _dense_init(ks[0], (d, 2 * di + 2 * G * N + H), dt),
+        "conv_w": _dense_init(ks[1], (K, conv_dim), dt, scale=0.5),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "A_log": jnp.zeros((H,), jnp.float32),          # A = -exp(A_log)
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),               # skip connection
+        "norm": {"scale": jnp.ones((di,), dt)},         # gated RMSNorm
+        "out_proj": _dense_init(ks[2], (di, d), dt),
+    }
+
+
+def _split_in_proj(zxbcdt, cfg):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    G, N = cfg.n_ssm_groups, cfg.ssm_state
+    H = di // cfg.ssm_headdim
+    z = zxbcdt[..., :di]
+    x = zxbcdt[..., di: 2 * di]
+    Bm = zxbcdt[..., 2 * di: 2 * di + G * N]
+    Cm = zxbcdt[..., 2 * di + G * N: 2 * di + 2 * G * N]
+    dtr = zxbcdt[..., 2 * di + 2 * G * N:]
+    return z, x, Bm, Cm, dtr, di, G, N, H
+
+
+def _causal_conv(u, w, b):
+    """Depthwise causal conv1d. u: (B,S,C), w: (K,C)."""
+    K = w.shape[0]
+    up = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(u)
+    for i in range(K):  # K=4: unrolled adds, no conv primitive needed
+        out = out + up[:, i: i + u.shape[1], :] * w[i]
+    return out + b
+
+
+# --------------------------------------------------------------------------
+# chunked SSD (training / prefill)
+# --------------------------------------------------------------------------
+def ssd_chunked(xh, dt, A, Bm, Cm, *, chunk: int = 256, h0=None):
+    """Chunked SSD scan.
+
+    xh: (B,S,H,P) inputs; dt: (B,S,H) positive step sizes;
+    A: (H,) negative decay rates; Bm/Cm: (B,S,G,N).
+    Returns (y: (B,S,H,P), h_last: (B,H,P,N)).
+    """
+    B_, S, H, Pd = xh.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Q = min(chunk, S)
+    nc = -(-S // Q)
+    pad = nc * Q - S
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    # chunked views: (B, nc, Q, ...)
+    xc = xh.reshape(B_, nc, Q, H, Pd)
+    dtc = dt.reshape(B_, nc, Q, H)
+    Bc = Bm.reshape(B_, nc, Q, G, N)
+    Cc = Cm.reshape(B_, nc, Q, G, N)
+
+    la = dtc * A  # (B,nc,Q,H) log-decay per step (A<0)
+    cum = jnp.cumsum(la, axis=2)                      # inclusive within chunk
+    dtx = xc * dtc[..., None]                         # dt-scaled inputs
+
+    # ---- intra-chunk: masked decay attention  y[i] += C_i.B_j e^{cum_i-cum_j} dtx_j
+    Bh = jnp.repeat(Bc, rep, axis=3)                  # (B,nc,Q,H,N)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", Ch, Bh,
+                        preferred_element_type=jnp.float32)
+    # decay(i,j) = exp(cum_i - cum_j), lower-triangular (j <= i)
+    cum_h = cum.transpose(0, 1, 3, 2)                 # (B,nc,H,Q)
+    dmat = cum_h[..., :, None] - cum_h[..., None, :]  # (B,nc,H,Q,Q)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    dmat = jnp.where(tri, dmat, -jnp.inf)
+    scores = scores * jnp.exp(dmat)
+    y_intra = jnp.einsum("bchqk,bckhp->bcqhp", scores.astype(xh.dtype),
+                         dtx, preferred_element_type=jnp.float32)
+
+    # ---- chunk summary states: S_c = sum_j e^{cumQ - cum_j} B_j (x) dtx_j
+    wj = jnp.exp(cum_h[..., -1:] - cum_h)             # (B,nc,H,Q)
+    states = jnp.einsum("bchq,bcqhn,bcqhp->bchpn",
+                        wj.astype(xh.dtype), Bh, dtx,
+                        preferred_element_type=jnp.float32)  # (B,nc,H,P,N)
+    alpha = jnp.exp(cum_h[..., -1])                   # (B,nc,H) total chunk decay
+
+    # ---- inter-chunk recurrence over nc (small): h_c = alpha_c h_{c-1} + S_c
+    def step(h, inp):
+        a_c, s_c = inp                                # (B,H), (B,H,P,N)
+        h = h * a_c[..., None, None] + s_c
+        return h, h
+
+    h_init = (jnp.zeros((B_, H, Pd, N), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
+    hs_last, hs = lax.scan(step, h_init,
+                           (alpha.transpose(1, 0, 2), states.transpose(1, 0, 2, 3, 4)))
+    hs = hs.transpose(1, 0, 2, 3, 4)                  # (B,nc,H,P,N) post-chunk states
+    h_prev = jnp.concatenate([h_init[:, None], hs[:, :-1]], axis=1)
+
+    # ---- inter-chunk contribution: y[i] += C_i . (e^{cum_i} h_prev)
+    win = jnp.exp(cum_h)                              # (B,nc,H,Q)
+    y_inter = jnp.einsum("bcqhn,bchpn,bchq->bcqhp",
+                         Ch, h_prev.astype(xh.dtype),
+                         win.astype(xh.dtype),
+                         preferred_element_type=jnp.float32)
+
+    y = (y_intra + y_inter).astype(xh.dtype).reshape(B_, nc * Q, H, Pd)
+    return y[:, :S], hs_last
+
+
+def mamba_fwd(params: Params, x, cfg, *, chunk: int = 256,
+              return_state: bool = False):
+    """Full Mamba2 block. x: (B,S,D) -> (B,S,D) [, decode cache]."""
+    B_, S, _ = x.shape
+    z, xs, Bm, Cm, dtr, di, G, N, H = _split_in_proj(x @ params["in_proj"], cfg)
+    P_ = cfg.ssm_headdim
+    # causal conv over [x, B, C]
+    xbc_raw = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    xbc = jax.nn.silu(_causal_conv(xbc_raw, params["conv_w"], params["conv_b"]))
+    xs, Bm, Cm = xbc[..., :di], xbc[..., di:di + G * N], xbc[..., di + G * N:]
+
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(params["A_log"])                     # (H,)
+    xh = xs.reshape(B_, S, H, P_)
+    y, h_last = ssd_chunked(xh, dt, A, Bm.reshape(B_, S, G, N),
+                            Cm.reshape(B_, S, G, N), chunk=chunk)
+    y = y + xh * params["D"][None, None, :, None].astype(xh.dtype)
+    y = y.reshape(B_, S, di)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = y @ params["out_proj"]
+    if return_state:
+        K = cfg.ssm_conv
+        conv = xbc_raw[:, -(K - 1):, :] if S >= K - 1 else jnp.pad(
+            xbc_raw, ((0, 0), (K - 1 - S, 0), (0, 0)))
+        return out, {"conv": conv, "ssm": h_last}
+    return out
+
+
+# --------------------------------------------------------------------------
+# recurrent decode step
+# --------------------------------------------------------------------------
+def init_mamba_cache(cfg, batch: int, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    H = di // cfg.ssm_headdim
+    G, N, K = cfg.n_ssm_groups, cfg.ssm_state, cfg.ssm_conv
+    return {
+        "conv": jnp.zeros((batch, K - 1, di + 2 * G * N), dtype),
+        "ssm": jnp.zeros((batch, H, cfg.ssm_headdim, N), jnp.float32),
+    }
+
+
+def mamba_step(params: Params, x, cache, cfg):
+    """One-token recurrent step. x: (B,1,D). Returns (y, new_cache)."""
+    B_ = x.shape[0]
+    z, xs, Bm, Cm, dtr, di, G, N, H = _split_in_proj(x @ params["in_proj"], cfg)
+    P_ = cfg.ssm_headdim
+    xbc = jnp.concatenate([xs, Bm, Cm], axis=-1)[:, 0]        # (B,C)
+    hist = jnp.concatenate([cache["conv"], xbc[:, None]], axis=1)  # (B,K,C)
+    conv_out = jnp.einsum("bkc,kc->bc", hist.astype(jnp.float32),
+                          params["conv_w"].astype(jnp.float32))
+    xbc_f = jax.nn.silu(conv_out + params["conv_b"].astype(jnp.float32)
+                        ).astype(x.dtype)
+    xs1, Bm1, Cm1 = (xbc_f[:, :di], xbc_f[:, di:di + G * N],
+                     xbc_f[:, di + G * N:])
+    dt = jax.nn.softplus(dtr[:, 0].astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    a = jnp.exp(dt * A)                                       # (B,H)
+    xh = xs1.reshape(B_, H, P_)
+    Bh = jnp.repeat(Bm1.reshape(B_, G, N), H // G, axis=1)    # (B,H,N)
+    Ch = jnp.repeat(Cm1.reshape(B_, G, N), H // G, axis=1)
+    dtx = xh * dt[..., None]
+    h = cache["ssm"] * a[..., None, None] + jnp.einsum(
+        "bhp,bhn->bhpn", dtx.astype(jnp.float32), Bh.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bhn->bhp", h, Ch.astype(jnp.float32))
+    y = y.astype(x.dtype) + xh * params["D"][None, :, None].astype(x.dtype)
+    y = y.reshape(B_, 1, di)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    new_cache = {"conv": hist[:, 1:].astype(cache["conv"].dtype), "ssm": h}
+    return y @ params["out_proj"], new_cache

@@ -1,0 +1,263 @@
+"""Mamba2 LM (attention-free) and Zamba2-style hybrid LM.
+
+Zamba2 layout: ``n_layers`` Mamba2 blocks; after every ``attn_every``-th
+block, one *shared* (weight-tied) attention+MLP block is applied.  The stack
+is scanned in groups so the shared block appears once in the HLO:
+
+    outer scan over G groups { inner scan over `attn_every` mamba blocks;
+                               shared attn block }   + scanned tail blocks
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import layers as L
+from .ssm import (init_mamba, init_mamba_cache, mamba_fwd, mamba_step)
+
+
+# --------------------------------------------------------------------------
+# blocks
+# --------------------------------------------------------------------------
+def init_mamba_block(key, cfg):
+    return {
+        "ln": L.init_rmsnorm(cfg.d_model, cfg.np_dtype),
+        "mixer": init_mamba(key, cfg),
+    }
+
+
+def mamba_block_fwd(p, x, cfg, rt):
+    return x + mamba_fwd(p["mixer"], L.rms_norm(x, p["ln"], cfg.norm_eps),
+                         cfg, chunk=rt.ssd_chunk)
+
+
+def init_shared_attn_block(key, cfg):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": L.init_rmsnorm(cfg.d_model, cfg.np_dtype),
+        "attn": L.init_attention(ks[0], cfg),
+        "ln2": L.init_rmsnorm(cfg.d_model, cfg.np_dtype),
+        "mlp": L.init_mlp(ks[1], cfg),
+    }
+
+
+def shared_attn_fwd(p, x, cfg, rt):
+    x = x + L.attention_fwd(p["attn"], L.rms_norm(x, p["ln1"], cfg.norm_eps),
+                            cfg, mode=rt.attn_mode, rt=rt)
+    x = x + L.mlp_fwd(p["mlp"], L.rms_norm(x, p["ln2"], cfg.norm_eps), cfg)
+    return rt.constrain(x, *rt.act_spec(3))
+
+
+def _group_split(cfg) -> tuple[int, int]:
+    """(#full groups, #tail layers) for the hybrid layout."""
+    if not cfg.attn_every:
+        return 0, cfg.n_layers
+    g = cfg.n_layers // cfg.attn_every
+    return g, cfg.n_layers - g * cfg.attn_every
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+def init(key, cfg):
+    k_emb, k_body, k_shared, k_head = jax.random.split(key, 4)
+    params = {
+        "embed": L.init_embedding(k_emb, cfg),
+        "final_norm": L.init_rmsnorm(cfg.d_model, cfg.np_dtype),
+    }
+    g, tail = _group_split(cfg)
+    keys = jax.random.split(k_body, cfg.n_layers)
+    if g:
+        gk = keys[: g * cfg.attn_every].reshape(g, cfg.attn_every)
+        params["groups"] = jax.vmap(jax.vmap(lambda k: init_mamba_block(k, cfg)))(gk)
+        params["shared"] = init_shared_attn_block(k_shared, cfg)
+    if tail:
+        params["tail"] = jax.vmap(lambda k: init_mamba_block(k, cfg))(
+            keys[cfg.n_layers - tail:])
+    head = L.init_lm_head(k_head, cfg)
+    if head is not None:
+        params["head"] = head
+    return params
+
+
+# --------------------------------------------------------------------------
+# forward / loss
+# --------------------------------------------------------------------------
+def _backbone(params, x, cfg, rt):
+    def mamba_body(x, lp):
+        return mamba_block_fwd(lp, x, cfg, rt), None
+
+    def plain_body(x, lp):
+        return mamba_block_fwd(lp, x, cfg, rt), None
+
+    if rt.remat:
+        mamba_body = jax.checkpoint(mamba_body, prevent_cse=False)
+
+    if "groups" in params:
+        def group_body(x, gp):
+            x, _ = lax.scan(mamba_body, x, gp)
+            x = shared_attn_fwd(params["shared"], x, cfg, rt)
+            return x, None
+        if rt.remat:
+            group_body = jax.checkpoint(group_body, prevent_cse=False)
+        x, _ = lax.scan(group_body, x, params["groups"])
+    if "tail" in params:
+        n_tail = jax.tree.leaves(params["tail"])[0].shape[0]
+        g = rt.remat_group if rt.remat else 1
+        if rt.remat and g > 1 and n_tail % g == 0:
+            # grouped remat (see transformer._scan_blocks)
+            grouped = jax.tree.map(
+                lambda a: a.reshape((n_tail // g, g) + a.shape[1:]),
+                params["tail"])
+
+            def tail_group(x, gp):
+                x, _ = lax.scan(plain_body, x, gp)
+                return x, None
+
+            tail_group = jax.checkpoint(tail_group, prevent_cse=False)
+            x, _ = lax.scan(tail_group, x, grouped)
+        else:
+            x, _ = lax.scan(mamba_body, x, params["tail"])
+    return x
+
+
+def forward(params, tokens, cfg, rt, *, embeds=None):
+    x = L.embed(params["embed"], tokens, cfg)
+    if embeds is not None:
+        x = jnp.concatenate([embeds.astype(x.dtype), x], axis=1)
+    x = rt.constrain(x, *rt.act_spec(3))
+    x = _backbone(params, x, cfg, rt)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], params.get("head"), x, cfg)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def loss(params, batch, cfg, rt):
+    from .transformer import chunked_xent, cross_entropy  # shared helpers
+    tokens, labels = batch["tokens"], batch["labels"]
+    if rt.loss_chunk:
+        x = L.embed(params["embed"], tokens, cfg)
+        x = rt.constrain(x, *rt.act_spec(3))
+        x = _backbone(params, x, cfg, rt)
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        nll = chunked_xent(x, params, labels, cfg, rt, batch.get("mask"))
+    else:
+        logits, _ = forward(params, tokens, cfg, rt)
+        nll = cross_entropy(logits, labels, batch.get("mask"))
+    return nll, {"nll": nll, "aux": jnp.zeros((), jnp.float32)}
+
+
+# --------------------------------------------------------------------------
+# serving
+# --------------------------------------------------------------------------
+def init_cache(cfg, batch: int, max_len: int, rt, dtype=None):
+    dtype = dtype or cfg.np_dtype
+    g, tail = _group_split(cfg)
+    one = init_mamba_cache(cfg, batch, dtype)
+    cache = {"len": jnp.zeros((), jnp.int32)}
+    if g:
+        cache["groups"] = jax.tree.map(
+            lambda a: jnp.zeros((g, cfg.attn_every) + a.shape, a.dtype), one)
+        hd = cfg.head_dim
+        cache["shared_k"] = jnp.zeros((g, batch, max_len, cfg.n_kv_heads, hd), dtype)
+        cache["shared_v"] = jnp.zeros((g, batch, max_len, cfg.n_kv_heads, hd), dtype)
+    if tail:
+        cache["tail"] = jax.tree.map(
+            lambda a: jnp.zeros((tail,) + a.shape, a.dtype), one)
+    return cache
+
+
+def decode_step(params, cache, tokens, cfg, rt):
+    """tokens (B,1) -> (logits, cache). O(1) state for mamba blocks; the
+    shared attention block (hybrid) reads its per-invocation KV cache."""
+    x = jnp.take(params["embed"]["table"], tokens, axis=0)
+
+    def mamba_body(x, inp):
+        lp, c = inp
+        h = L.rms_norm(x, lp["ln"], cfg.norm_eps)
+        y, nc = mamba_step(lp["mixer"], h, c, cfg)
+        return x + y, nc
+
+    new_cache = {"len": cache["len"] + 1}
+    if "groups" in params:
+        def group_body(x, inp):
+            gp, gc, ck, cv = inp
+            x, nc = lax.scan(mamba_body, x, (gp, gc))
+            h = L.rms_norm(x, params["shared"]["ln1"], cfg.norm_eps)
+            att, nk, nv = L.attention_decode(params["shared"]["attn"], h, cfg,
+                                             ck, cv, cache["len"])
+            x = x + att
+            x = x + L.mlp_fwd(params["shared"]["mlp"],
+                              L.rms_norm(x, params["shared"]["ln2"], cfg.norm_eps), cfg)
+            return x, (nc, nk, nv)
+
+        x, (ncg, nk, nv) = lax.scan(
+            group_body, x,
+            (params["groups"], cache["groups"], cache["shared_k"], cache["shared_v"]))
+        new_cache["groups"] = ncg
+        new_cache["shared_k"] = nk
+        new_cache["shared_v"] = nv
+    if "tail" in params:
+        x, nct = lax.scan(mamba_body, x, (params["tail"], cache["tail"]))
+        new_cache["tail"] = nct
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], params.get("head"), x, cfg)
+    return logits, new_cache
+
+
+def prefill(params, tokens, cfg, rt, *, max_len: int | None = None):
+    """Prompt pass -> (last logits, cache).  Chunked SSD already produces the
+    final recurrent state per block (``h_last``) and the conv cache is the
+    last K-1 pre-conv activations, so the cache is exact."""
+    x = jnp.take(params["embed"]["table"], tokens, axis=0)
+    x = rt.constrain(x, *rt.act_spec(3))
+    S = tokens.shape[1]
+
+    def mamba_body(x, lp):
+        h = L.rms_norm(x, lp["ln"], cfg.norm_eps)
+        y, st = mamba_fwd(lp["mixer"], h, cfg, chunk=rt.ssd_chunk,
+                          return_state=True)
+        return x + y, st
+
+    cache = {"len": jnp.asarray(S, jnp.int32)}
+    if "groups" in params:
+        def group_body(x, gp):
+            x, st = lax.scan(mamba_body, x, gp)
+            # shared attn with KV capture
+            h = L.rms_norm(x, params["shared"]["ln1"], cfg.norm_eps)
+            B = h.shape[0]
+            q, k, v = L._qkv(params["shared"]["attn"], h, cfg)
+            pos = jnp.arange(S)
+            if cfg.pos_emb == "rope":
+                cos, sin = L.rope_angles(pos, cfg.head_dim, cfg.rope_theta)
+                q = L.apply_rope(q, cos, sin)
+                k = L.apply_rope(k, cos, sin)
+            if rt.attn_mode == "chunked" or (rt.attn_mode == "auto"
+                                             and S > 2048):
+                o = L.chunked_attention(q, k, v, causal=True,
+                                        window=cfg.sliding_window, rt=rt)
+            else:
+                o = L.dense_attention(q, k, v, causal=True,
+                                      window=cfg.sliding_window)
+            o = o.reshape(B, S, cfg.n_heads * cfg.head_dim)
+            x = x + o @ params["shared"]["attn"]["wo"]
+            x = x + L.mlp_fwd(params["shared"]["mlp"],
+                              L.rms_norm(x, params["shared"]["ln2"], cfg.norm_eps),
+                              cfg)
+            return x, (st, k, v)
+
+        x, (gst, ks, vs) = lax.scan(group_body, x, params["groups"])
+        if max_len is not None and max_len > ks.shape[2]:
+            pad = max_len - ks.shape[2]  # (G, B, S, Hkv, hd)
+            ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        cache["groups"] = gst
+        cache["shared_k"] = ks
+        cache["shared_v"] = vs
+    if "tail" in params:
+        x, tst = lax.scan(mamba_body, x, params["tail"])
+        cache["tail"] = tst
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], params.get("head"), x[:, -1:], cfg)
+    return logits, cache

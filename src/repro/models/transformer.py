@@ -1,0 +1,281 @@
+"""Decoder-only transformer LM (dense and MoE families).
+
+Layers are *scanned*: every per-layer param leaf carries a leading
+``n_layers`` axis, so HLO size (and compile time) is O(1) in depth — a hard
+requirement for the 64-layer/61-layer dry-run cells.
+
+API (used by ``models/registry.py``):
+    init(key, cfg)                          -> params
+    forward(params, tokens, cfg, rt)        -> (logits, aux)
+    loss(params, batch, cfg, rt)            -> (loss, metrics)
+    prefill(params, tokens, cfg, rt)        -> (last_logits, cache)
+    init_cache(cfg, batch, max_len, rt)     -> cache
+    decode_step(params, cache, tokens, cfg, rt) -> (logits, cache)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import layers as L
+from . import moe as M
+
+
+# --------------------------------------------------------------------------
+# one decoder block
+# --------------------------------------------------------------------------
+def init_block(key, cfg):
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln1": L.init_rmsnorm(cfg.d_model, cfg.np_dtype),
+        "attn": L.init_attention(ks[0], cfg),
+        "ln2": L.init_rmsnorm(cfg.d_model, cfg.np_dtype),
+    }
+    if cfg.n_experts:
+        p["moe"] = M.init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = L.init_mlp(ks[2], cfg)
+    return p
+
+
+def block_fwd(p, x, cfg, rt, *, return_kv: bool = False):
+    """Full-sequence block. x: (B,S,D) -> (x', aux[, (k,v)])."""
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    if return_kv:
+        B, S, _ = h.shape
+        q, k, v = L._qkv(p["attn"], h, cfg)
+        pos = jnp.arange(S)
+        if cfg.pos_emb == "rope":
+            cos, sin = L.rope_angles(pos, cfg.head_dim, cfg.rope_theta)
+            q = L.apply_rope(q, cos, sin)
+            k = L.apply_rope(k, cos, sin)
+        mode = rt.attn_mode
+        if mode == "auto":
+            mode = "chunked" if S > 2048 else "dense"
+        if mode == "chunked":
+            o = L.chunked_attention(q, k, v, causal=True,
+                                    window=cfg.sliding_window, rt=rt)
+        else:
+            o = L.dense_attention(q, k, v, causal=True,
+                                  window=cfg.sliding_window)
+        attn_out = o.reshape(B, S, cfg.n_heads * cfg.head_dim) @ p["attn"]["wo"]
+        kv = (k, v)
+    else:
+        attn_out = L.attention_fwd(p["attn"], h, cfg, mode=rt.attn_mode, rt=rt)
+        kv = None
+    x = x + attn_out
+    x = rt.constrain(x, *rt.act_spec(3))
+    h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.n_experts:
+        y, aux = M.moe_fwd(p["moe"], h, cfg, rt)
+    else:
+        y, aux = L.mlp_fwd(p["mlp"], h, cfg), jnp.zeros((), jnp.float32)
+    x = x + y
+    x = rt.constrain(x, *rt.act_spec(3))
+    return (x, aux, kv) if return_kv else (x, aux)
+
+
+def block_decode(p, x, cfg, rt, cache_k, cache_v, cache_len):
+    """One-token block step with KV cache update."""
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    attn_out, nk, nv = L.attention_decode(p["attn"], h, cfg,
+                                          cache_k, cache_v, cache_len)
+    x = x + attn_out
+    h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.n_experts:
+        y, _ = M.moe_fwd(p["moe"], h, cfg, rt)
+    else:
+        y = L.mlp_fwd(p["mlp"], h, cfg)
+    return x + y, nk, nv
+
+
+# --------------------------------------------------------------------------
+# full model
+# --------------------------------------------------------------------------
+def init(key, cfg):
+    k_emb, k_layers, k_head = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    params = {
+        "embed": L.init_embedding(k_emb, cfg),
+        "layers": jax.vmap(lambda k: init_block(k, cfg))(layer_keys),
+        "final_norm": L.init_rmsnorm(cfg.d_model, cfg.np_dtype),
+    }
+    head = L.init_lm_head(k_head, cfg)
+    if head is not None:
+        params["head"] = head
+    return params
+
+
+def _scan_blocks(params, x, cfg, rt, *, return_kv: bool = False):
+    def body(carry, lp):
+        x, aux = carry
+        if return_kv:
+            x, a, kv = block_fwd(lp, x, cfg, rt, return_kv=True)
+            return (x, aux + a), kv
+        x, a = block_fwd(lp, x, cfg, rt)
+        return (x, aux + a), None
+
+    init = (x, jnp.zeros((), jnp.float32))
+    g = rt.remat_group if rt.remat else 1
+    if rt.remat and g > 1 and not return_kv:
+        # grouped remat: save residuals every g layers only — HBM for saved
+        # activations drops g×, each group's interior is recomputed once in
+        # the backward pass.  Layer counts that don't divide g (61 is prime)
+        # run the remainder as per-layer-checkpointed tail layers.
+        n_grp = cfg.n_layers // g
+        n_tail = cfg.n_layers - n_grp * g
+        head = jax.tree.map(lambda a: a[:n_grp * g], params["layers"])
+        grouped = jax.tree.map(
+            lambda a: a.reshape((n_grp, g) + a.shape[1:]), head)
+
+        def group_body(carry, gp):
+            carry, _ = lax.scan(body, carry, gp)
+            return carry, None
+
+        group_body = jax.checkpoint(group_body, prevent_cse=False)
+        (x, aux), _ = lax.scan(group_body, init, grouped)
+        if n_tail:
+            tail = jax.tree.map(lambda a: a[n_grp * g:], params["layers"])
+            tail_body = jax.checkpoint(body, prevent_cse=False)
+            (x, aux), _ = lax.scan(tail_body, (x, aux), tail)
+        return x, aux, None
+
+    if rt.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    (x, aux), kvs = lax.scan(body, init, params["layers"])
+    return x, aux, kvs
+
+
+def forward(params, tokens, cfg, rt, *, embeds=None):
+    """tokens (B,S) int32 -> (logits (B,S,V) fp32, aux). ``embeds`` lets the
+    VLM/audio frontends inject precomputed embeddings for a prefix."""
+    x = L.embed(params["embed"], tokens, cfg)
+    if embeds is not None:
+        x = jnp.concatenate([embeds.astype(x.dtype), x], axis=1)
+    x = rt.constrain(x, *rt.act_spec(3))
+    x, aux, _ = _scan_blocks(params, x, cfg, rt)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], params.get("head"), x, cfg)
+    return logits, aux
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Mean token NLL in fp32. logits (B,S,V), labels (B,S) int32."""
+    lse = jax.scipy.special.logsumexp(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll.astype(jnp.float32)
+    if mask is None:
+        return nll.mean()
+    m = mask.astype(jnp.float32)
+    return (nll * m).sum() / jnp.maximum(m.sum(), 1.0)
+
+
+def chunked_xent(x, params, labels, cfg, rt, mask=None):
+    """Cross-entropy without materialising (B,S,V): scan over S chunks.
+
+    Peak logits memory drops from B*S*V to B*chunk*V — the difference between
+    fitting and not fitting the 150k-vocab train cells in HBM.
+    """
+    B, S, D = x.shape
+    c = rt.loss_chunk
+    nc = -(-S // c)
+    pad = nc * c - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        pm = jnp.pad(mask if mask is not None
+                     else jnp.ones((B, S), bool), ((0, 0), (0, pad)))
+    else:
+        pm = mask if mask is not None else jnp.ones((B, S), bool)
+    xc = x.reshape(B, nc, c, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, nc, c).transpose(1, 0, 2)
+    mc = pm.reshape(B, nc, c).transpose(1, 0, 2)
+
+    def body(carry, inp):
+        tot, cnt = carry
+        xi, li, mi = inp
+        logits = L.unembed(params["embed"], params.get("head"), xi, cfg)
+        lse = jax.scipy.special.logsumexp(logits.astype(jnp.float32), -1)
+        ll = jnp.take_along_axis(logits, li[..., None], -1)[..., 0]
+        nll = (lse - ll.astype(jnp.float32)) * mi.astype(jnp.float32)
+        return (tot + nll.sum(), cnt + mi.sum()), None
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    (tot, cnt), _ = lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (xc, lc, mc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def loss(params, batch, cfg, rt):
+    """batch: {tokens (B,S), labels (B,S)[, mask]} -> (scalar, metrics)."""
+    tokens, labels = batch["tokens"], batch["labels"]
+    mask = batch.get("mask")
+    if rt.loss_chunk:
+        x = L.embed(params["embed"], tokens, cfg)
+        x = rt.constrain(x, *rt.act_spec(3))
+        x, aux, _ = _scan_blocks(params, x, cfg, rt)
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        nll = chunked_xent(x, params, labels, cfg, rt, mask)
+    else:
+        logits, aux = forward(params, tokens, cfg, rt)
+        nll = cross_entropy(logits, labels, mask)
+    total = nll + cfg.aux_loss_coef * aux
+    return total, {"nll": nll, "aux": aux}
+
+
+# --------------------------------------------------------------------------
+# serving: prefill + decode
+# --------------------------------------------------------------------------
+def init_cache(cfg, batch: int, max_len: int, rt, dtype=None):
+    dtype = dtype or cfg.np_dtype
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params, tokens, cfg, rt, *, embeds=None, max_len: int | None = None):
+    """Run the prompt, return (last-position logits, filled cache).
+
+    ``max_len`` pads the KV cache's sequence axis so ``decode_step`` can
+    append up to ``max_len - prompt_len`` generated tokens."""
+    x = L.embed(params["embed"], tokens, cfg)
+    if embeds is not None:
+        x = jnp.concatenate([embeds.astype(x.dtype), x], axis=1)
+    x = rt.constrain(x, *rt.act_spec(3))
+    x, aux, kvs = _scan_blocks(params, x, cfg, rt, return_kv=True)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    last = x[:, -1:, :]
+    logits = L.unembed(params["embed"], params.get("head"), last, cfg)
+    k, v = kvs
+    if max_len is not None and max_len > k.shape[2]:
+        pad = max_len - k.shape[2]  # k/v: (L, B, S, Hkv, hd)
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    cache = {"k": k, "v": v,
+             "len": jnp.asarray(x.shape[1], jnp.int32)}
+    return logits, cache
+
+
+def decode_step(params, cache, tokens, cfg, rt):
+    """tokens (B,1) -> (logits (B,1,V), cache). Scans layers, carries x."""
+    x = jnp.take(params["embed"]["table"], tokens, axis=0)
+    if cfg.pos_emb == "abs":
+        x = x + lax.dynamic_slice_in_dim(
+            params["embed"]["pos"], cache["len"], 1, axis=0)
+    x = rt.constrain(x, *rt.act_spec(3))
+
+    def body(x, inp):
+        lp, ck, cv = inp
+        x, nk, nv = block_decode(lp, x, cfg, rt, ck, cv, cache["len"])
+        return x, (nk, nv)
+
+    x, (nk, nv) = lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], params.get("head"), x, cfg)
+    new_cache = {"k": nk, "v": nv, "len": cache["len"] + 1}
+    return logits, new_cache

@@ -1,0 +1,58 @@
+"""InternVL2-style VLM: stubbed ViT frontend + LM backbone.
+
+Per the assignment, the vision frontend is a STUB: ``input_specs`` provides
+precomputed patch embeddings (B, n_patches, frontend_dim); a learned
+projector maps them into the backbone's embedding space.  ``seq_len`` counts
+*backbone* tokens: n_patches image tokens + (seq_len - n_patches) text.
+Loss is computed on text positions only.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import transformer as T
+
+
+def init(key, cfg):
+    k_proj, k_lm = jax.random.split(key)
+    params = T.init(k_lm, cfg)
+    params["projector"] = {
+        "w": L._dense_init(k_proj, (cfg.frontend_dim, cfg.d_model), cfg.np_dtype),
+        "b": jnp.zeros((cfg.d_model,), cfg.np_dtype),
+    }
+    return params
+
+
+def _project(params, patches, cfg):
+    return patches.astype(cfg.np_dtype) @ params["projector"]["w"] + \
+        params["projector"]["b"]
+
+
+def forward(params, batch, cfg, rt):
+    embeds = _project(params, batch["patches"], cfg)
+    return T.forward(params, batch["tokens"], cfg, rt, embeds=embeds)
+
+
+def loss(params, batch, cfg, rt):
+    """batch: {patches (B,P,F), tokens (B,S_text), labels (B,S_text)}."""
+    logits, aux = forward(params, batch, cfg, rt)
+    text_logits = logits[:, batch["patches"].shape[1]:, :]
+    nll = T.cross_entropy(text_logits, batch["labels"], batch.get("mask"))
+    total = nll + cfg.aux_loss_coef * aux
+    return total, {"nll": nll, "aux": aux}
+
+
+def init_cache(cfg, batch: int, max_len: int, rt, dtype=None):
+    return T.init_cache(cfg, batch, max_len, rt, dtype)
+
+
+def prefill(params, batch, cfg, rt, *, max_len: int | None = None):
+    embeds = _project(params, batch["patches"], cfg)
+    return T.prefill(params, batch["tokens"], cfg, rt, embeds=embeds,
+                     max_len=max_len)
+
+
+def decode_step(params, cache, tokens, cfg, rt):
+    return T.decode_step(params, cache, tokens, cfg, rt)

@@ -1,0 +1,2 @@
+from .analysis import CellRoofline, analyze_cell, load_artifacts  # noqa: F401
+from .constants import HBM_BW, ICI_BW, PEAK_BF16  # noqa: F401

@@ -1,0 +1,125 @@
+"""Roofline analysis over the dry-run artifacts (deliverable g).
+
+For every (arch × shape × mesh) cell this derives, from the compiled HLO
+(trip-count-aware ``hlo_walk`` numbers recorded by ``launch/dryrun.py``):
+
+    compute_s    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory_s     = HLO_bytes_per_device / HBM_bw
+    collective_s = collective_wire_bytes_per_device / (links × link_bw)
+
+plus MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE) and the
+MODEL/HLO ratio (remat & padding waste), the dominant term, and a one-line
+"what would move it" recommendation.
+"""
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass
+
+from ..configs import SHAPES, get_config
+from .constants import HBM_BW, ICI_BW, ICI_LINKS, PEAK_BF16
+
+ART_DIR = os.environ.get(
+    "REPRO_DRYRUN_DIR",
+    os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                 "artifacts", "dryrun"))
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """6·N·D with N = total (dense) or active (MoE) params, D = tokens
+    processed per step; decode steps process global_batch tokens."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = cfg.param_count(active_only=bool(cfg.n_experts))
+    if shape.kind == "train":
+        tokens, mult = shape.tokens, 6.0
+    elif shape.kind == "prefill":
+        tokens, mult = shape.tokens, 2.0
+    else:
+        tokens, mult = float(shape.global_batch), 2.0
+    return mult * n * tokens
+
+
+@dataclass
+class CellRoofline:
+    cell: str
+    arch: str
+    shape: str
+    mesh: str
+    n_dev: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    hlo_flops_per_dev: float
+    useful_ratio: float          # MODEL / (HLO × devices)
+    peak_fraction: float         # compute_s / max(term)s — roofline fraction
+    hbm_args_gib: float
+    hbm_temp_gib: float
+    recommendation: str
+
+    def as_row(self) -> list:
+        return [self.arch, self.shape, self.mesh,
+                f"{self.compute_s*1e3:.1f}", f"{self.memory_s*1e3:.1f}",
+                f"{self.collective_s*1e3:.1f}", self.dominant,
+                f"{self.useful_ratio:.2f}", f"{self.peak_fraction:.2f}",
+                f"{self.hbm_args_gib + self.hbm_temp_gib:.1f}"]
+
+
+_RECS = {
+    "compute": "compute-bound: raise MXU utilisation (pad-free tiles, "
+               "larger per-device matmuls — widen TP shards or batch)",
+    "memory": "HBM-bound: cut activation traffic (flash/custom-VJP, fewer "
+              "saved residuals, fused optimizer) or shard reads wider",
+    "collective": "ICI-bound: reduce wire bytes (coarser FSDP gathers, "
+                  "a2a instead of psum, gradient compression) or overlap "
+                  "collectives with compute",
+}
+
+
+def analyze_cell(rec: dict) -> CellRoofline:
+    walk = rec["walk"]
+    n_dev = 1
+    for v in rec["mesh_shape"].values():
+        n_dev *= v
+    comp = walk["flops"] / PEAK_BF16
+    mem = walk["bytes_accessed"] / HBM_BW
+    coll = walk["total_wire_bytes"] / (ICI_BW * ICI_LINKS)
+    terms = {"compute": comp, "memory": mem, "collective": coll}
+    dom = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"])
+    useful = mf / max(walk["flops"] * n_dev, 1.0)
+    peak_frac = comp / max(max(terms.values()), 1e-12)
+    memo = rec.get("memory", {})
+    return CellRoofline(
+        cell=rec["cell"], arch=rec["arch"], shape=rec["shape"],
+        mesh=rec["mesh"], n_dev=n_dev,
+        compute_s=comp, memory_s=mem, collective_s=coll, dominant=dom,
+        model_flops=mf, hlo_flops_per_dev=walk["flops"],
+        useful_ratio=useful, peak_fraction=peak_frac,
+        hbm_args_gib=memo.get("argument_size_in_bytes", 0) / 2**30,
+        hbm_temp_gib=memo.get("temp_size_in_bytes", 0) / 2**30,
+        recommendation=_RECS[dom],
+    )
+
+
+def load_artifacts(art_dir: str = ART_DIR, mesh: str | None = None
+                   ) -> list[dict]:
+    recs = []
+    if not os.path.isdir(art_dir):
+        return recs
+    for name in sorted(os.listdir(art_dir)):
+        if not name.endswith(".json"):
+            continue
+        with open(os.path.join(art_dir, name)) as f:
+            rec = json.load(f)
+        if not rec.get("ok"):
+            continue
+        if mesh and rec.get("mesh") != mesh:
+            continue
+        if rec["cell"].count("__") > 2:
+            continue  # tagged (hillclimb) artifacts are reported separately
+        recs.append(rec)
+    return recs

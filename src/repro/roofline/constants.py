@@ -1,0 +1,8 @@
+"""Hardware constants for the roofline terms (assignment-specified v5e)."""
+from ..tpu.chip import V5E
+
+PEAK_BF16 = V5E.peak_flops_bf16          # 197e12 FLOP/s per chip
+HBM_BW = V5E.hbm_bytes_per_s             # 819e9  B/s per chip
+ICI_BW = V5E.ici_link_bytes_per_s        # 50e9   B/s per link
+ICI_LINKS = V5E.ici_links
+HBM_CAP = V5E.hbm_capacity               # 16 GiB

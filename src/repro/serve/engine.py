@@ -1,0 +1,105 @@
+"""Batched serving engine: prefill + decode loop over a request batch.
+
+The serve-side counterpart of ``launch/train.py``:
+
+* ``prefill`` runs the whole (padded) prompt batch once and builds the KV
+  (or SSM-state) cache with headroom ``max_new_tokens``;
+* ``decode`` iterates single-token steps under jit (cache donated — the
+  decode loop is allocation-free after the first step);
+* sampling: greedy or temperature; stop tokens honoured per slot;
+* static batching: requests are right-aligned padded to the batch's max
+  prompt (the assignment's serve shapes are fixed-batch; continuous
+  batching would slot-swap finished rows — noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models.registry import get_model
+from ..models.runtime import Runtime
+
+
+@dataclass
+class GenerationResult:
+    tokens: list[list[int]]
+    n_prefill: int
+    n_steps: int
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+
+    @property
+    def tokens_per_s(self) -> float:
+        n = sum(len(t) for t in self.tokens)
+        return n / self.decode_s if self.decode_s else float("inf")
+
+
+@dataclass
+class ServeEngine:
+    cfg: ModelConfig
+    rt: Runtime = field(default_factory=Runtime)
+    temperature: float = 0.0
+    seed: int = 0
+
+    def __post_init__(self):
+        self.api = get_model(self.cfg)
+        self._decode = jax.jit(
+            lambda p, c, t: self.api.decode_step(p, c, t, self.rt),
+            donate_argnums=(1,))
+        self._prefill = jax.jit(
+            lambda p, b, ml: self.api.prefill(p, b, self.rt, max_len=ml),
+            static_argnums=(2,))
+
+    def _sample(self, logits, key):
+        logits = logits[:, -1, :self.cfg.vocab_size]
+        if self.temperature <= 0.0:
+            return jnp.argmax(logits, -1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / self.temperature, -1).astype(jnp.int32)
+
+    def generate(self, params, prompts: list[list[int]], *,
+                 max_new_tokens: int = 32,
+                 stop_token: int | None = None,
+                 extra_inputs: dict | None = None) -> GenerationResult:
+        import time
+        B = len(prompts)
+        Lp = max(len(p) for p in prompts)
+        toks = np.zeros((B, Lp), np.int32)
+        for i, p in enumerate(prompts):          # right-align (causal LM)
+            toks[i, Lp - len(p):] = p
+        batch = {"tokens": jnp.asarray(toks)}
+        if extra_inputs:
+            batch.update(extra_inputs)
+        max_len = Lp + max_new_tokens + 1
+
+        t0 = time.time()
+        logits, cache = self._prefill(params, batch, max_len)
+        logits.block_until_ready()
+        t1 = time.time()
+
+        key = jax.random.key(self.seed)
+        out = [[] for _ in range(B)]
+        done = np.zeros(B, bool)
+        tok = self._sample(logits, key)
+        steps = 0
+        for step in range(max_new_tokens):
+            t_host = np.asarray(tok)
+            for i in range(B):
+                if not done[i]:
+                    out[i].append(int(t_host[i]))
+                    if stop_token is not None and t_host[i] == stop_token:
+                        done[i] = True
+            steps += 1
+            if done.all():
+                break
+            key, sub = jax.random.split(key)
+            logits, cache = self._decode(params, cache, tok[:, None])
+            tok = self._sample(logits, sub)
+        jax.block_until_ready(tok)
+        t2 = time.time()
+        return GenerationResult(tokens=out, n_prefill=Lp, n_steps=steps,
+                                prefill_s=t1 - t0, decode_s=t2 - t1)

@@ -1,0 +1,73 @@
+"""Plan-space DSE (paper use case 3, TPU form).
+
+Where the FPGA DSE explores CE arrangements, MCCM-TPU explores
+ParallelPlans: FSDP on/off, sequence-sharded activations, remat grouping,
+MoE dispatch strategy, loss chunk.  The analytical cost model ranks
+thousands of plans in milliseconds; the top plan can then be *verified*
+with one XLA dry-run (the "synthesis" of this domain) — the same
+fast-model-then-validate loop as the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from dataclasses import dataclass
+
+from ..configs.base import ModelConfig, ShapeSpec
+from ..launch.plans import ParallelPlan, default_plan
+from .chip import ChipSpec, V5E
+from .cost_model import CostEstimate, estimate
+
+
+@dataclass
+class RankedPlan:
+    plan: ParallelPlan
+    est: CostEstimate
+
+    @property
+    def step_s(self) -> float:
+        """Serial roofline bound: max of the three terms (perfect overlap
+        would approach this; summing is the no-overlap bound)."""
+        return max(self.est.compute_s, self.est.memory_s,
+                   self.est.collective_s)
+
+
+def candidate_plans(cfg: ModelConfig, shape: ShapeSpec, mesh) -> list[ParallelPlan]:
+    base = default_plan(cfg, shape, mesh)
+    cands: list[ParallelPlan] = []
+    if shape.kind == "train":
+        fsdp_opts = [(), tuple(base.dp_axes)]
+        act_opts = ["none", "seq"]
+        remat_opts = [(True, 1), (True, 2), (True, 4), (True, 8), (False, 1)]
+        moe_opts = (["ep_a2a", "ep"] if cfg.n_experts else [base.moe_impl])
+        chunk_opts = [0, 512, 2048]
+        for fsdp, act, (rm, g), moe, ck in itertools.product(
+                fsdp_opts, act_opts, remat_opts, moe_opts, chunk_opts):
+            cands.append(dataclasses.replace(
+                base, fsdp_axes=fsdp, act_shard=act, remat=rm,
+                remat_group=g, moe_impl=moe, loss_chunk=ck,
+                name=f"{cfg.name}:{shape.name}:fsdp{len(fsdp)}-{act}-g{g}"
+                     f"-{moe}-ck{ck}"))
+    else:
+        fsdp_opts = [(), tuple(base.dp_axes)]
+        moe_opts = (["ep_a2a", "ep"] if cfg.n_experts else [base.moe_impl])
+        for fsdp, moe in itertools.product(fsdp_opts, moe_opts):
+            cands.append(dataclasses.replace(
+                base, fsdp_axes=fsdp, moe_impl=moe,
+                name=f"{cfg.name}:{shape.name}:fsdp{len(fsdp)}-{moe}"))
+    return cands
+
+
+def rank(cfg: ModelConfig, shape: ShapeSpec, mesh,
+         chip: ChipSpec = V5E) -> list[RankedPlan]:
+    """Evaluate every candidate plan analytically; feasible-first, fastest
+    first."""
+    out = [RankedPlan(p, estimate(cfg, shape, p, mesh, chip))
+           for p in candidate_plans(cfg, shape, mesh)]
+    out.sort(key=lambda r: (not r.est.fits, r.step_s))
+    return out
+
+
+def best_plan(cfg: ModelConfig, shape: ShapeSpec, mesh,
+              chip: ChipSpec = V5E) -> RankedPlan:
+    return rank(cfg, shape, mesh, chip)[0]

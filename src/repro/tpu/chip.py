@@ -1,0 +1,51 @@
+"""TPU chip + pod model (v5e-class, per the assignment's constants).
+
+The FPGA DeviceSpec analog one level up: where MCCM distributes DSPs/BRAM
+among CEs, MCCM-TPU distributes chips/HBM among parallelism axes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ChipSpec:
+    name: str = "tpu-v5e"
+    peak_flops_bf16: float = 197e12      # MXU, bf16
+    hbm_bytes_per_s: float = 819e9
+    hbm_capacity: int = 16 * 2**30       # 16 GiB
+    ici_link_bytes_per_s: float = 50e9   # per link
+    ici_links: int = 4                   # 2D torus: +/-x, +/-y
+    mxu_tile: int = 128                  # systolic array edge
+    vreg_lanes: int = 128
+    vreg_sublanes: int = 8
+    vmem_bytes: int = 128 * 2**20
+
+    def mxu_pad(self, d: int) -> int:
+        """Eq. 1's ceil-div underutilisation, TPU form: dims are processed
+        in 128-wide tiles; a dim of d costs ceil(d/128)*128 lanes."""
+        t = self.mxu_tile
+        return -(-max(d, 1) // t) * t
+
+
+V5E = ChipSpec()
+
+
+@dataclass(frozen=True)
+class PodSpec:
+    chip: ChipSpec = V5E
+    chips: int = 256                     # 16x16 per pod
+    pods: int = 1
+    dci_bytes_per_s: float = 25e9        # inter-pod (data-center) per chip
+
+    @property
+    def total_chips(self) -> int:
+        return self.chips * self.pods
+
+    @property
+    def total_hbm(self) -> int:
+        return self.total_chips * self.chip.hbm_capacity
+
+
+SINGLE_POD = PodSpec()
+MULTI_POD = PodSpec(pods=2)

@@ -1,0 +1,123 @@
+"""Post-SPMD HLO statistics: collective bytes, op census, remat waste.
+
+``compiled.cost_analysis()`` gives FLOPs and HBM bytes but *not* collective
+traffic — we recover it by parsing the optimized (post-partitioning) HLO
+text for all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops and summing operand sizes.
+
+Byte conventions (documented in EXPERIMENTS.md §Roofline):
+* ``operand_bytes``  — sum of input-shape bytes of each collective op, per
+  device (what the op touches);
+* ``wire_bytes``     — ring-algorithm estimate of bytes a device actually
+  moves: all-reduce 2x(n-1)/n, all-gather/reduce-scatter (n-1)/n,
+  all-to-all (n-1)/n, collective-permute 1x.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# op line:  %name = <shape or tuple> op-name(...)
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+    r"([a-z0-9\-]+)(?:-start|-done)?\(", re.MULTILINE)
+
+_REPLICA_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_REPLICA_RE2 = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def shape_bytes(text: str) -> int:
+    """Total bytes of all array shapes mentioned in ``text``."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    operand_bytes: dict[str, int] = field(default_factory=lambda: defaultdict(int))
+    wire_bytes: dict[str, int] = field(default_factory=lambda: defaultdict(int))
+    counts: dict[str, int] = field(default_factory=lambda: defaultdict(int))
+
+    @property
+    def total_operand(self) -> int:
+        return sum(self.operand_bytes.values())
+
+    @property
+    def total_wire(self) -> int:
+        return sum(self.wire_bytes.values())
+
+    def as_dict(self) -> dict:
+        return {
+            "operand_bytes": dict(self.operand_bytes),
+            "wire_bytes": dict(self.wire_bytes),
+            "counts": dict(self.counts),
+            "total_operand": self.total_operand,
+            "total_wire": self.total_wire,
+        }
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _REPLICA_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _REPLICA_RE2.search(line)
+    if m:  # iota form [groups, group_size]
+        return int(m.group(2))
+    return default
+
+
+def collective_stats(hlo_text: str, n_devices: int = 1) -> CollectiveStats:
+    """Scan optimized HLO for collective ops; sizes are per-device."""
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        s = line.lstrip()
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        shape_txt, op = m.group(1), m.group(2)
+        if op not in _COLLECTIVES:
+            continue
+        if "-done" in s.split("=", 1)[1][:80] and f"{op}-done" in s:
+            continue  # count the -start, not the -done
+        size = shape_bytes(shape_txt)
+        n = _group_size(line, n_devices)
+        frac = (n - 1) / n if n > 1 else 0.0
+        stats.counts[op] += 1
+        stats.operand_bytes[op] += size
+        if op == "all-reduce":
+            stats.wire_bytes[op] += int(2 * size * frac)
+        elif op == "collective-permute":
+            stats.wire_bytes[op] += size
+        else:  # all-gather (output-sized), reduce-scatter/a2a (input-sized)
+            stats.wire_bytes[op] += int(size * frac)
+    return stats
+
+
+def op_census(hlo_text: str, top: int = 20) -> list[tuple[str, int]]:
+    counts: dict[str, int] = defaultdict(int)
+    for m in _OP_RE.finditer(hlo_text):
+        counts[m.group(2)] += 1
+    return sorted(counts.items(), key=lambda kv: -kv[1])[:top]
+
+
+def fusion_count(hlo_text: str) -> int:
+    return hlo_text.count(" fusion(")

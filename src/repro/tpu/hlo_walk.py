@@ -1,0 +1,325 @@
+"""Trip-count-aware cost extraction from optimized HLO text.
+
+``compiled.cost_analysis()`` counts each ``while`` (lax.scan) body ONCE —
+for a 61-layer scanned transformer that under-reports FLOPs and collective
+bytes by ~61x.  This walker parses the post-SPMD HLO, builds the
+computation call graph, and multiplies every while body by its
+``backend_config known_trip_count`` so the roofline terms reflect what a
+device actually executes.
+
+Extracted per entry module (all **per-device**, since the module is the
+SPMD-partitioned program of one device):
+
+* ``flops``          — 2*prod(out)*prod(contracting) per ``dot``,
+                       2*prod(out)*prod(kernel)/out_features per
+                       ``convolution`` (grouped convs handled);
+* ``bytes``          — Σ (operand bytes + output bytes) over compute ops —
+                       the fusion-boundary HBM-traffic model (intra-fusion
+                       temporaries are free, boundaries pay);
+* ``collectives``    — operand / wire bytes per collective kind (ring
+                       estimates as in :mod:`hlo_stats`), trip-multiplied;
+* ``transcendentals``— exp/log/tanh/... element counts (VPU term).
+"""
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0, "s2": 1, "u2": 1,
+}
+
+# one array shape like  bf16[16,256]{1,0}  (layout optional)
+_ARR = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+# computation header:  %name (args) -> ret {     /  ENTRY %name (...)
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+# op line:  [ROOT] %name = <shape(s)> opcode(operands), attrs
+_OP = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w.\-]+)\s*=\s*"
+    r"(?P<shape>\([^)]*\)|[a-z][a-z0-9]*\[[0-9,]*\](?:\{[0-9,a-zA-Z:()_\s]*\})?)\s+"
+    r"(?P<op>[\w\-]+)\((?P<args>.*)$")
+_OPERAND = re.compile(r"%([\w.\-]+)")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS = re.compile(r"(?:calls|body|to_apply)=%?([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_LHS_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_LHS_BATCH = re.compile(r"lhs_batch_dims=\{([0-9,]*)\}")
+_DIM_LABELS = re.compile(r"dim_labels=([a-z0-9?]+)_([a-z0-9?]+)->([a-z0-9?]+)")
+_FEATURE_GROUPS = re.compile(r"feature_group_count=(\d+)")
+_REPLICA_ITOA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_REPLICA_LIST = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_TRANSCENDENTAL = {"exponential", "log", "tanh", "rsqrt", "sqrt", "power",
+                   "logistic", "sine", "cosine", "exponential-minus-one",
+                   "log-plus-one", "erf", "atan2"}
+# ops that don't move data at run time
+_FREE = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+         "after-all", "partition-id", "replica-id", "iota", "opt-barrier",
+         "custom-call"}
+
+# HBM-traffic model: the CPU backend barely fuses, so charging every op
+# boundary models *CPU* fusion, wildly over-counting what XLA-TPU (which
+# fuses elementwise/convert/broadcast chains into producers/consumers)
+# would move.  Only ops with real data movement on TPU pay bytes; the rest
+# are assumed fused.  This is the documented approximation of
+# EXPERIMENTS.md §Roofline (validated against the analytical model).
+_BYTES_OPS = {"dot", "convolution", "copy", "transpose", "dynamic-slice",
+              "dynamic-update-slice", "gather", "scatter", "reduce",
+              "reduce-window", "sort", "pad", "concatenate", "reverse",
+              "slice", "rng", "rng-bit-generator", "cholesky",
+              "triangular-solve", "fft", "select-and-scatter"}
+
+
+def _shape_info(txt: str) -> tuple[int, tuple[int, ...]]:
+    """(bytes, dims) of one (possibly tuple) shape string."""
+    total, dims = 0, ()
+    for dt, ds in _ARR.findall(txt):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if ds:
+            for d in ds.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+        dims = tuple(int(d) for d in ds.split(",")) if ds else ()
+    return total, dims
+
+
+@dataclass
+class _Op:
+    name: str
+    op: str
+    out_bytes: int
+    out_dims: tuple[int, ...]
+    line: str
+
+
+@dataclass
+class _Computation:
+    name: str
+    ops: list[_Op] = field(default_factory=list)
+    # locally accumulated costs (children charged via edges)
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    transcendentals: float = 0.0
+    coll_operand: dict = field(default_factory=lambda: defaultdict(float))
+    coll_wire: dict = field(default_factory=lambda: defaultdict(float))
+    coll_count: dict = field(default_factory=lambda: defaultdict(float))
+    edges: list[tuple[str, float]] = field(default_factory=list)  # (callee, mult)
+
+
+def _group_size(line: str, default: int = 1) -> int:
+    m = _REPLICA_LIST.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _REPLICA_ITOA.search(line)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+def parse_hlo(text: str) -> dict[str, _Computation]:
+    comps: dict[str, _Computation] = {}
+    entry: str | None = None
+    cur: _Computation | None = None
+    shapes: dict[str, tuple[int, tuple[int, ...]]] = {}
+
+    for raw in text.splitlines():
+        hdr = _COMP_HDR.match(raw.strip())
+        if hdr:
+            cur = _Computation(name=hdr.group(2))
+            comps[cur.name] = cur
+            if hdr.group(1):
+                entry = cur.name
+            shapes = {}
+            continue
+        if cur is None:
+            continue
+        if raw.strip() == "}":
+            cur = None
+            continue
+        m = _OP.match(raw)
+        if not m:
+            continue
+        name, shape_txt, op = m.group("name"), m.group("shape"), m.group("op")
+        out_bytes, out_dims = _shape_info(shape_txt)
+        shapes[name] = (out_bytes, out_dims)
+        base_op = re.sub(r"-(start|done|update)$", "", op)
+
+        # --- call edges ---
+        if op == "while":
+            t = _TRIP.search(raw)
+            trip = float(t.group(1)) if t else 1.0
+            c = _CALLS.search(raw)  # body=%comp
+            if c:
+                cur.edges.append((c.group(1), trip))
+            # carry is aliased in place; traffic is modelled by the body's
+            # copies / dynamic-(update-)slices, not the while op itself
+            continue
+        if op in ("fusion", "call", "async-start"):
+            c = _CALLS.search(raw)
+            if c:
+                cur.edges.append((c.group(1), 1.0))
+        if op == "conditional":
+            b = _BRANCHES.search(raw)
+            if b:
+                for br in _OPERAND.findall(b.group(1)):
+                    cur.edges.append((br, 1.0))
+
+        # --- operand bytes (locally defined names only) ---
+        operand_bytes = 0
+        args_txt = m.group("args")
+        # cut attrs after the closing paren of the operand list: heuristic —
+        # operands are leading %refs before any ), attr
+        operand_refs = _OPERAND.findall(args_txt.split("),", 1)[0])
+        for ref in operand_refs:
+            if ref in shapes:
+                operand_bytes += shapes[ref][0]
+
+        # slicing ops touch the *slice*, not the whole (aliased) buffer —
+        # critical for scan-stacked (L, ...) tensors or the count explodes L^2
+        if op == "dynamic-slice":
+            cur.bytes_accessed += 2 * out_bytes        # read slice + write
+            continue
+        if op == "dynamic-update-slice":
+            upd = (shapes[operand_refs[1]][0]
+                   if len(operand_refs) > 1 and operand_refs[1] in shapes
+                   else out_bytes)
+            cur.bytes_accessed += 2 * upd              # read update + write slice
+            continue
+
+        if op.endswith("-done"):
+            continue  # counted at -start
+
+        # --- collectives ---
+        if base_op in _COLLECTIVES:
+            n = _group_size(raw)
+            frac = (n - 1) / n if n > 1 else 0.0
+            size = max(out_bytes, operand_bytes)
+            cur.coll_count[base_op] += 1
+            cur.coll_operand[base_op] += operand_bytes or out_bytes
+            if base_op == "all-reduce":
+                cur.coll_wire[base_op] += 2 * size * frac
+            elif base_op == "collective-permute":
+                cur.coll_wire[base_op] += size
+            else:
+                cur.coll_wire[base_op] += size * frac
+            cur.bytes_accessed += operand_bytes + out_bytes
+            continue
+
+        # --- flops ---
+        if op == "dot":
+            contract = 1
+            lhs_ref = _OPERAND.findall(args_txt)
+            lc = _LHS_CONTRACT.search(raw)
+            if lhs_ref and lc and lhs_ref[0] in shapes:
+                lhs_dims = shapes[lhs_ref[0]][1]
+                for d in filter(None, lc.group(1).split(",")):
+                    di = int(d)
+                    if di < len(lhs_dims):
+                        contract *= lhs_dims[di]
+            out_elems = 1
+            for d in out_dims:
+                out_elems *= d
+            cur.flops += 2.0 * out_elems * contract
+        elif op == "convolution":
+            out_elems = 1
+            for d in out_dims:
+                out_elems *= d
+            refs = _OPERAND.findall(args_txt)
+            k_elems, k_out = 1, 1
+            if len(refs) >= 2 and refs[1] in shapes:
+                k_dims = shapes[refs[1]][1]
+                for d in k_dims:
+                    k_elems *= d
+                dl = _DIM_LABELS.search(raw)
+                if dl:
+                    kernel_labels = dl.group(2)
+                    if "o" in kernel_labels:
+                        k_out = k_dims[kernel_labels.index("o")]
+            fg = _FEATURE_GROUPS.search(raw)
+            groups = int(fg.group(1)) if fg else 1
+            cur.flops += 2.0 * out_elems * (k_elems / max(k_out, 1)) / max(groups, 1) * groups / groups
+            # note: k_elems/k_out = per-output-feature kernel volume (already
+            # includes in_channels/groups for grouped convs)
+        elif op in _TRANSCENDENTAL:
+            out_elems = 1
+            for d in out_dims:
+                out_elems *= d
+            cur.transcendentals += out_elems
+
+        # --- bytes (TPU-fusion model: see _BYTES_OPS) ---
+        if op in _BYTES_OPS:
+            cur.bytes_accessed += operand_bytes + out_bytes
+
+    if entry is None:
+        raise ValueError("no ENTRY computation found in HLO text")
+    comps["__entry__"] = comps[entry]
+    return comps
+
+
+@dataclass
+class WalkCosts:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    transcendentals: float = 0.0
+    coll_operand: dict = field(default_factory=dict)
+    coll_wire: dict = field(default_factory=dict)
+    coll_count: dict = field(default_factory=dict)
+
+    @property
+    def total_wire(self) -> float:
+        return sum(self.coll_wire.values())
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "bytes_accessed": self.bytes_accessed,
+            "transcendentals": self.transcendentals,
+            "collective_operand_bytes": dict(self.coll_operand),
+            "collective_wire_bytes": dict(self.coll_wire),
+            "collective_counts": dict(self.coll_count),
+            "total_wire_bytes": self.total_wire,
+        }
+
+
+def walk(text: str) -> WalkCosts:
+    """Total per-device costs of the entry module, trip-count multiplied."""
+    comps = parse_hlo(text)
+    memo: dict[str, tuple] = {}
+
+    def total(name: str) -> tuple:
+        if name in memo:
+            return memo[name]
+        c = comps.get(name)
+        if c is None:
+            return (0.0, 0.0, 0.0, {}, {}, {})
+        memo[name] = (0.0,) * 3 + ({},) * 3  # cycle guard (shouldn't happen)
+        fl, by, tr = c.flops, c.bytes_accessed, c.transcendentals
+        co = defaultdict(float, c.coll_operand)
+        cw = defaultdict(float, c.coll_wire)
+        cc = defaultdict(float, c.coll_count)
+        for callee, mult in c.edges:
+            sfl, sby, str_, sco, scw, scc = total(callee)
+            fl += mult * sfl
+            by += mult * sby
+            tr += mult * str_
+            for k, v in sco.items():
+                co[k] += mult * v
+            for k, v in scw.items():
+                cw[k] += mult * v
+            for k, v in scc.items():
+                cc[k] += mult * v
+        memo[name] = (fl, by, tr, dict(co), dict(cw), dict(cc))
+        return memo[name]
+
+    fl, by, tr, co, cw, cc = total("__entry__")
+    return WalkCosts(flops=fl, bytes_accessed=by, transcendentals=tr,
+                     coll_operand=co, coll_wire=cw, coll_count=cc)

@@ -1,0 +1,181 @@
+"""Train step factory: value_and_grad + optimizer, SPMD-ready.
+
+Two step flavours:
+
+* :func:`make_train_step` — canonical pjit path.  Batch is sharded over the
+  dp axes; XLA inserts the gradient reduce-scatters/all-reduces implied by
+  the parameter shardings (FSDP-style when params are dp-sharded).
+* :func:`make_compressed_train_step` — explicit-DDP path via ``shard_map``:
+  per-shard gradients are exchanged with an int8-quantised all-reduce with
+  error-feedback residuals (gradient compression for slow cross-pod links).
+  4x fewer bytes on the wire per step; see tests/test_train.py for the
+  convergence check and EXPERIMENTS.md §Perf for the collective-bytes delta.
+
+Gradient accumulation (microbatching) happens *inside* the step via
+``lax.scan`` so the lowered HLO matches what runs on the pod.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from .optimizer import AdamW
+
+Pytree = Any
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class TrainState:
+    params: Pytree
+    opt: Pytree
+    step: jax.Array
+
+
+def init_state(api, opt: AdamW, key) -> TrainState:
+    params = api.init(key)
+    return TrainState(params=params, opt=opt.init(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def _split_microbatches(batch: dict, accum: int) -> dict:
+    return jax.tree.map(
+        lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:]), batch)
+
+
+def make_train_step(api, rt, opt: AdamW, *, accum: int = 1,
+                    donate: bool = True):
+    """Returns step(state, batch) -> (state, metrics); un-jitted."""
+
+    def lossfn(params, mb):
+        loss, metrics = api.loss(params, mb, rt)
+        return loss, metrics
+
+    def step(state: TrainState, batch: dict):
+        if accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                lossfn, has_aux=True)(state.params, batch)
+        else:
+            mbs = _split_microbatches(batch, accum)
+
+            def acc_body(carry, mb):
+                g_acc, l_acc = carry
+                (l, m), g = jax.value_and_grad(lossfn, has_aux=True)(
+                    state.params, mb)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + l), m
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              state.params)
+            (grads, loss), metrics = lax.scan(
+                acc_body, (g0, jnp.zeros((), jnp.float32)), mbs)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            loss = loss / accum
+            metrics = jax.tree.map(lambda m: m.mean(), metrics)
+
+        new_params, new_opt, gnorm = opt.update(grads, state.opt, state.params)
+        metrics = dict(metrics)
+        metrics.update(loss=loss, grad_norm=gnorm)
+        return TrainState(params=new_params, opt=new_opt,
+                          step=state.step + 1), metrics
+
+    return step
+
+
+# --------------------------------------------------------------------------
+# gradient compression (int8 quantised all-reduce with error feedback)
+# --------------------------------------------------------------------------
+def quantize_int8(x: jax.Array):
+    """Per-tensor symmetric int8 quantisation. Returns (q, scale)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(x, axis: str, residual, n_shards: int):
+    """int8 mean-all-reduce of ``x`` over ``axis`` with error feedback.
+
+    Wire protocol (what the HLO shows, and what a TPU pod would move):
+      1. pmax of the local absmax -> one shared fp32 scale;
+      2. quantise to int8, ``all_to_all`` the int8 chunks (1 B/elt);
+      3. local int32 sum, requantise the mean to int8;
+      4. ``all_gather`` the int8 partial means (1 B/elt).
+    Total 2 B/elt on the wire vs 8 B/elt for an fp32 ring all-reduce — 4x
+    compression.  The quantisation error stays local as an error-feedback
+    residual re-added next step, restoring near-fp32 convergence
+    (tests/test_train.py::test_compressed_ddp_matches_fp32).
+    """
+    xc = x.astype(jnp.float32) + residual
+    shape = xc.shape
+    flat = xc.reshape(-1)
+    n = flat.shape[0]
+    pad = -n % n_shards
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    scale = lax.pmax(jnp.max(jnp.abs(flat)), axis) / 127.0 + 1e-30
+    q = jnp.clip(jnp.round(flat / scale), -127, 127).astype(jnp.int8)
+    qt = q.reshape(n_shards, -1)
+    recv = lax.all_to_all(qt, axis, split_axis=0, concat_axis=0, tiled=True)
+    part = recv.astype(jnp.int32).reshape(n_shards, -1).sum(0)  # my chunk's sum
+    mean_chunk = part.astype(jnp.float32) / n_shards            # in scale units
+    q2 = jnp.clip(jnp.round(mean_chunk), -127, 127).astype(jnp.int8)
+    full = lax.all_gather(q2, axis, tiled=True).astype(jnp.float32) * scale
+    out = full[:n].reshape(shape)
+    # error feedback: what this shard failed to transmit
+    deq_local = q.astype(jnp.float32)[:n].reshape(shape) * scale
+    new_residual = xc - deq_local
+    return out, new_residual
+
+
+def make_compressed_train_step(api, rt, opt: AdamW, *, axis: str,
+                               n_shards: int):
+    """DDP train step with int8-compressed gradient all-reduce.
+
+    Must run under ``shard_map`` over the dp axis (see launch/train.py); the
+    state carries per-param error-feedback residuals.
+    """
+    import dataclasses
+
+    # inside shard_map every mesh axis is manual — sharding constraints are
+    # illegal; drop the mesh so rt.constrain becomes a no-op
+    rt = dataclasses.replace(rt, mesh=None)
+
+    def lossfn(params, mb):
+        return api.loss(params, mb, rt)
+
+    def step(state: TrainState, residuals: Pytree, batch: dict):
+        (loss, metrics), grads = jax.value_and_grad(
+            lossfn, has_aux=True)(state.params, batch)
+
+        def red(g, r):
+            return compressed_psum(g, axis, r, n_shards)
+
+        flat = jax.tree.map(red, grads, residuals)
+        grads = jax.tree.map(lambda t: t[0], flat,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_res = jax.tree.map(lambda t: t[1], flat,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        loss = lax.pmean(loss, axis)
+        metrics = jax.tree.map(lambda m: lax.pmean(m, axis), metrics)
+        new_params, new_opt, gnorm = opt.update(grads, state.opt, state.params)
+        metrics = dict(metrics)
+        metrics.update(loss=loss, grad_norm=gnorm)
+        return TrainState(params=new_params, opt=new_opt,
+                          step=state.step + 1), new_res, metrics
+
+    return step
+
+
+def init_residuals(params: Pytree) -> Pytree:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

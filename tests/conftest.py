@@ -1,0 +1,18 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests must see the
+real single CPU device; only launch/dryrun.py forces 512 placeholders."""
+from __future__ import annotations
+
+import pytest
+
+
+@pytest.fixture(scope="session")
+def host_mesh():
+    from repro.launch.mesh import make_host_mesh
+    return make_host_mesh()
+
+
+@pytest.fixture(scope="session")
+def local_rt(host_mesh):
+    from repro.models.runtime import Runtime
+    return Runtime(mesh=host_mesh, dp_axes=("data",), tp_axis=None,
+                   ep_axis=None)

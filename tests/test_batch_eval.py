@@ -1,0 +1,78 @@
+"""Vectorized MCCM vs the scalar reference — the central exactness claim."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.cnn.registry import CNN_NAMES, get_cnn
+from repro.core.batch_eval import encode_specs, evaluate_specs, make_tables
+from repro.core.dse import decode_design, explore, pareto, sample_mixed
+from repro.core.evaluator import evaluate_design
+from repro.fpga.archs import ARCH_NAMES, make_arch
+from repro.fpga.boards import get_board
+
+METRICS = ("latency_s", "throughput_ips", "buffer_bytes", "access_bytes")
+RTOL = {"latency_s": 1e-4, "throughput_ips": 1e-4,
+        "buffer_bytes": 1e-4, "access_bytes": 0.04}  # f32 threshold flips
+
+
+def _scalar_vals(m):
+    return {"latency_s": m.latency_s, "throughput_ips": m.throughput_ips,
+            "buffer_bytes": float(m.buffer_bytes),
+            "access_bytes": m.access_bytes}
+
+
+@pytest.mark.parametrize("cnn", CNN_NAMES)
+def test_matches_scalar_on_templates(cnn):
+    net = get_cnn(cnn)
+    dev = get_board("vcu108")
+    specs = [make_arch(a, net, n) for a in ARCH_NAMES for n in (2, 5, 9, 11)]
+    scalar = [evaluate_design(s, net, dev) for s in specs]
+    batch = evaluate_specs(specs, net, dev)
+    for i, s in enumerate(scalar):
+        sv = _scalar_vals(s)
+        for k in METRICS:
+            np.testing.assert_allclose(
+                float(batch[k][i]), sv[k], rtol=RTOL[k],
+                err_msg=f"{cnn} {specs[i].name} {k}")
+
+
+def test_matches_scalar_on_random_mixed_designs():
+    net = get_cnn("resnet50")
+    dev = get_board("zc706")
+    rng = np.random.default_rng(7)
+    db = sample_mixed(rng, len(net), 24)
+    batch = {k: np.asarray(v) for k, v in
+             evaluate_specs([decode_design(db, i, len(net))
+                             for i in range(24)], net, dev).items()}
+    for i in range(24):
+        spec = decode_design(db, i, len(net))
+        m = evaluate_design(spec, net, dev,
+                            inter_segment_pipelining=bool(db.inter_pipe[i]))
+        sv = _scalar_vals(m)
+        for k in METRICS:
+            np.testing.assert_allclose(
+                float(batch[k][i]), sv[k], rtol=RTOL[k],
+                err_msg=f"design {i} {k}")
+
+
+def test_pareto_front_is_nondominated():
+    pts = np.array([[1, 5], [2, 4], [3, 3], [2, 2], [5, 1], [4, 4]])
+    idx = pareto(pts)
+    front = pts[idx]
+    for i, p in enumerate(front):
+        for q in front:
+            assert not (np.all(q <= p) and np.any(q < p))
+    # (2,2) dominates (3,3) and (4,4)
+    assert [2, 2] in front.tolist()
+    assert [3, 3] not in front.tolist()
+
+
+def test_explore_speed_and_consistency():
+    net = get_cnn("resnet50")
+    dev = get_board("vcu110")
+    res = explore(net, dev, n=2048, family="custom", seed=3)
+    assert res.per_design_us < 6300          # beat the paper's 6.3 ms
+    m = res.metrics
+    assert np.all(m["latency_s"] > 0)
+    assert np.all(m["throughput_ips"] * m["latency_s"] >= 0.99)

@@ -1,0 +1,66 @@
+"""Builder heuristics: resource conservation + proportionality invariants."""
+from __future__ import annotations
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.cnn.registry import get_cnn
+from repro.core.builder import _largest_remainder, build
+from repro.core.evaluator import evaluate_design
+from repro.fpga.archs import make_arch
+from repro.fpga.boards import get_board
+
+
+@given(st.lists(st.floats(0.0, 1e9), min_size=1, max_size=12),
+       st.integers(8, 4000))
+@settings(max_examples=80, deadline=None)
+def test_largest_remainder_conserves(shares, total):
+    out = _largest_remainder(shares, total, floor=1)
+    assert sum(out) == max(total, len(shares))
+    assert all(x >= 1 for x in out)
+
+
+@pytest.mark.parametrize("arch", ["segmented", "segmented_rr", "hybrid"])
+@pytest.mark.parametrize("n", [2, 5, 11])
+def test_build_conserves_resources(arch, n):
+    net = get_cnn("resnet50")
+    dev = get_board("vcu108")
+    acc = build(make_arch(arch, net, n), net, dev)
+    pes = sum(ce.pes for seg in acc.segments for ce in seg.ces)
+    assert pes == dev.pes
+    bufs = sum(ce.buffer_bytes for seg in acc.segments for ce in seg.ces)
+    bufs += sum(2 * sz for sz, on in zip(acc.inter_seg_buffer_bytes,
+                                         acc.inter_seg_onchip) if on)
+    assert bufs <= dev.on_chip_bytes
+
+
+def test_pe_distribution_proportional_to_macs():
+    net = get_cnn("resnet50")
+    dev = get_board("zcu102")
+    acc = build(make_arch("segmented", net, 4), net, dev)
+    macs = [sum(l.macs for l in net.slice(s.spec.layer_lo, s.spec.layer_hi))
+            for s in acc.segments]
+    pes = [s.ces[0].pes for s in acc.segments]
+    total_m, total_p = sum(macs), sum(pes)
+    for m, p in zip(macs, pes):
+        assert p / total_p == pytest.approx(m / total_m, abs=0.02)
+
+
+def test_more_ces_more_throughput_rr():
+    """SegmentedRR's point: more pipelined CEs -> >= throughput (ResNet50,
+    big board, weights resident)."""
+    net = get_cnn("resnet50")
+    dev = get_board("zcu102")
+    tps = [evaluate_design(make_arch("segmented_rr", net, n), net, dev)
+           .throughput_ips for n in (2, 4, 8)]
+    assert tps[1] >= tps[0] * 0.9 and tps[2] >= tps[0] * 0.9
+
+
+def test_evaluate_design_metrics_sane():
+    net = get_cnn("mobilenetv2")
+    dev = get_board("zc706")
+    m = evaluate_design("{L1-Last:CE1-CE4}", net, dev)
+    assert m.latency_s > 0 and m.throughput_ips > 0
+    assert m.buffer_bytes > 0 and m.access_bytes > 0
+    assert m.throughput_ips >= 1.0 / m.latency_s - 1e-9  # pipe >= serial

@@ -1,0 +1,33 @@
+"""CNN zoo vs paper Table III (layer counts and weight totals)."""
+from __future__ import annotations
+
+import pytest
+
+from repro.cnn.registry import CNN_NAMES, TABLE_III, get_cnn, total_params
+
+
+@pytest.mark.parametrize("name", CNN_NAMES)
+def test_layer_counts_match_table3(name):
+    _, weights_m, conv_layers = TABLE_III[name]
+    net = get_cnn(name)
+    assert len(net) == conv_layers
+
+
+@pytest.mark.parametrize("name", CNN_NAMES)
+def test_weight_counts_match_table3(name):
+    _, weights_m, _ = TABLE_III[name]
+    total = total_params(name) / 1e6
+    assert total == pytest.approx(weights_m, rel=0.06), \
+        f"{name}: {total:.1f}M vs Table III {weights_m}M"
+
+
+def test_geometry_sane():
+    """Dims positive, spatial sizes shrink monotonically-ish, MACs > 0.
+    (Exact channel chaining doesn't hold for branch/concat topologies —
+    shortcut convs and DenseNet growth break the linear chain.)"""
+    for name in CNN_NAMES:
+        net = get_cnn(name)
+        for l in net:
+            assert l.in_ch > 0 and l.out_ch > 0 and l.macs > 0
+            assert l.oh <= l.ih and l.ow <= l.iw
+        assert net.layers[0].ih >= net.layers[-1].ih

@@ -1,0 +1,142 @@
+"""Unit tests for MCCM building blocks (paper Eqs. 1-7)."""
+from __future__ import annotations
+
+import math
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.blocks import (CE, eval_pipelined, eval_single_ce,
+                               layer_cycles, layer_utilization,
+                               pipeline_stage_sum, pipelined_min_buffer,
+                               single_ce_min_buffer)
+from repro.core.device import DeviceSpec, mib
+from repro.core.workload import ConvLayer
+
+DEV = DeviceSpec("test", pes=256, on_chip_bytes=mib(2), off_chip_gbps=8.0)
+
+
+def _layer(i=0, f=64, c=32, k=3, s=1, hw=16, kind="conv", residual=False):
+    return ConvLayer(index=i, name=f"l{i}", kind=kind, in_ch=c, out_ch=f,
+                     kh=k, kw=k, stride=s, ih=hw, iw=hw, residual=residual)
+
+
+# ---------------------------------------------------------------- Eq. 1
+def test_layer_cycles_exact():
+    l = _layer(f=6, c=4, k=1, hw=4)  # dims f=6 c=4 oh=4 ow=4
+    ce = CE("ce", pes=16, par={"f": 4, "oh": 2, "ow": 2})
+    # ceil(6/4)*4*1*1*ceil(4/2)*ceil(4/2) = 2*4*2*2
+    assert layer_cycles(l, ce) == 2 * 4 * 2 * 2
+
+
+def test_paper_underutilization_example():
+    """§IV-A1: a 4x2x2 CE processing a 6-filter layer is half-utilized on
+    the filter remainder."""
+    l = _layer(f=6, c=1, k=1, hw=2)
+    ce = CE("ce", pes=16, par={"f": 4, "oh": 2, "ow": 2})
+    u = layer_utilization(l, ce)
+    assert u == pytest.approx(6 / 8)  # 2 rounds of 4, only 6 useful
+
+
+@given(f=st.integers(1, 300), oh=st.integers(1, 64), ow=st.integers(1, 64),
+       pf=st.sampled_from([1, 2, 4, 8, 16]),
+       ph=st.sampled_from([1, 2, 4]), pw=st.sampled_from([1, 2, 4]))
+@settings(max_examples=60, deadline=None)
+def test_utilization_bounds(f, oh, ow, pf, ph, pw):
+    l = ConvLayer(index=0, name="l", kind="conv", in_ch=3, out_ch=f,
+                  kh=3, kw=3, stride=1, ih=oh, iw=ow, padding="same")
+    ce = CE("ce", pes=pf * ph * pw, par={"f": pf, "oh": ph, "ow": pw})
+    u = layer_utilization(l, ce)
+    assert 0.0 < u <= 1.0 + 1e-9
+    # cycles * par >= macs (Eq. 1 never undercounts work)
+    assert layer_cycles(l, ce) * pf * ph * pw >= l.macs
+
+
+# ---------------------------------------------------------------- Eq. 2
+def brute_stage_sum(lats, n_tiles):
+    total = 0.0
+    n = len(lats)
+    for s in range(n_tiles + n - 1):
+        lo, hi = max(0, s - n_tiles + 1), min(n - 1, s)
+        total += max(lats[lo:hi + 1])
+    return total
+
+
+@given(st.lists(st.floats(0.1, 100.0), min_size=1, max_size=8),
+       st.integers(1, 40))
+@settings(max_examples=80, deadline=None)
+def test_pipeline_stage_sum_matches_bruteforce(lats, n_tiles):
+    assert pipeline_stage_sum(lats, n_tiles) == pytest.approx(
+        brute_stage_sum(lats, n_tiles))
+
+
+def test_pipeline_latency_vs_throughput_tradeoff():
+    """Paper §IV-A1: pipelining raises throughput but (single-input)
+    latency exceeds the busy time of the slowest CE."""
+    layers = [_layer(i=i, f=32, c=16, hw=8) for i in range(3)]
+    for i, l in enumerate(layers):
+        layers[i] = l.replace(index=i)
+    ces = [CE(f"ce{i}", pes=64, par={"f": 8, "oh": 2, "ow": 4})
+           for i in range(3)]
+    res = eval_pipelined(layers, ces, DEV, weights_resident=True)
+    assert res.latency_cycles >= res.busy_cycles  # bubbles cost latency
+    single = eval_single_ce(layers, ces[0].__class__(
+        "big", pes=192, par={"f": 8, "oh": 4, "ow": 6}, buffer_bytes=mib(1)),
+        DEV)
+    assert single.latency_cycles == single.busy_cycles
+
+
+# ---------------------------------------------------------------- Eq. 4/5
+def test_min_buffers():
+    layers = [_layer(i=0, f=16, c=8, hw=8), _layer(i=1, f=32, c=16, hw=8)]
+    eq4 = single_ce_min_buffer(layers, ce_par_f=4, wordbytes=1)
+    # max FMs + max weight tile
+    fms = max(l.fms_size for l in layers)
+    wtile = max(min(4, l.out_ch) * l.in_ch * 9 for l in layers)
+    assert eq4 == fms + wtile
+    eq5 = pipelined_min_buffer(layers, DEV)
+    assert eq5 == sum(l.weights_size + 2 * l.out_ch * l.ow * 2
+                      for l in layers)
+
+
+def test_residual_fms_copy():
+    plain = _layer(residual=False)
+    res = _layer(residual=True)
+    assert res.fms_size == plain.fms_size + plain.ofm_size
+
+
+# ---------------------------------------------------------------- Eq. 6/7
+def test_single_ce_ideal_min_access():
+    """With a huge buffer, accesses = weights once (+ first IFM load)."""
+    layers = [_layer(i=0, f=8, c=4, hw=8)]
+    ce = CE("ce", pes=64, par={"f": 8, "oh": 2, "ow": 4},
+            buffer_bytes=mib(64))
+    res = eval_single_ce(layers, ce, DEV)
+    assert res.access_bytes == pytest.approx(
+        layers[0].weights_size + layers[0].ifm_size)
+
+
+def test_single_ce_access_monotone_in_buffer():
+    layers = [_layer(i=i, f=128, c=64, hw=32) for i in range(2)]
+    layers = [l.replace(index=i) for i, l in enumerate(layers)]
+    prev = None
+    for buf in (mib(0.05), mib(0.2), mib(1), mib(8)):
+        ce = CE("ce", pes=64, par={"f": 8, "oh": 2, "ow": 4},
+                buffer_bytes=int(buf))
+        acc = eval_single_ce(layers, ce, DEV).access_bytes
+        if prev is not None:
+            assert acc <= prev + 1e-6
+        prev = acc
+
+
+def test_pipelined_weight_streaming_penalty():
+    """Eq. 7: weights not resident are re-streamed; resident cost ~0."""
+    layers = [_layer(i=i) for i in range(2)]
+    layers = [l.replace(index=i) for i, l in enumerate(layers)]
+    ces = [CE(f"c{i}", pes=64, par={"f": 8, "oh": 2, "ow": 4},
+              buffer_bytes=0) for i in range(2)]
+    resident = eval_pipelined(layers, ces, DEV, weights_resident=True)
+    streamed = eval_pipelined(layers, ces, DEV, weights_resident=False)
+    assert resident.access_bytes == 0.0
+    assert streamed.access_bytes > 0.0

@@ -1,0 +1,65 @@
+"""Trip-count-aware HLO walker: exact on a hand-countable scan program."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.tpu.hlo_walk import parse_hlo, walk
+
+
+@pytest.fixture(scope="module")
+def scan_hlo():
+    def f(w, x):
+        def body(x, wi):
+            return jnp.tanh(x @ wi), None
+        x, _ = jax.lax.scan(body, x, w)
+        return (x.astype(jnp.float32) ** 2).sum()
+
+    w = jnp.ones((6, 64, 64), jnp.bfloat16)
+    x = jnp.ones((8, 64), jnp.bfloat16)
+    return jax.jit(jax.grad(f)).lower(w, x).compile().as_text()
+
+
+def test_flops_multiplied_by_trip_count(scan_hlo):
+    costs = walk(scan_hlo)
+    one_dot = 2 * 8 * 64 * 64
+    # fwd dot + 2 bwd dots per layer, 6 layers
+    assert costs.flops == pytest.approx(one_dot * 3 * 6, rel=0.01)
+
+
+def test_entry_found_and_while_edges(scan_hlo):
+    comps = parse_hlo(scan_hlo)
+    assert "__entry__" in comps
+    trips = [m for c in comps.values() for (_, m) in c.edges if m > 1]
+    assert 6.0 in trips
+
+
+def test_collectives_counted_with_trips():
+    import os
+    def f(w, x):
+        def body(x, wi):
+            y = x @ wi
+            return jax.lax.with_sharding_constraint(
+                jnp.tanh(y), jax.sharding.NamedSharding(mesh, P("data"))), None
+        x, _ = jax.lax.scan(body, x, w)
+        return x.sum()
+
+    from jax.sharding import PartitionSpec as P
+    if len(jax.devices()) < 2:
+        pytest.skip("needs >1 device for real collectives")
+    mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+    w = jnp.ones((4, 64, 64), jnp.bfloat16)
+    x = jnp.ones((8, 64), jnp.bfloat16)
+    with mesh:
+        txt = jax.jit(f).lower(w, x).compile().as_text()
+    walk(txt)  # must not crash; counts validated in the dryrun artifacts
+
+
+def test_bytes_use_slice_sizes_not_buffers(scan_hlo):
+    costs = walk(scan_hlo)
+    # stacked weights are (6, 64, 64) bf16 = 49KB; per-iteration the walker
+    # must charge the (1, 64, 64) slice, so total dynamic-slice traffic is
+    # O(6 * 8KB * 2), not O(6 * 49KB * 2)
+    assert costs.bytes_accessed < 2e6

@@ -1,0 +1,87 @@
+"""Pallas kernel sweeps vs pure-jnp oracles (interpret mode on CPU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.conv_ce.ops import conv_ce, grid_size, predicted_cycles
+from repro.kernels.conv_ce.ref import conv_ref
+from repro.kernels.flash_attn.ops import flash_attention
+from repro.kernels.flash_attn.ref import attention_ref
+from repro.kernels.mccm_eval.ops import mccm_latency
+from repro.kernels.mccm_eval.ref import mccm_latency_ref
+
+
+# ------------------------------------------------------------- flash_attn
+@pytest.mark.parametrize("B,Sq,Sk,H,Hkv,D,causal,window,dtype", [
+    (2, 128, 128, 4, 2, 64, True, None, jnp.float32),
+    (1, 200, 200, 2, 2, 32, True, 64, jnp.float32),
+    (2, 64, 256, 4, 4, 64, False, None, jnp.float32),
+    (1, 1, 300, 4, 2, 64, False, None, jnp.float32),      # decode-like
+    (2, 96, 96, 2, 1, 128, True, None, jnp.bfloat16),
+])
+def test_flash_attention_vs_ref(B, Sq, Sk, H, Hkv, D, causal, window, dtype):
+    q = jax.random.normal(jax.random.key(0), (B, Sq, H, D), dtype)
+    k = jax.random.normal(jax.random.key(1), (B, Sk, Hkv, D), dtype)
+    v = jax.random.normal(jax.random.key(2), (B, Sk, Hkv, D), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          q_blk=64, kv_blk=64)
+    kk = jnp.repeat(k, H // Hkv, 2)
+    vv = jnp.repeat(v, H // Hkv, 2)
+    ref = attention_ref(q.transpose(0, 2, 1, 3), kk.transpose(0, 2, 1, 3),
+                        vv.transpose(0, 2, 1, 3), causal=causal,
+                        window=window).transpose(0, 2, 1, 3)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+# ------------------------------------------------------------- conv_ce
+@pytest.mark.parametrize("C,H,W,F,K,stride,par", [
+    (3, 16, 16, 8, 3, 1, (4, 4, 4)),
+    (4, 15, 15, 6, 3, 2, (4, 3, 5)),
+    (1, 12, 12, 5, 1, 1, (2, 4, 4)),
+    (8, 10, 10, 16, 5, 1, (16, 2, 3)),
+    (2, 9, 9, 3, 3, 1, (2, 2, 2)),      # ragged everything
+])
+def test_conv_ce_vs_ref(C, H, W, F, K, stride, par):
+    x = jax.random.normal(jax.random.key(0), (C, H, W), jnp.float32)
+    w = jax.random.normal(jax.random.key(1), (F, C, K, K), jnp.float32)
+    out = conv_ce(x, w, stride=stride, par_f=par[0], par_oh=par[1],
+                  par_ow=par[2])
+    ref = conv_ref(x, w, stride=stride)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_conv_ce_grid_is_eq1():
+    """The kernel's grid × inner trip count IS Eq. 1 — same ceil-divs as
+    blocks.layer_cycles."""
+    from repro.core.blocks import CE, layer_cycles
+    from repro.core.workload import ConvLayer
+    F, C, K, OH, OW = 6, 4, 3, 7, 7
+    par = (4, 2, 2)
+    cyc = predicted_cycles(F, C, K, K, OH, OW, *par)
+    l = ConvLayer(index=0, name="l", kind="conv", in_ch=C, out_ch=F,
+                  kh=K, kw=K, stride=1, ih=OH, iw=OW, padding="same")
+    ce = CE("ce", pes=int(np.prod(par)),
+            par={"f": par[0], "oh": par[1], "ow": par[2]})
+    assert cyc == layer_cycles(l, ce)
+    assert grid_size(F, OH, OW, *par) == \
+        -(-F // par[0]) * -(-OH // par[1]) * -(-OW // par[2])
+
+
+# ------------------------------------------------------------- mccm_eval
+@pytest.mark.parametrize("B,L,blk", [(7, 53, 8), (64, 155, 64), (130, 74, 32)])
+def test_mccm_latency_vs_ref(B, L, blk):
+    rng = np.random.default_rng(0)
+    dims = jnp.asarray(rng.integers(1, 512, (L, 4)), jnp.float32)
+    par = jnp.asarray(rng.choice([1, 2, 4, 8, 16, 32], (B, L, 3)),
+                      jnp.float32)
+    tot, cyc = mccm_latency(dims, par, design_blk=blk)
+    rtot, rcyc = mccm_latency_ref(dims, par)
+    np.testing.assert_allclose(np.asarray(tot), np.asarray(rtot), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(cyc), np.asarray(rcyc), rtol=1e-6)

@@ -1,0 +1,53 @@
+"""Integration tests: train/serve drivers and the dry-run, as subprocesses
+(the dry-run needs its own process for the 512-device XLA flag)."""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = {**os.environ, "PYTHONPATH": os.path.join(ROOT, "src")}
+
+
+def _run(args, timeout=560):
+    return subprocess.run([sys.executable, "-m", *args], cwd=ROOT, env=ENV,
+                          capture_output=True, text=True, timeout=timeout)
+
+
+def test_train_driver_crash_restart(tmp_path):
+    ck = str(tmp_path / "ck")
+    r1 = _run(["repro.launch.train", "--arch", "qwen1.5-0.5b", "--reduced",
+               "--steps", "25", "--ckpt-dir", ck, "--ckpt-every", "10",
+               "--crash-at", "15"])
+    assert r1.returncode == 42, r1.stderr[-800:]
+    assert "committed step 10" in r1.stdout
+    r2 = _run(["repro.launch.train", "--arch", "qwen1.5-0.5b", "--reduced",
+               "--steps", "25", "--ckpt-dir", ck, "--ckpt-every", "10"])
+    assert r2.returncode == 0, r2.stderr[-800:]
+    assert "resumed from committed step 10" in r2.stdout
+    assert "done: 15 steps" in r2.stdout
+
+
+def test_serve_driver(tmp_path):
+    r = _run(["repro.launch.serve", "--arch", "llama3.2-1b", "--reduced",
+              "--batch", "2", "--new-tokens", "6"])
+    assert r.returncode == 0, r.stderr[-800:]
+    assert "tok/s" in r.stdout
+
+
+@pytest.mark.slow
+def test_dryrun_one_cell(tmp_path):
+    """Lower+compile one real cell on the 512-device production mesh."""
+    out = str(tmp_path / "art")
+    r = _run(["repro.launch.dryrun", "--arch", "whisper-base",
+              "--shape", "train_4k", "--mesh", "single", "--out", out])
+    assert r.returncode == 0, (r.stdout[-500:], r.stderr[-800:])
+    rec = json.load(open(os.path.join(
+        out, "whisper-base__train_4k__single.json")))
+    assert rec["ok"]
+    assert rec["walk"]["flops"] > 0
+    assert rec["collectives"]["total_wire"] > 0

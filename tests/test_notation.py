@@ -1,0 +1,58 @@
+"""Notation parser (paper §III-B): examples + round-trip property."""
+from __future__ import annotations
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.notation import AcceleratorSpec, SegmentSpec, format_spec, parse
+
+
+def test_paper_examples():
+    seg = parse("{L1-L4:CE1, L5-L6:CE2, L7-L9:CE3, L10-L12:CE4}", 12)
+    assert len(seg.segments) == 4
+    assert seg.segments[0] == SegmentSpec(0, 3, 0, 0)
+    assert not seg.segments[0].pipelined
+
+    rr = parse("{L1-Last:CE1-CE4}", 12)
+    assert rr.segments[0] == SegmentSpec(0, 11, 0, 3)
+    assert rr.segments[0].pipelined
+    assert rr.n_ces == 4
+
+    hy = parse("{L1:CE1, L2:CE2, L3:CE3, L4-Last:CE4}", 12)
+    assert [s.n_layers for s in hy.segments] == [1, 1, 1, 9]
+
+
+def test_validation_rejects_gaps():
+    with pytest.raises(ValueError):
+        parse("{L1-L3:CE1, L5-L12:CE2}", 12)          # gap at L4
+    with pytest.raises(ValueError):
+        parse("{L1-L4:CE1}", 12)                      # not covering
+    with pytest.raises(ValueError):
+        parse("{L1-L20:CE1}", 12)                     # out of range
+
+
+@st.composite
+def specs(draw):
+    n_layers = draw(st.integers(2, 40))
+    n_seg = draw(st.integers(1, min(6, n_layers)))
+    cuts = sorted(draw(st.lists(
+        st.integers(1, n_layers - 1), min_size=n_seg - 1,
+        max_size=n_seg - 1, unique=True)))
+    bounds = [0] + cuts + [n_layers]
+    segs, ce = [], 0
+    for i in range(n_seg):
+        lo, hi = bounds[i], bounds[i + 1] - 1
+        n_ces = draw(st.integers(1, 3))
+        segs.append(SegmentSpec(lo, hi, ce, ce + n_ces - 1))
+        ce += n_ces
+    return AcceleratorSpec(name="t", segments=tuple(segs)), n_layers
+
+
+@given(specs())
+@settings(max_examples=60, deadline=None)
+def test_roundtrip(sn):
+    spec, n_layers = sn
+    text = format_spec(spec, n_layers)
+    back = parse(text, n_layers)
+    assert back.segments == spec.segments
