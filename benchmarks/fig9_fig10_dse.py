@@ -4,18 +4,39 @@ Fig. 9 — per-segment buffer share and PE underutilization of the
 best-throughput Segmented and the min-buffer Hybrid (the bottleneck hints
 that motivate the custom family).
 
-Fig. 10 — evaluate a 100k-design random sample of the custom family
-(Hybrid-like pipelined first block + Segmented-like rest); report eval
-speed and the designs that dominate the fixed templates:
-paper: custom designs match Segmented-best throughput with up to 48% less
-buffer, or beat it by up to 17% with up to 39% less buffer.
+Fig. 10 — evaluate a 100k-design random sample of the custom family and
+report eval speed plus the designs that dominate the fixed templates
+(paper: custom designs match Segmented-best throughput with up to 48%
+less buffer, or beat it by up to 17% with up to 39% less buffer).
+
+Beyond the paper, this now also measures what the speed *buys*:
+
+* vectorized-sampler throughput vs the per-design reference loop
+  (must be >= 10x at the 100k scale);
+* random sampling vs guided multi-objective search at the same
+  evaluation budget, on Xception (side-by-side fronts) and on
+  MobileNetV2 + the default board, where the search must strictly
+  dominate the best design the random sweep finds.
 """
 from __future__ import annotations
+
+import time
 
 import numpy as np
 
 from repro.cnn.registry import get_cnn
-from repro.core.dse import decode_design, explore, pareto
+from repro.core.dse import (
+    best_scalar_index,
+    decode_design,
+    dominating_indices,
+    explore,
+    orient,
+    pareto,
+    sample_custom,
+    sample_custom_loop,
+    sample_mixed,
+    sample_mixed_loop,
+)
 from repro.core.evaluator import evaluate_design
 from repro.core.notation import format_spec
 from repro.fpga.archs import make_arch
@@ -24,6 +45,72 @@ from repro.fpga.boards import get_board
 from .common import save
 
 N_SAMPLE = 100_000
+OBJ = ("latency_s", "buffer_bytes")
+
+
+def _time_samplers(n_layers: int, n: int) -> dict:
+    """Vectorized vs per-design-loop sampling of a full DesignBatch.
+    Both paths get a small warmup call (allocator/jax init), then the
+    vectorized path is best-of-2 and the loop is measured at 20k and
+    scaled — it is O(n) in Python-loop iterations."""
+    rng = np.random.default_rng(0)
+    for f in (sample_custom, sample_mixed, sample_custom_loop,
+              sample_mixed_loop):
+        f(rng, n_layers, 256)
+    vec_s = np.inf
+    for _ in range(2):
+        t0 = time.time()
+        sample_custom(rng, n_layers, n // 2)
+        sample_mixed(rng, n_layers, n - n // 2)
+        vec_s = min(vec_s, time.time() - t0)
+    n_loop = min(n, 20_000)             # the loop at full n takes many sec
+    t0 = time.time()
+    sample_custom_loop(rng, n_layers, n_loop // 2)
+    sample_mixed_loop(rng, n_layers, n_loop - n_loop // 2)
+    loop_s = (time.time() - t0) * (n / n_loop)
+    return dict(n=n, vectorized_s=vec_s, loop_s_scaled=loop_s,
+                loop_n_measured=n_loop, speedup=loop_s / max(vec_s, 1e-9))
+
+
+def _front_list(points: np.ndarray, front: np.ndarray) -> list[dict]:
+    fp = points[front]
+    order = np.argsort(fp[:, 0])
+    return [dict(latency_ms=float(fp[i, 0] * 1e3),
+                 buffer_mib=float(fp[i, 1] / 2**20)) for i in order]
+
+
+def _search_vs_random(net, dev, n: int, *, family: str,
+                      seed_rnd: int = 7, seed_srch: int = 3,
+                      rnd=None) -> dict:
+    """Equal-budget comparison; reference picks come from the random run
+    (pass ``rnd`` to reuse an already-computed random sweep)."""
+    if rnd is None:
+        rnd = explore(net, dev, n=n, family=family, seed=seed_rnd)
+    srch = explore(net, dev, n=n, family=family, strategy="search",
+                   seed=seed_srch)
+    rp = orient(rnd.metrics, OBJ)
+    sp = orient(srch.metrics, OBJ)
+    refs = {
+        "best_latency": rp[int(np.argmin(rp[:, 0]))],
+        "best_buffer": rp[int(np.argmin(rp[:, 1]))],
+        "scalar_knee": rp[best_scalar_index(rnd.metrics)],
+    }
+    dom = {k: int(len(dominating_indices(sp, ref)))
+           for k, ref in refs.items()}
+    rf = rp[rnd.front]
+    sf = sp[srch.front]
+    covered = sum(bool(len(dominating_indices(sf, p))) for p in rf)
+    return dict(
+        n_evals_random=rnd.n_evals, n_evals_search=srch.n_evals,
+        seconds_random=rnd.seconds, seconds_search=srch.seconds,
+        random_best=({k: dict(latency_ms=float(v[0] * 1e3),
+                              buffer_mib=float(v[1] / 2**20))
+                      for k, v in refs.items()}),
+        search_designs_dominating=dom,
+        random_front_points_strictly_dominated=f"{covered}/{len(rf)}",
+        random_front=_front_list(rp, rnd.front),
+        search_front=_front_list(sp, srch.front),
+    )
 
 
 def run(verbose: bool = True, n_sample: int = N_SAMPLE) -> dict:
@@ -46,16 +133,15 @@ def run(verbose: bool = True, n_sample: int = N_SAMPLE) -> dict:
     fig9 = {"segmented": {"n": n_seg, "segments": seg_profile(m_seg)},
             "hybrid": {"n": n_hyb, "segments": seg_profile(m_hyb)}}
 
-    # ---- Fig 10: 100k-design DSE (half paper-custom family, half the
-    # mixed superset family — mirrors "explore architectures that mitigate
-    # these bottlenecks") ----
-    res = explore(net, dev, n=n_sample // 2, family="custom", seed=0)
-    res2 = explore(net, dev, n=n_sample - n_sample // 2, family="mixed",
-                   seed=1)
-    tp = np.concatenate([res.metrics["throughput_ips"],
-                         res2.metrics["throughput_ips"]])
-    buf = np.concatenate([res.metrics["buffer_bytes"],
-                          res2.metrics["buffer_bytes"]])
+    # ---- sampler speed: vectorized vs the seed's per-design loop ----
+    sampler_speed = _time_samplers(len(net), n_sample)
+
+    # ---- Fig 10: 100k-design DSE (half custom family, half the mixed
+    # superset — mirrors "explore architectures that mitigate these
+    # bottlenecks") ----
+    res = explore(net, dev, n=n_sample, family="both", seed=0)
+    tp = res.metrics["throughput_ips"]
+    buf = res.metrics["buffer_bytes"]
 
     ref_tp, ref_buf = m_seg.throughput_ips, float(m_seg.buffer_bytes)
     # custom designs matching the template's throughput with less buffer
@@ -81,13 +167,27 @@ def run(verbose: bool = True, n_sample: int = N_SAMPLE) -> dict:
         for _, m in temps)
 
     front = pareto(np.stack([-tp, buf], 1))
+
+    # ---- guided search vs random at the same budget (the Fig. 10 sweep
+    # above doubles as the xception random arm — no second 100k sweep) ----
+    xcp = _search_vs_random(net, dev, n_sample, family="both", rnd=res)
+    mnv2 = _search_vs_random(get_cnn("mobilenetv2"), get_board(),
+                             n_sample, family="custom")
+
     checks = {
         "found_equal_tp_less_buffer": bool(match.any()
                                            and buf_saving_at_tp > 0.10),
         "found_higher_tp_designs": bool(beat.any()),
         "all_templates_dominated": dominated == len(temps),
+        "sampler_speedup_ge_10x": sampler_speed["speedup"] >= 10.0,
+        # acceptance: guided search strictly dominates the best design an
+        # equal-budget random sweep reports (MobileNetV2, default board)
+        "search_dominates_random_best_latency":
+            mnv2["search_designs_dominating"]["best_latency"] > 0,
+        "search_dominates_random_knee":
+            mnv2["search_designs_dominating"]["scalar_knee"] > 0,
     }
-    seconds = res.seconds + res2.seconds
+    seconds = res.seconds
     us = seconds / n_sample * 1e6
     summary = dict(
         n_designs=n_sample,
@@ -106,6 +206,9 @@ def run(verbose: bool = True, n_sample: int = N_SAMPLE) -> dict:
         print(f"DSE: {n_sample} designs in {seconds:.1f}s "
               f"({us:.0f} us/design; paper 6300 us -> "
               f"{summary['speedup_vs_paper']:.0f}x)")
+        print(f"samplers: vectorized {sampler_speed['vectorized_s']:.2f}s "
+              f"vs loop {sampler_speed['loop_s_scaled']:.1f}s for "
+              f"{n_sample} designs -> {sampler_speed['speedup']:.0f}x")
         print(f"templates Pareto-dominated by custom designs: "
               f"{dominated}/{len(temps)}")
         print(f"template segmented[{n_seg}]: tp {ref_tp:.1f} ips, "
@@ -118,8 +221,22 @@ def run(verbose: bool = True, n_sample: int = N_SAMPLE) -> dict:
         print("best design:",
               format_spec(decode_design(res.batch, int(i), len(net)),
                           len(net))[:100])
+        for name, cmp in (("xception/vcu110", xcp),
+                          ("mobilenetv2/default", mnv2)):
+            print(f"\nrandom vs guided search ({name}, "
+                  f"{cmp['n_evals_search']} evals):")
+            print(f"  random best-latency "
+                  f"{cmp['random_best']['best_latency']}")
+            print(f"  search designs dominating it: "
+                  f"{cmp['search_designs_dominating']['best_latency']}; "
+                  f"knee: {cmp['search_designs_dominating']['scalar_knee']}")
+            print(f"  random front points strictly dominated: "
+                  f"{cmp['random_front_points_strictly_dominated']}")
         print("checks:", checks)
-    out = {"fig9": fig9, "fig10": summary, "checks": checks}
+    out = {"fig9": fig9, "fig10": summary, "sampler_speed": sampler_speed,
+           "search_vs_random": {"xception_vcu110": xcp,
+                                "mobilenetv2_default": mnv2},
+           "checks": checks}
     save("fig9_fig10_dse", out)
     return out
 

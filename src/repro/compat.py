@@ -1,0 +1,24 @@
+"""Version shims for the jax API surface this repo uses.
+
+The container pins an older jax than the code was written against; every
+difference is bridged here (and only here) so call sites stay on the
+modern spelling:
+
+* ``shard_map`` — top-level ``jax.shard_map`` (new) vs
+  ``jax.experimental.shard_map.shard_map`` (old); the new ``check_vma``
+  kwarg maps onto the old ``check_rep``.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, **kwargs):
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kwargs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    if "check_vma" in kwargs:
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **kwargs)

@@ -18,6 +18,26 @@ from .evaluator import build_design, evaluate_design
 from .notation import AcceleratorSpec, SegmentSpec, format_spec, parse
 from .workload import DIMS, ConvLayer, Network, make_network
 
+# The vectorized layer (dse package + batch_eval) re-exports lazily via
+# PEP 562: it pulls in jax (~0.7 s), which scalar-model consumers of this
+# package never need.
+_LAZY = {name: ".dse" for name in (
+    "DesignBatch", "DSEResult", "ParetoArchive", "SearchConfig",
+    "SearchResult", "decode_design", "encode_specs", "explore", "pareto",
+    "sample_custom", "sample_mixed", "search", "validate_batch")}
+_LAZY.update({name: ".batch_eval" for name in (
+    "evaluate_batch", "evaluate_specs", "make_tables")})
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        mod = importlib.import_module(_LAZY[name], __name__)
+        value = getattr(mod, name)
+        globals()[name] = value        # cache for subsequent lookups
+        return value
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
 __all__ = [
     "CE",
     "DIMS",
@@ -26,25 +46,41 @@ __all__ = [
     "BuilderOptions",
     "ConcreteAccelerator",
     "ConvLayer",
+    "DSEResult",
+    "DesignBatch",
     "DeviceSpec",
     "LayerResult",
     "Metrics",
     "Network",
+    "ParetoArchive",
+    "SearchConfig",
+    "SearchResult",
     "SegmentMetrics",
     "SegmentSpec",
     "best_parallelism",
     "build",
     "build_design",
+    "decode_design",
+    "encode_specs",
     "evaluate",
+    "evaluate_batch",
     "evaluate_design",
+    "evaluate_specs",
     "eval_pipelined",
     "eval_single_ce",
+    "explore",
     "format_spec",
     "layer_cycles",
     "layer_utilization",
     "make_network",
+    "make_tables",
     "mib",
+    "pareto",
     "parse",
     "pipelined_min_buffer",
+    "sample_custom",
+    "sample_mixed",
+    "search",
     "single_ce_min_buffer",
+    "validate_batch",
 ]

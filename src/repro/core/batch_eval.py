@@ -17,8 +17,8 @@ prefix/suffix-max identity all replicated in vector form).
 Layout
 ------
 * ``NetTables``  — static per-CNN arrays (layer dims, ceil-div tables).
-* ``DesignBatch`` — (B, NS) segment encoding: end layer (exclusive),
-  pipelined flag, CE count; plus a per-design inter-segment-pipelining bit.
+* ``DesignBatch`` — (B, NS) segment encoding, defined in
+  ``core.dse.encoding`` (re-exported here for compatibility).
 * ``evaluate_batch`` — jitted core: DesignBatch -> metric arrays.
 """
 from __future__ import annotations
@@ -33,11 +33,10 @@ import jax.numpy as jnp
 
 from .blocks import CANDIDATES_DEFAULT
 from .device import DeviceSpec
+from .dse.encoding import NC, NS, DesignBatch, encode_specs  # noqa: F401
 from .notation import AcceleratorSpec
 from .workload import Network
 
-NS = 12          # max segments per design
-NC = 16          # max CEs per design
 NEG = -1.0e30
 
 
@@ -89,45 +88,6 @@ def make_tables(net: Network,
         CEIL_OW=np.ceil(OW[:, None] / cand[None, :]),
         CAND=cand,
     )
-
-
-# --------------------------------------------------------------------------
-# design encoding
-# --------------------------------------------------------------------------
-@jax.tree_util.register_dataclass
-@dataclass
-class DesignBatch:
-    """(B, NS) arrays; invalid segments have end == previous end."""
-
-    seg_end: jnp.ndarray       # int32 (B, NS) exclusive end layer
-    seg_pipe: jnp.ndarray      # bool  (B, NS)
-    seg_nce: jnp.ndarray       # int32 (B, NS) >= 1
-    inter_pipe: jnp.ndarray    # bool  (B,)
-
-    @property
-    def batch(self) -> int:
-        return self.seg_end.shape[0]
-
-
-def encode_specs(specs: list[AcceleratorSpec], n_layers: int) -> DesignBatch:
-    B = len(specs)
-    seg_end = np.full((B, NS), n_layers, np.int32)
-    seg_pipe = np.zeros((B, NS), bool)
-    seg_nce = np.ones((B, NS), np.int32)
-    inter = np.zeros((B,), bool)
-    for b, spec in enumerate(specs):
-        if len(spec.segments) > NS:
-            raise ValueError(f"{spec.name}: more than {NS} segments")
-        end = 0
-        for s, seg in enumerate(spec.segments):
-            end = seg.layer_hi + 1
-            seg_end[b, s] = end
-            seg_pipe[b, s] = seg.pipelined
-            seg_nce[b, s] = seg.n_ces
-        seg_end[b, len(spec.segments):] = end
-        inter[b] = spec.inter_segment_pipelining
-    return DesignBatch(jnp.asarray(seg_end), jnp.asarray(seg_pipe),
-                       jnp.asarray(seg_nce), jnp.asarray(inter))
 
 
 # --------------------------------------------------------------------------

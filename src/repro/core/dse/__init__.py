@@ -1,0 +1,70 @@
+"""Design-space exploration subsystem (paper §V-E, use case 3).
+
+Four layers over one shared design encoding:
+
+* :mod:`~repro.core.dse.encoding` — ``DesignBatch`` fixed-shape arrays,
+  spec encode/decode round-trip, batch validity checks (also the encoding
+  used by ``core.batch_eval``);
+* :mod:`~repro.core.dse.samplers` — fully vectorized random samplers for
+  the paper's custom family and the mixed superset family;
+* :mod:`~repro.core.dse.pareto`   — O(N log N) non-dominated fronts and
+  the incremental ``ParetoArchive``;
+* :mod:`~repro.core.dse.search`   — guided multi-objective evolutionary
+  search operating directly on ``DesignBatch`` arrays.
+
+``driver.explore`` ties them together; all public names re-export here so
+``from repro.core.dse import explore, pareto, sample_mixed`` keeps working
+exactly as it did when this was a single module.
+"""
+from .driver import (
+    DEFAULT_OBJECTIVES,
+    DSEResult,
+    best_scalar_index,
+    dominating_indices,
+    explore,
+)
+from .encoding import (
+    NC,
+    NS,
+    DesignBatch,
+    concat_batches,
+    decode_batch,
+    decode_design,
+    encode_specs,
+    validate_batch,
+)
+from .pareto import ParetoArchive, pareto
+from .samplers import (
+    sample_custom,
+    sample_custom_loop,
+    sample_mixed,
+    sample_mixed_loop,
+)
+from .search import SearchConfig, SearchResult, make_children, orient, search
+
+__all__ = [
+    "DEFAULT_OBJECTIVES",
+    "DSEResult",
+    "DesignBatch",
+    "NC",
+    "NS",
+    "ParetoArchive",
+    "SearchConfig",
+    "SearchResult",
+    "best_scalar_index",
+    "concat_batches",
+    "decode_batch",
+    "decode_design",
+    "dominating_indices",
+    "encode_specs",
+    "explore",
+    "make_children",
+    "orient",
+    "pareto",
+    "sample_custom",
+    "sample_custom_loop",
+    "sample_mixed",
+    "sample_mixed_loop",
+    "search",
+    "validate_batch",
+]

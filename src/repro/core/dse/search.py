@@ -1,0 +1,414 @@
+"""Guided multi-objective search over DesignBatch arrays (paper use case 3).
+
+Instead of blindly sampling the ~97.1e9-design space, an evolutionary loop
+mutates and recombines whole *batches* of designs between jitted
+``evaluate_batch`` calls — the style of guided exploration f-CNNx
+(arXiv:1805.10174) and Shen et al.'s resource partitioning
+(arXiv:1607.00064) use to find dominating designs, here running entirely
+on the fixed-shape segment encoding so every generation is a handful of
+NumPy ops plus one XLA dispatch.
+
+Variation operators (all vectorized over the population, expressed on a
+per-layer boundary bitmask):
+
+* segment-boundary shift   — move one cut point ±1 layer;
+* segment split / merge    — insert or delete a cut point;
+* CE-count perturbation    — ±1 CE on one segment;
+* pipeline-flag flip       — toggle a segment between single-CE and a
+                             2-CE pipelined block (canonical pipe ⇔ nce>1);
+* inter-segment-pipelining flip;
+* one-point crossover      — child takes parent A's boundaries below a
+                             random cut layer and parent B's above it.
+
+Selection keeps a persistent :class:`ParetoArchive` (mode="pareto") or a
+weighted-scalarization elite (mode="scalarized"); children violating the
+NS/NC/CE-count constraints are repaired, and anything that slips through
+is filtered by ``validate_batch`` before it can enter the archive.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .encoding import NC, NS, DesignBatch, concat_batches, validate_batch
+from .pareto import ParetoArchive
+from .samplers import sample_custom, sample_mixed
+
+# metrics where HIGHER is better get flipped when building objective points
+ORIENT_MAX = frozenset({"throughput_ips", "utilization"})
+
+
+def orient(metrics: dict[str, np.ndarray],
+           objectives: tuple[str, ...]) -> np.ndarray:
+    """Stack selected metrics into (N, M) points, lower always better."""
+    cols = [(-1.0 if k in ORIENT_MAX else 1.0) * np.asarray(metrics[k],
+                                                            np.float64)
+            for k in objectives]
+    return np.stack(cols, axis=1)
+
+
+@dataclass
+class SearchConfig:
+    pop_size: int = 4096
+    budget: int = 100_000             # total design evaluations
+    objectives: tuple[str, ...] = ("latency_s", "buffer_bytes")
+    mode: str = "pareto"              # "pareto" | "scalarized"
+    weights: tuple[float, ...] | None = None   # scalarized-mode weights
+    min_ces: int = 2
+    max_ces: int = 11
+    seed: int = 0
+    crossover_frac: float = 0.5
+    shift_frac: float = 0.6
+    split_frac: float = 0.15
+    merge_frac: float = 0.15
+    nce_frac: float = 0.4
+    flip_frac: float = 0.15
+    inter_frac: float = 0.1
+    immigrant_frac: float = 0.15      # fresh random designs per generation
+    elite_frac: float = 0.25          # scalarized top-slice joining parents
+    init_family: str = "both"         # sampler for init/immigrants:
+                                      # "custom" | "mixed" | "both"
+
+
+@dataclass
+class SearchResult:
+    batch: DesignBatch                # every evaluated design, in order
+    metrics: dict[str, np.ndarray]
+    points: np.ndarray                # (n_evals, M) oriented objectives
+    front_idx: np.ndarray             # archive rows, as indices into batch
+    objectives: tuple[str, ...]
+    n_evals: int
+    seconds: float
+    history: list[dict] = field(default_factory=list)
+
+
+# --------------------------------------------------------------------------
+# boundary-bitmask domain: (P, L+1) cut mask + per-cut CE count
+# --------------------------------------------------------------------------
+def _to_boundary(seg_end: np.ndarray, seg_nce: np.ndarray,
+                 n_layers: int) -> tuple[np.ndarray, np.ndarray]:
+    P = len(seg_end)
+    prev = np.concatenate(
+        [np.zeros((P, 1), seg_end.dtype), seg_end[:, :-1]], axis=1)
+    active = seg_end > prev
+    bnd = np.zeros((P, n_layers + 1), bool)
+    nce_at = np.ones((P, n_layers + 1), np.int64)
+    rows = np.nonzero(active)[0]
+    ends = seg_end[active].astype(np.int64)
+    bnd[rows, ends] = True
+    nce_at[rows, ends] = seg_nce[active]
+    return bnd, nce_at
+
+
+def _from_boundary(bnd: np.ndarray, nce_at: np.ndarray, n_layers: int,
+                   max_segments: int) -> tuple[np.ndarray, np.ndarray]:
+    """Compress the bitmask back to canonical (P, NS) arrays, keeping at
+    most ``max_segments`` segments (surplus cut points merge away)."""
+    P = bnd.shape[0]
+    bnd = bnd.copy()
+    bnd[:, 0] = False
+    bnd[:, n_layers] = True
+    internal = bnd.copy()
+    internal[:, n_layers] = False
+    irank = np.cumsum(internal, axis=1)
+    keep = internal & (irank <= min(NS, max_segments) - 1)
+    keep[:, n_layers] = True
+    rows, poss = np.nonzero(keep)
+    counts = np.bincount(rows, minlength=P)
+    col = np.arange(len(rows)) - np.repeat(np.cumsum(counts) - counts, counts)
+    seg_end = np.full((P, NS), n_layers, np.int64)
+    seg_end[rows, col] = poss
+    seg_nce = np.ones((P, NS), np.int64)
+    seg_nce[rows, col] = nce_at[rows, poss]
+    return seg_end, seg_nce
+
+
+def _pick(rng: np.random.Generator,
+          mask: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """One uniformly random True column per row -> (has_any, col)."""
+    keys = np.where(mask, rng.random(mask.shape), -1.0)
+    return mask.any(1), np.argmax(keys, axis=1)
+
+
+def _crossover(rng, bnd_a, nce_a, bnd_b, nce_b, frac):
+    P, W = bnd_a.shape
+    cut = rng.integers(1, max(W - 1, 2), size=P)
+    do = (rng.random(P) < frac)[:, None]
+    left = np.arange(W)[None, :] <= cut[:, None]
+    bnd = np.where(do, np.where(left, bnd_a, bnd_b), bnd_a)
+    nce = np.where(do, np.where(left, nce_a, nce_b), nce_a)
+    return bnd, nce
+
+
+def _op_shift(rng, bnd, nce_at, frac):
+    P, W = bnd.shape
+    internal = bnd.copy()
+    internal[:, 0] = internal[:, W - 1] = False
+    has, col = _pick(rng, internal)
+    tgt = np.clip(col + np.where(rng.random(P) < 0.5, -1, 1), 1, W - 2)
+    do = has & (rng.random(P) < frac) & (tgt != col) \
+        & ~bnd[np.arange(P), tgt]
+    r = np.nonzero(do)[0]
+    bnd[r, tgt[r]] = True
+    nce_at[r, tgt[r]] = nce_at[r, col[r]]
+    bnd[r, col[r]] = False
+    nce_at[r, col[r]] = 1
+
+
+def _op_split(rng, bnd, nce_at, frac):
+    P, W = bnd.shape
+    inner = ~bnd
+    inner[:, 0] = inner[:, W - 1] = False
+    has, col = _pick(rng, inner)
+    do = has & (rng.random(P) < frac)
+    r = np.nonzero(do)[0]
+    bnd[r, col[r]] = True
+    nce_at[r, col[r]] = 1            # new left half starts single-CE
+
+
+def _op_merge(rng, bnd, nce_at, frac):
+    P, W = bnd.shape
+    internal = bnd.copy()
+    internal[:, 0] = internal[:, W - 1] = False
+    has, col = _pick(rng, internal)
+    do = has & (rng.random(P) < frac)
+    r = np.nonzero(do)[0]
+    bnd[r, col[r]] = False
+    nce_at[r, col[r]] = 1
+
+
+def _op_nce(rng, bnd, nce_at, frac):
+    P, W = bnd.shape
+    cuts = bnd.copy()
+    cuts[:, W - 1] = True            # the final segment is perturbable too
+    cuts[:, 0] = False
+    has, col = _pick(rng, cuts)
+    do = has & (rng.random(P) < frac)
+    delta = np.where(rng.random(P) < 0.5, -1, 1)
+    r = np.nonzero(do)[0]
+    nce_at[r, col[r]] = np.clip(nce_at[r, col[r]] + delta[r], 1, NC)
+
+
+def _op_flip(rng, bnd, nce_at, frac):
+    cuts = bnd.copy()
+    cuts[:, -1] = True
+    cuts[:, 0] = False
+    has, col = _pick(rng, cuts)
+    do = has & (rng.random(len(bnd)) < frac)
+    r = np.nonzero(do)[0]
+    cur = nce_at[r, col[r]]
+    nce_at[r, col[r]] = np.where(cur > 1, 1, 2)   # pipe <-> single
+
+
+def _repair_ces(seg_end, seg_nce, min_ces, max_ces, rng):
+    """Bounded take-from-largest / give-to-random passes until every row's
+    total CE count sits in [min_ces, min(max_ces, NC)]."""
+    cap = min(max_ces, NC)
+    P = len(seg_end)
+    prev = np.concatenate(
+        [np.zeros((P, 1), seg_end.dtype), seg_end[:, :-1]], axis=1)
+    active = seg_end > prev
+    nce = np.where(active, seg_nce, 1)
+    rows = np.arange(P)
+    for _ in range(2 * NC):
+        total = (nce * active).sum(1)
+        over = total > cap
+        if not over.any():
+            break
+        shrinkable = active & (nce > 1)
+        cand = np.where(shrinkable, nce.astype(np.float64), -np.inf)
+        col = np.argmax(cand + rng.random(cand.shape) * 0.5, axis=1)
+        sel = over & shrinkable.any(1)
+        if not sel.any():
+            break
+        r = rows[sel]
+        nce[r, col[sel]] -= 1
+    for _ in range(2 * NC):
+        total = (nce * active).sum(1)
+        under = total < min_ces
+        if not under.any():
+            break
+        has, col = _pick(rng, active)
+        r = rows[under & has]
+        nce[r, col[under & has]] += 1
+    return np.where(active, nce, 1)
+
+
+def make_children(rng: np.random.Generator, parents: DesignBatch,
+                  n_layers: int, cfg: SearchConfig, n: int) -> DesignBatch:
+    """Breed ``n`` children from ``parents`` (crossover + mutation ops),
+    returning canonical, constraint-repaired designs."""
+    seg_end, _, seg_nce, inter = parents.to_numpy()
+    pa = rng.integers(0, len(seg_end), size=n)
+    pb = rng.integers(0, len(seg_end), size=n)
+    bnd_a, nce_a = _to_boundary(seg_end[pa], seg_nce[pa], n_layers)
+    bnd_b, nce_b = _to_boundary(seg_end[pb], seg_nce[pb], n_layers)
+    bnd, nce_at = _crossover(rng, bnd_a, nce_a, bnd_b, nce_b,
+                             cfg.crossover_frac)
+    _op_shift(rng, bnd, nce_at, cfg.shift_frac)
+    _op_split(rng, bnd, nce_at, cfg.split_frac)
+    _op_merge(rng, bnd, nce_at, cfg.merge_frac)
+    _op_nce(rng, bnd, nce_at, cfg.nce_frac)
+    _op_flip(rng, bnd, nce_at, cfg.flip_frac)
+    end, nce = _from_boundary(bnd, nce_at, n_layers,
+                              max_segments=min(NS, cfg.max_ces))
+    nce = _repair_ces(end, nce, cfg.min_ces, cfg.max_ces, rng)
+    prev = np.concatenate([np.zeros((n, 1), end.dtype), end[:, :-1]], axis=1)
+    pipe = (end > prev) & (nce > 1)
+    child_inter = np.where(rng.random(n) < cfg.inter_frac,
+                           ~inter[pa], inter[pa])
+    return DesignBatch.from_numpy(end, pipe, nce, child_inter)
+
+
+# --------------------------------------------------------------------------
+# the search loop
+# --------------------------------------------------------------------------
+def _initial_pop(rng, n_layers, cfg, n):
+    fam = cfg.init_family
+    if fam not in ("custom", "mixed", "both"):
+        raise ValueError(f"unknown init_family {fam!r}")
+    if cfg.max_ces < 2 or fam == "mixed":   # custom needs a >= 2-CE head
+        return sample_mixed(rng, n_layers, n,
+                            min_ces=cfg.min_ces, max_ces=cfg.max_ces)
+    if fam == "custom":
+        return sample_custom(rng, n_layers, n,
+                             min_ces=max(cfg.min_ces, 2),
+                             max_ces=cfg.max_ces)
+    n_custom = n // 2
+    a = sample_custom(rng, n_layers, n_custom,
+                      min_ces=max(cfg.min_ces, 2), max_ces=cfg.max_ces)
+    b = sample_mixed(rng, n_layers, n - n_custom,
+                     min_ces=cfg.min_ces, max_ces=cfg.max_ces)
+    return concat_batches([a, b])
+
+
+def search(net, dev, config: SearchConfig | None = None,
+           tables=None) -> SearchResult:
+    """Run the guided loop: sample -> evaluate -> archive -> breed."""
+    from ..batch_eval import evaluate_batch, make_tables
+    import jax
+
+    cfg = config or SearchConfig()
+    n_obj = len(cfg.objectives)
+    if cfg.budget < 1 or cfg.pop_size < 1:
+        raise ValueError(
+            f"budget and pop_size must be >= 1 "
+            f"(got {cfg.budget}, {cfg.pop_size})")
+    if cfg.mode not in ("pareto", "scalarized"):
+        raise ValueError(f"unknown mode {cfg.mode!r}")
+    if cfg.mode == "scalarized" and cfg.weights is not None \
+            and len(cfg.weights) != n_obj:
+        raise ValueError("weights must match objectives")
+    tables = tables if tables is not None else make_tables(net)
+    n_layers = tables.L
+    rng = np.random.default_rng(cfg.seed)
+
+    # generation sizes: pop_n each, the final one absorbing the remainder
+    # so the evaluation count equals the budget EXACTLY (the final odd-size
+    # batch costs one extra jit compile, same as random explore's tail)
+    pop_n = min(cfg.pop_size, cfg.budget)
+    gens = max(1, cfg.budget // pop_n)
+    sizes = [pop_n] * gens
+    sizes[-1] += cfg.budget - gens * pop_n
+    total = cfg.budget
+
+    hall_end = np.empty((total, NS), np.int32)
+    hall_pipe = np.empty((total, NS), bool)
+    hall_nce = np.empty((total, NS), np.int32)
+    hall_inter = np.empty((total,), bool)
+    all_points = np.empty((total, n_obj))
+    hall_ok = np.zeros((total,), bool)
+    all_metrics: list[dict[str, np.ndarray]] = []
+
+    archive = ParetoArchive(n_obj)
+    lo = np.full(n_obj, np.inf)
+    hi = np.full(n_obj, -np.inf)
+    history: list[dict] = []
+
+    pop = _initial_pop(rng, n_layers, cfg, sizes[0])
+    base = 0
+    t0 = time.time()
+    for gen in range(gens):
+        out = evaluate_batch(pop, tables, dev)
+        jax.block_until_ready(out["latency_s"])
+        out = {k: np.asarray(v) for k, v in out.items()}
+        pts = orient(out, cfg.objectives)
+        idx = np.arange(base, base + sizes[gen])
+        base += sizes[gen]
+        e, p, c, i = pop.to_numpy()
+        hall_end[idx], hall_pipe[idx] = e, p
+        hall_nce[idx], hall_inter[idx] = c, i
+        all_points[idx] = pts
+        all_metrics.append(out)
+
+        ok = validate_batch(pop, n_layers, min_ces=cfg.min_ces,
+                            max_ces=cfg.max_ces)
+        ok &= np.isfinite(pts).all(1)
+        hall_ok[idx] = ok
+        archive.update(pts[ok], idx[ok])
+
+        # running normalization for scalar selection scores
+        if ok.any():
+            lo = np.minimum(lo, pts[ok].min(0))
+            hi = np.maximum(hi, pts[ok].max(0))
+        span = np.maximum(hi - lo, 1e-30)
+        if cfg.mode == "scalarized":
+            w = np.asarray(cfg.weights if cfg.weights is not None
+                           else np.ones(n_obj))
+        else:
+            w = rng.random(n_obj) + 0.1       # fresh direction each gen
+        w = w / w.sum()
+        score = np.where(ok, ((pts - lo) / span) @ w, np.inf)
+
+        if gen == gens - 1:
+            break
+
+        # ---- parents: archive front + this generation's elite slice ----
+        n_elite = max(1, int(sizes[gen] * cfg.elite_frac))
+        elite = idx[np.argsort(score, kind="stable")[:n_elite]]
+        pool = np.unique(np.concatenate([archive.payload, elite]))
+        parents = DesignBatch.from_numpy(
+            hall_end[pool], hall_pipe[pool], hall_nce[pool], hall_inter[pool])
+
+        n_imm = int(sizes[gen + 1] * cfg.immigrant_frac)
+        children = make_children(rng, parents, n_layers, cfg,
+                                 sizes[gen + 1] - n_imm)
+        imm = _initial_pop(rng, n_layers, cfg, n_imm) if n_imm else None
+        pop = concat_batches([children, imm]) if imm is not None else children
+
+        history.append(dict(gen=gen, evals=base,
+                            archive=len(archive),
+                            best=dict(zip(cfg.objectives,
+                                          archive.points.min(0).tolist()))
+                            if len(archive) else {}))
+
+    seconds = time.time() - t0
+    metrics = {k: np.concatenate([m[k] for m in all_metrics])
+               for k in all_metrics[0]}
+    # best single design under one CONSISTENT scalarization (final
+    # normalization span; configured weights, equal if none)
+    w = np.asarray(cfg.weights) if cfg.weights is not None \
+        else np.ones(n_obj)
+    w = w / w.sum()
+    final_scores = np.where(
+        hall_ok,
+        ((all_points - lo) / np.maximum(hi - lo, 1e-30)) @ w, np.inf)
+    best_scalar_idx = int(np.argmin(final_scores))
+    history.append(dict(gen=gens - 1, evals=total, archive=len(archive),
+                        best=dict(zip(cfg.objectives,
+                                      archive.points.min(0).tolist()))
+                        if len(archive) else {},
+                        best_scalar_idx=best_scalar_idx))
+    return SearchResult(
+        batch=DesignBatch.from_numpy(hall_end, hall_pipe, hall_nce,
+                                     hall_inter),
+        metrics=metrics,
+        points=all_points,
+        front_idx=np.sort(archive.payload.copy()),
+        objectives=cfg.objectives,
+        n_evals=total,
+        seconds=seconds,
+        history=history,
+    )

@@ -12,8 +12,12 @@ BOARDS = {
 
 BOARD_NAMES = tuple(BOARDS)
 
+# the board used when none is named — the paper's main DSE target (XCp
+# custom-family exploration, Fig. 10, runs on VCU110)
+DEFAULT_BOARD = "vcu110"
 
-def get_board(name: str) -> DeviceSpec:
+
+def get_board(name: str = DEFAULT_BOARD) -> DeviceSpec:
     if name not in BOARDS:
         raise KeyError(f"unknown board {name!r}; known: {sorted(BOARDS)}")
     return BOARDS[name]

@@ -85,6 +85,8 @@ def run_cell(arch: str, shape_name: str, mesh_name: str,
 
             mem = compiled.memory_analysis()
             cost = compiled.cost_analysis()
+            if isinstance(cost, (list, tuple)):   # jax <= 0.4.x: per-program
+                cost = cost[0] if cost else {}    # list; newer: one dict
             hlo = compiled.as_text()
             coll = collective_stats(hlo)
             walked = hlo_walk(hlo)  # trip-count-multiplied per-device costs

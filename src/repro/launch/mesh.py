@@ -8,10 +8,16 @@ import (see dryrun.py); smoke tests and benches see the real single device.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:                                # jax >= 0.5 explicit-sharding API
+    from jax.sharding import AxisType
+except ImportError:                 # older jax: meshes are Auto by default
+    AxisType = None
 
 
 def _mesh(shape, axes):
+    if AxisType is None:
+        return jax.make_mesh(shape, axes)
     return jax.make_mesh(shape, axes,
                          axis_types=(AxisType.Auto,) * len(axes))
 

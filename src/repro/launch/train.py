@@ -31,6 +31,7 @@ import time
 
 import jax
 import jax.numpy as jnp
+from ..compat import shard_map
 
 from ..configs import SHAPES, get_config
 from ..configs.base import ShapeSpec
@@ -116,7 +117,7 @@ def main(argv=None) -> int:
             from jax.sharding import PartitionSpec as P
             dp_axis = plan.dp_axes[0] if plan.dp_axes else "data"
             jit_step = jax.jit(
-                jax.shard_map(
+                shard_map(
                     step, mesh=mesh,
                     in_specs=(P(), P(), P(dp_axis)),
                     out_specs=(P(), P(), P()),

@@ -1,0 +1,101 @@
+"""Property-test shim: real ``hypothesis`` when installed, otherwise a tiny
+fixed-example fallback so the tier-1 suite collects and runs everywhere.
+
+The fallback implements just the strategy surface these tests use
+(integers, floats, lists, sampled_from, composite) as seeded draw
+functions, and ``given`` replays each test over a small deterministic
+example set — property *smoke* coverage, not full shrinking search.
+Install the ``test`` extra (``pip install -e .[test]``) for the real thing.
+"""
+from __future__ import annotations
+
+try:                                       # pragma: no cover - env dependent
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+    _FALLBACK_EXAMPLES = 25
+
+    class _Strategy:
+        def __init__(self, draw_fn):
+            self._draw = draw_fn
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: int(rng.integers(min_value,
+                                                          max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: float(rng.uniform(min_value,
+                                                           max_value)))
+
+        @staticmethod
+        def sampled_from(seq):
+            seq = list(seq)
+            return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10, unique=False):
+            def draw(rng):
+                size = int(rng.integers(min_size, max_size + 1))
+                out: list = []
+                for _ in range(50 * (size + 1)):
+                    if len(out) >= size:
+                        break
+                    x = elements.example(rng)
+                    if unique and x in out:
+                        continue
+                    out.append(x)
+                if len(out) < size:
+                    raise ValueError("fallback lists(): cannot draw "
+                                     f"{size} unique elements")
+                return out
+            return _Strategy(draw)
+
+        @staticmethod
+        def composite(fn):
+            def build(*args, **kwargs):
+                def draw_full(rng):
+                    return fn(lambda strat: strat.example(rng),
+                              *args, **kwargs)
+                return _Strategy(draw_full)
+            return build
+
+    st = _Strategies()
+
+    def settings(max_examples=None, deadline=None, **_ignored):
+        def deco(fn):
+            if max_examples is not None:
+                fn._hypo_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*arg_strats, **kw_strats):
+        def deco(fn):
+            n = min(getattr(fn, "_hypo_max_examples", _FALLBACK_EXAMPLES),
+                    _FALLBACK_EXAMPLES)
+
+            # NOTE: no functools.wraps — pytest must see a zero-arg
+            # signature, not the wrapped test's strategy parameters
+            def runner():
+                for case in range(n):
+                    rng = np.random.default_rng(0xC0FFEE + case)
+                    args = [s.example(rng) for s in arg_strats]
+                    kwargs = {k: s.example(rng) for k, s in kw_strats.items()}
+                    fn(*args, **kwargs)
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            return runner
+        return deco
+
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

@@ -2,8 +2,7 @@
 from __future__ import annotations
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from hypo_fallback import given, settings, st
 
 from repro.cnn.registry import get_cnn
 from repro.core.builder import _largest_remainder, build

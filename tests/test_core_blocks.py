@@ -4,8 +4,7 @@ from __future__ import annotations
 import math
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from hypo_fallback import given, settings, st
 
 from repro.core.blocks import (CE, eval_pipelined, eval_single_ce,
                                layer_cycles, layer_utilization,

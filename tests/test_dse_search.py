@@ -1,0 +1,234 @@
+"""The DSE subsystem: vectorized samplers, encoding round-trip, vectorized
+pareto vs the seed reference, and the guided search loop."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.cnn.registry import get_cnn
+from repro.core.dse import (
+    NS,
+    DesignBatch,
+    ParetoArchive,
+    SearchConfig,
+    decode_design,
+    encode_specs,
+    explore,
+    make_children,
+    orient,
+    pareto,
+    sample_custom,
+    sample_custom_loop,
+    sample_mixed,
+    sample_mixed_loop,
+    search,
+    validate_batch,
+)
+from repro.core.evaluator import evaluate_design
+from repro.fpga.boards import get_board
+
+OBJ = ("latency_s", "buffer_bytes")
+
+
+# ------------------------------------------------------------------ samplers
+@pytest.mark.parametrize("n_layers", [4, 13, 52])
+@pytest.mark.parametrize("family", ["custom", "mixed"])
+def test_samplers_valid_and_canonical(family, n_layers):
+    rng = np.random.default_rng(0)
+    f = sample_custom if family == "custom" else sample_mixed
+    batch = f(rng, n_layers, 3000)
+    assert validate_batch(batch, n_layers, min_ces=1, max_ces=11).all()
+
+
+@pytest.mark.parametrize("n_layers", [1, 2, 3, 5])
+def test_sample_custom_degenerate_small_net(n_layers):
+    """Regression: with few layers the pipelined head used to consume every
+    layer (or run past the end) and emit out-of-range segments."""
+    rng = np.random.default_rng(1)
+    for f in (sample_custom, sample_custom_loop):
+        batch = f(rng, n_layers, 1000)
+        assert validate_batch(batch, n_layers, min_ces=1, max_ces=11).all()
+        seg_end = np.asarray(batch.seg_end)
+        assert (seg_end <= n_layers).all()
+        # every design still decodes to a spec covering all layers
+        for i in range(0, 1000, 97):
+            spec = decode_design(batch, i, n_layers)
+            spec.validate(n_layers)
+
+
+def test_vectorized_samplers_match_loop_family():
+    """Same family envelope as the per-design reference loops: identical
+    support for segment counts and total CE counts."""
+    rng = np.random.default_rng(2)
+    L, n = 30, 4000
+
+    def stats(batch):
+        end, pipe, nce, inter = batch.to_numpy()
+        prev = np.concatenate([np.zeros((n, 1), end.dtype), end[:, :-1]], 1)
+        active = end > prev
+        return (np.unique(active.sum(1)),
+                np.unique((nce * active).sum(1)))
+
+    for vec, loop in ((sample_custom, sample_custom_loop),
+                      (sample_mixed, sample_mixed_loop)):
+        sv, cv = stats(vec(rng, L, n))
+        sl, cl = stats(loop(rng, L, n))
+        assert set(sv) == set(sl)
+        assert set(cv) == set(cl)
+
+
+# ----------------------------------------------------------------- encoding
+def _assert_roundtrip(batch: DesignBatch, n_layers: int):
+    specs = [decode_design(batch, i, n_layers) for i in range(batch.batch)]
+    back = encode_specs(specs, n_layers)
+    for a, b in zip(batch.to_numpy(), back.to_numpy()):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_roundtrip_sampled_batches():
+    rng = np.random.default_rng(3)
+    for L in (6, 21, 52):
+        _assert_roundtrip(sample_custom(rng, L, 200), L)
+        _assert_roundtrip(sample_mixed(rng, L, 200), L)
+
+
+def test_roundtrip_mutated_batches():
+    """Every mutated/crossed-over row stays canonical: decodes to a valid
+    AcceleratorSpec that re-encodes to the same row."""
+    rng = np.random.default_rng(4)
+    L = 34
+    cfg = SearchConfig(min_ces=2, max_ces=11)
+    parents = sample_mixed(rng, L, 256)
+    kids = make_children(rng, parents, L, cfg, 1024)
+    assert validate_batch(kids, L, min_ces=cfg.min_ces,
+                          max_ces=cfg.max_ces).all()
+    _assert_roundtrip(kids.take(np.arange(0, 1024, 7)), L)
+    for i in range(0, 1024, 111):
+        decode_design(kids, i, L).validate(L)
+
+
+# ------------------------------------------------------------------- pareto
+def _pareto_seed_reference(points: np.ndarray) -> np.ndarray:
+    """The seed implementation's quadratic scan, kept verbatim as oracle."""
+    order = np.lexsort(points.T[::-1])
+    keep: list[int] = []
+    best = np.full(points.shape[1], np.inf)
+    for i in order:
+        if np.any(points[i] < best - 1e-12) or not keep:
+            if not any(np.all(points[j] <= points[i]) and
+                       np.any(points[j] < points[i]) for j in keep):
+                keep.append(i)
+                best = np.minimum(best, points[i])
+    return np.asarray(sorted(keep))
+
+
+def test_pareto_matches_seed_on_random_sets():
+    rng = np.random.default_rng(5)
+    for n in (1, 2, 17, 400):
+        for _ in range(6):
+            pts = rng.random((n, 2))
+            if n > 4:     # exercise ties and duplicates too
+                pts[::5] = np.round(pts[::5], 1)
+                pts[3] = pts[1]
+            np.testing.assert_array_equal(
+                pareto(pts), _pareto_seed_reference(pts))
+
+
+def test_pareto_nd_is_nondominated():
+    rng = np.random.default_rng(6)
+    pts = rng.random((300, 3))
+    idx = pareto(pts)
+    front = pts[idx]
+    for p in front:
+        assert not ((front <= p).all(1) & (front < p).any(1)).any()
+    # every dropped point is weakly dominated by some front point
+    rest = np.delete(pts, idx, axis=0)
+    for q in rest:
+        assert ((front <= q).all(1)).any()
+
+
+def test_pareto_archive_incremental_matches_batch():
+    rng = np.random.default_rng(7)
+    pts = rng.random((1200, 2))
+    pts[::7] = np.round(pts[::7], 1)
+    arch = ParetoArchive(2)
+    for lo in range(0, 1200, 100):
+        arch.update(pts[lo:lo + 100], np.arange(lo, lo + 100))
+    got = np.sort(arch.payload)
+    want = pareto(pts)
+    np.testing.assert_array_equal(got, want)
+
+
+# ------------------------------------------------------------------- search
+def test_search_metrics_match_scalar_on_searched_designs():
+    """Batch metrics of guided-search designs (not just templates) agree
+    with the scalar evaluator."""
+    net = get_cnn("mobilenetv2")
+    dev = get_board("zc706")
+    res = search(net, dev, SearchConfig(pop_size=128, budget=512, seed=8))
+    pick = np.unique(np.concatenate(
+        [res.front_idx[:4], np.arange(0, res.n_evals, res.n_evals // 8)]))
+    rtol = {"latency_s": 1e-4, "throughput_ips": 1e-4,
+            "buffer_bytes": 1e-4, "access_bytes": 0.04}
+    for i in pick:
+        spec = decode_design(res.batch, int(i), len(net))
+        m = evaluate_design(
+            spec, net, dev,
+            inter_segment_pipelining=bool(np.asarray(
+                res.batch.inter_pipe[int(i)])))
+        scalar = {"latency_s": m.latency_s,
+                  "throughput_ips": m.throughput_ips,
+                  "buffer_bytes": float(m.buffer_bytes),
+                  "access_bytes": m.access_bytes}
+        for k, tol in rtol.items():
+            np.testing.assert_allclose(
+                float(res.metrics[k][i]), scalar[k], rtol=tol,
+                err_msg=f"design {i} {k}")
+
+
+def test_explore_search_api():
+    net = get_cnn("mobilenetv2")
+    dev = get_board("vcu110")
+    res = explore(net, dev, n=1024, strategy="search", seed=9, chunk=256,
+                  config=SearchConfig(pop_size=256))
+    assert res.strategy == "search"
+    assert res.n_evals == 1024
+    assert len(res.metrics["latency_s"]) == res.n_evals
+    assert validate_batch(res.batch, len(net), min_ces=2, max_ces=11).all()
+    fp = res.front_points()
+    # the reported front is mutually non-dominated and on the sample front
+    for p in fp:
+        assert not ((fp <= p).all(1) & (fp < p).any(1)).any()
+    all_pts = orient(res.metrics, OBJ)
+    np.testing.assert_array_equal(np.sort(res.front),
+                                  pareto(all_pts))
+
+
+def test_search_dominates_random_custom_best_latency():
+    """Guided search finds designs strictly dominating the best-latency
+    design of an equal-budget random sweep of the paper's custom family
+    (small-budget version of the Fig. 10 benchmark check)."""
+    net = get_cnn("mobilenetv2")
+    dev = get_board("vcu110")
+    rnd = explore(net, dev, n=16384, seed=7, chunk=4096)
+    srch = explore(net, dev, n=16384, strategy="search", seed=3, chunk=4096)
+    rp = orient(rnd.metrics, OBJ)
+    ref = rp[int(np.argmin(rp[:, 0]))]
+    sp = orient(srch.metrics, OBJ)
+    assert ((sp <= ref).all(1) & (sp < ref).any(1)).any()
+
+
+@pytest.mark.slow
+def test_search_dominates_random_at_100k_budget():
+    """Acceptance check at the paper's full budget: explore(strategy=
+    "search") on MobileNetV2 + the default board strictly dominates the
+    best random-sample design on (latency, buffer)."""
+    net = get_cnn("mobilenetv2")
+    dev = get_board()
+    rnd = explore(net, dev, n=100_000, seed=7)
+    srch = explore(net, dev, n=100_000, strategy="search", seed=3)
+    rp = orient(rnd.metrics, OBJ)
+    ref = rp[int(np.argmin(rp[:, 0]))]
+    sp = orient(srch.metrics, OBJ)
+    dom = (sp <= ref).all(1) & (sp < ref).any(1)
+    assert dom.any()

@@ -2,8 +2,7 @@
 from __future__ import annotations
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from hypo_fallback import given, settings, st
 
 from repro.core.notation import AcceleratorSpec, SegmentSpec, format_spec, parse
 
