@@ -1,0 +1,146 @@
+"""Perf gate: record the evaluate_batch hot-path trajectory.
+
+Emits ``artifacts/bench/BENCH_eval.json`` with µs/design at the DSE batch
+sizes, jit compile time and a peak-memory estimate, so every PR can be
+checked against the recorded trajectory instead of folklore.
+
+    python -m benchmarks.perf_gate            # full gate (B up to 65536)
+    python -m benchmarks.perf_gate --quick    # CI smoke (small B)
+
+The committed JSON is the trajectory; re-run and commit when the hot path
+changes.  ``reference.pre_fusion_b4096_us`` pins the pre-fusion baseline
+this PR replaced (measured on the same container) so speedups stay
+auditable.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.compat import enable_persistent_compilation_cache
+from repro.cnn.registry import get_cnn
+from repro.core import batch_eval
+from repro.core.batch_eval import (DEFAULT_TILE, evaluate_batch,
+                                   make_device_tables, make_tables,
+                                   padded_rows, pes_hint)
+from repro.core.dse.samplers import sample_mixed
+from repro.fpga.boards import get_board
+from repro.kernels.mccm_eval import pair_tables, resolve_backend
+
+from .common import fmt_table, save
+
+FULL_SIZES = (32, 4096, 65536)
+QUICK_SIZES = (32, 512)
+
+#: pre-fusion evaluate_batch at B=4096 (xception × vcu110, this container),
+#: measured at the commit preceding the fused/tiled hot path
+PRE_FUSION_B4096_US = 348.6
+
+
+def _peak_bytes_estimate(B: int, tables, dev) -> int:
+    """Analytic live-set estimate of the tiled hot path (see docs/perf.md):
+    ~3 (tile, L, P) parallelism-search blocks + the per-tile layer maps
+    (CE one-hot, segment one-hot, scan temporaries), plus the (B,)-sized
+    in/out arrays."""
+    from repro.core.dse.encoding import NC, NS
+
+    pairs = pair_tables(tables.candidates, pes_hint(dev.pes))
+    P = len(pairs.pair_prod)
+    tile = DEFAULT_TILE
+    per_tile = 3 * tile * tables.max_L * P * 4 \
+        + tile * tables.max_L * (NC + NS + 8) * 4
+    io = B * (3 * NS + NC) * 4
+    return per_tile + io
+
+
+def run(verbose: bool = True, quick: bool = False,
+        sizes=None) -> dict:
+    enable_persistent_compilation_cache()
+    backend = resolve_backend(None)
+    net, dev = get_cnn("xception"), get_board("vcu110")
+    tables = make_tables(net)
+    rng = np.random.default_rng(0)
+    sizes = sizes or (QUICK_SIZES if quick else FULL_SIZES)
+
+    jax.clear_caches()
+    table, points = [], {}
+    for B in sizes:
+        db = sample_mixed(rng, len(net), B)
+        t0 = time.time()
+        r = evaluate_batch(db, tables, dev)
+        jax.block_until_ready(r["latency_s"])
+        first_s = time.time() - t0
+        reps = 1 if quick else 3
+        t0 = time.time()
+        for _ in range(reps):
+            r = evaluate_batch(db, tables, dev)
+            jax.block_until_ready(r["latency_s"])
+        steady_s = (time.time() - t0) / reps
+        # batches pad to a tile multiple: B=32 executes 128 rows.  Both
+        # views are recorded — us_per_design is the user-facing cost of a
+        # B-design call, us_per_row the per-executed-row throughput.
+        rows = padded_rows(B)
+        us = steady_s / B * 1e6
+        peak = _peak_bytes_estimate(B, tables, dev)
+        try:
+            devt = make_device_tables(dev)
+            mem = batch_eval._evaluate_jit.lower(
+                db, tables, devt, backend=backend, tile=DEFAULT_TILE,
+                fm_tile_rows=2, pes_hint_static=pes_hint(dev.pes),
+                design_tile=16).compile().memory_analysis()
+            xla_peak = int(getattr(mem, "temp_size_in_bytes", 0) or 0)
+        except Exception:  # noqa: BLE001 — backend without memory stats
+            xla_peak = 0
+        points[str(B)] = {
+            "us_per_design": us,
+            "us_per_row": steady_s / rows * 1e6,
+            "rows_executed": rows,
+            "steady_s": steady_s,
+            "compile_s": max(first_s - steady_s, 0.0),
+            "peak_bytes_estimate": peak,
+            "xla_temp_bytes": xla_peak,
+        }
+        table.append([f"B={B}", f"{us:.1f}", f"{steady_s / rows * 1e6:.1f}",
+                      str(rows), f"{max(first_s - steady_s, 0.0):.2f}",
+                      f"{peak/1e6:.1f}"])
+
+    payload = {
+        "benchmark": "evaluate_batch hot path (xception x vcu110)",
+        "backend": backend,
+        "tile": DEFAULT_TILE,
+        "quick": bool(quick),
+        "jax": jax.__version__,
+        "cpu_count": os.cpu_count(),
+        "created_unix": int(time.time()),
+        "points": points,
+        "reference": {"pre_fusion_b4096_us": PRE_FUSION_B4096_US,
+                      "paper_us": 6300.0},
+        "checks": {
+            "speedup_2x_at_4096": (
+                points["4096"]["us_per_design"] < PRE_FUSION_B4096_US / 2
+                if "4096" in points else True),
+        },
+    }
+    if verbose:
+        print(fmt_table(table, ["batch", "us/design", "us/row", "rows",
+                                "compile_s", "peak_MB(est)"]))
+        print("checks:", payload["checks"])
+    save("BENCH_eval", payload)
+    return payload
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small batches only (CI smoke)")
+    args = ap.parse_args(argv)
+    payload = run(quick=args.quick)
+    return 0 if all(payload["checks"].values()) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -18,9 +18,16 @@ def main(argv=None) -> int:
                     help="comma-separated benchmark names")
     args = ap.parse_args(argv)
 
+    from repro.compat import enable_persistent_compilation_cache
+
+    # opt-in on-disk jit cache (REPRO_JAX_CACHE_DIR=...): repeated harness
+    # runs skip every compile — see docs/perf.md
+    enable_persistent_compilation_cache()
+
     from . import (eval_speed, fig5_fig8_fronts, fig6_fig7_breakdown,
-                   fig9_fig10_dse, roofline_report, tab1_arch_comparison,
-                   tab4_accuracy, tab5_best_arch, tpu_model_accuracy)
+                   fig9_fig10_dse, perf_gate, roofline_report,
+                   tab1_arch_comparison, tab4_accuracy, tab5_best_arch,
+                   tpu_model_accuracy)
 
     entries = [
         ("tab1_arch_comparison", tab1_arch_comparison.run, {}),
@@ -31,6 +38,7 @@ def main(argv=None) -> int:
         ("fig9_fig10_dse", fig9_fig10_dse.run,
          {"n_sample": 10_000 if args.quick else 100_000}),
         ("eval_speed", eval_speed.run, {}),
+        ("perf_gate", perf_gate.run, {"quick": args.quick}),
         ("roofline_report", roofline_report.run, {}),
         ("tpu_model_accuracy", tpu_model_accuracy.run, {}),
     ]

@@ -10,7 +10,27 @@ modern spelling:
 """
 from __future__ import annotations
 
+import os
+
 import jax
+
+#: opt-in persistent compilation cache (see docs/perf.md): point this env
+#: var at a directory and compiled programs survive process restarts.
+CACHE_ENV = "REPRO_JAX_CACHE_DIR"
+
+
+def enable_persistent_compilation_cache() -> str | None:
+    """Enable jax's on-disk compilation cache when ``REPRO_JAX_CACHE_DIR``
+    is set.  Returns the cache dir (or None when disabled).  Idempotent —
+    safe to call from every entry point."""
+    cache_dir = os.environ.get(CACHE_ENV)
+    if not cache_dir:
+        return None
+    jax.config.update("jax_compilation_cache_dir", cache_dir)
+    # the DSE programs compile in ~1s; cache them all, not just the slow ones
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+    jax.config.update("jax_persistent_cache_min_entry_size_bytes", 0)
+    return cache_dir
 
 
 def shard_map(f, *, mesh, in_specs, out_specs, **kwargs):

@@ -26,7 +26,8 @@ _LAZY = {name: ".dse" for name in (
     "SearchResult", "decode_design", "encode_specs", "explore", "pareto",
     "sample_custom", "sample_mixed", "search", "validate_batch")}
 _LAZY.update({name: ".batch_eval" for name in (
-    "evaluate_batch", "evaluate_specs", "make_tables")})
+    "evaluate_batch", "evaluate_specs", "evaluate_specs_multi",
+    "make_tables")})
 
 
 def __getattr__(name):
@@ -66,6 +67,7 @@ __all__ = [
     "evaluate_batch",
     "evaluate_design",
     "evaluate_specs",
+    "evaluate_specs_multi",
     "eval_pipelined",
     "eval_single_ce",
     "explore",

@@ -1,11 +1,11 @@
 """Vectorized MCCM: evaluate thousands of multiple-CE designs as ONE jitted
-JAX program.
+JAX program — recompile-free across CNNs, boards and sweep sizes.
 
 The scalar path (``evaluator.evaluate_design``) walks Python objects at
 ~100 µs–1 ms per design; the paper's own C++/Python model reports 6.3 ms.
 Here every design in a batch is encoded as fixed-shape arrays (segments
 padded to ``NS``, CEs to ``NC``) and Eqs. 1–9 are evaluated with masked
-tensor ops — the whole DSE sample becomes a handful of XLA kernels.
+tensor ops.
 
 Exactness: this is the *same* model, not an approximation —
 ``tests/test_batch_eval.py`` asserts agreement with the scalar evaluator on
@@ -14,23 +14,31 @@ distribution, the discrete ⟨pf, ph, pw⟩ parallelism search, Eq. 6's two
 buffered-access options, and the exact pipeline stage-sum via the
 prefix/suffix-max identity all replicated in vector form).
 
-Layout
-------
-* ``NetTables``  — static per-CNN arrays (layer dims, ceil-div tables).
-* ``DesignBatch`` — (B, NS) segment encoding, defined in
-  ``core.dse.encoding`` (re-exported here for compatibility).
-* ``evaluate_batch`` — jitted core: DesignBatch -> metric arrays.
+Layout (see docs/perf.md for the why)
+-------------------------------------
+* ``NetTables``  — per-CNN arrays as a *traced pytree*, padded to a shared
+  ``max_L`` with a layer-valid mask, so every CNN shares one compiled
+  program.
+* ``DeviceTables`` — the board as traced scalars, ditto for boards.
+* ``DesignBatch`` — (B, NS) segment encoding (``core.dse.encoding``).
+* ``evaluate_batch`` — jitted core.  Designs are processed in tiles of
+  ``tile`` via ``lax.map``; per tile the ⟨pf, ph, pw⟩ search builds only a
+  (tile, L, P) cost block (cache/VMEM-resident) instead of the old
+  (B, L, 18, 18) HBM tensor, dispatched to ``kernels.mccm_eval`` (pure-jnp
+  ref on CPU, the fused Pallas kernel on TPU, ``interpret=True`` under CI).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 from functools import partial
+from typing import NamedTuple
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
+from ..kernels.mccm_eval import pair_tables, parallelism_search, resolve_backend
 from .blocks import CANDIDATES_DEFAULT
 from .device import DeviceSpec
 from .dse.encoding import NC, NS, DesignBatch, encode_specs  # noqa: F401
@@ -39,55 +47,154 @@ from .workload import Network
 
 NEG = -1.0e30
 
+#: shared layer-axis padding: covers the whole CNN zoo (resnet152 = 155),
+#: so one compiled program serves every registered CNN.  Larger nets pad
+#: to the next multiple of 32 (one extra compile per new size bucket).
+DEFAULT_MAX_L = 160
+
+#: design-tile width of the lax.map hot loop (the CPU analogue of the
+#: Pallas kernel's VMEM design tile).
+DEFAULT_TILE = 128
+
+#: static PE-budget hints for pruning the ⟨pf, ph⟩ pair grid.  Every
+#: registered board (<= 2520 DSPs) lands in the first bucket, keeping a
+#: single compile across boards; exotic devices fall into coarser buckets.
+PES_HINTS = (2520, 8192, 65536)
+
 
 # --------------------------------------------------------------------------
-# static per-network tables
+# static-per-CNN tables, as a traced pytree
 # --------------------------------------------------------------------------
-@dataclass(frozen=True, eq=False)      # eq=False: identity hash — the
-class NetTables:                       # tables are static jit args
-    name: str
-    L: int
-    F: np.ndarray          # out channels
-    CKK: np.ndarray        # c * kh * kw  (c=1 for depthwise)
-    OH: np.ndarray
-    OW: np.ndarray
-    MACS: np.ndarray
-    W: np.ndarray          # weights (elements)
-    IFM: np.ndarray
-    OFM: np.ndarray
-    EXTRA: np.ndarray      # residual OFM copy (elements)
-    BAND: np.ndarray       # in_ch * kh * iw  (IFM row band)
-    OFM_ROW: np.ndarray    # out_ch * ow
-    CEIL_F: np.ndarray     # (L, NCAND) ceil(F / cand)
-    CEIL_OH: np.ndarray
-    CEIL_OW: np.ndarray
-    CAND: np.ndarray
+@dataclass(frozen=True)
+class NetTables:
+    """Per-network layer tables, padded to ``max_L`` (= ``F.shape[0]``).
+
+    All array fields are pytree *data* — a NetTables is traced, never a
+    static jit argument, so switching CNNs does not recompile.  Padded
+    layers carry zeros and ``valid`` masks them out.
+    """
+
+    L: jnp.ndarray         # ()  i32 true layer count
+    valid: jnp.ndarray     # (max_L,) f32 1.0 for real layers
+    F: jnp.ndarray         # out channels
+    CKK: jnp.ndarray       # c * kh * kw  (c=1 for depthwise)
+    OH: jnp.ndarray
+    OW: jnp.ndarray
+    MACS: jnp.ndarray
+    W: jnp.ndarray         # weights (elements)
+    IFM: jnp.ndarray
+    OFM: jnp.ndarray
+    EXTRA: jnp.ndarray     # residual OFM copy (elements)
+    BAND: jnp.ndarray      # in_ch * kh * iw  (IFM row band)
+    OFM_ROW: jnp.ndarray   # out_ch * ow
+    CEIL_F: jnp.ndarray    # (max_L, K) ceil(F / cand)
+    CEIL_OH: jnp.ndarray
+    CEIL_OW: jnp.ndarray
+    CAND: jnp.ndarray      # (K,)
+    candidates: tuple = CANDIDATES_DEFAULT   # static metadata
+
+    @property
+    def n_layers(self) -> int:
+        """Concrete layer count (host-side use only)."""
+        return int(self.L)
+
+    @property
+    def max_L(self) -> int:
+        return self.F.shape[0]
 
 
-def make_tables(net: Network,
-                candidates=CANDIDATES_DEFAULT) -> NetTables:
-    cand = np.asarray(candidates, np.int32)
+jax.tree_util.register_dataclass(
+    NetTables,
+    data_fields=["L", "valid", "F", "CKK", "OH", "OW", "MACS", "W", "IFM",
+                 "OFM", "EXTRA", "BAND", "OFM_ROW", "CEIL_F", "CEIL_OH",
+                 "CEIL_OW", "CAND"],
+    meta_fields=["candidates"],
+)
+
+
+def make_tables(net: Network, candidates=CANDIDATES_DEFAULT,
+                max_L: int | None = None) -> NetTables:
+    cand = np.asarray(candidates, np.float64)
     L = len(net)
+    if max_L is None:
+        max_L = DEFAULT_MAX_L
+    if L > max_L:
+        max_L = -(-L // 32) * 32
     dims = [l.dims() for l in net]
+
+    def pad(vals):
+        a = np.zeros(max_L, np.float64)
+        a[:L] = vals
+        return jnp.asarray(a, jnp.float32)
+
     F = np.array([d["f"] for d in dims], np.float64)
-    CKK = np.array([d["c"] * d["kh"] * d["kw"] for d in dims], np.float64)
     OH = np.array([d["oh"] for d in dims], np.float64)
     OW = np.array([d["ow"] for d in dims], np.float64)
+
+    def pad2(ceil_tab):
+        a = np.zeros((max_L, len(cand)), np.float64)
+        a[:L] = ceil_tab
+        return jnp.asarray(a, jnp.float32)
+
     return NetTables(
-        name=net.name, L=L, F=F, CKK=CKK, OH=OH, OW=OW,
-        MACS=np.array([l.macs for l in net], np.float64),
-        W=np.array([l.weights_size for l in net], np.float64),
-        IFM=np.array([l.ifm_size for l in net], np.float64),
-        OFM=np.array([l.ofm_size for l in net], np.float64),
-        EXTRA=np.array([l.ofm_size if l.residual else 0 for l in net],
-                       np.float64),
-        BAND=np.array([l.in_ch * l.kh * l.iw for l in net], np.float64),
-        OFM_ROW=np.array([l.out_ch * l.ow for l in net], np.float64),
-        CEIL_F=np.ceil(F[:, None] / cand[None, :]),
-        CEIL_OH=np.ceil(OH[:, None] / cand[None, :]),
-        CEIL_OW=np.ceil(OW[:, None] / cand[None, :]),
-        CAND=cand,
+        L=jnp.asarray(L, jnp.int32),
+        valid=pad(np.ones(L)),
+        F=pad(F),
+        CKK=pad([d["c"] * d["kh"] * d["kw"] for d in dims]),
+        OH=pad(OH), OW=pad(OW),
+        MACS=pad([l.macs for l in net]),
+        W=pad([l.weights_size for l in net]),
+        IFM=pad([l.ifm_size for l in net]),
+        OFM=pad([l.ofm_size for l in net]),
+        EXTRA=pad([l.ofm_size if l.residual else 0 for l in net]),
+        BAND=pad([l.in_ch * l.kh * l.iw for l in net]),
+        OFM_ROW=pad([l.out_ch * l.ow for l in net]),
+        CEIL_F=pad2(np.ceil(F[:, None] / cand[None, :])),
+        CEIL_OH=pad2(np.ceil(OH[:, None] / cand[None, :])),
+        CEIL_OW=pad2(np.ceil(OW[:, None] / cand[None, :])),
+        CAND=jnp.asarray(cand, jnp.float32),
+        candidates=tuple(candidates),
     )
+
+
+# --------------------------------------------------------------------------
+# the board, as traced scalars
+# --------------------------------------------------------------------------
+@dataclass(frozen=True)
+class DeviceTables:
+    """DeviceSpec as a traced scalar struct — boards don't recompile."""
+
+    pes: jnp.ndarray
+    on_chip_bytes: jnp.ndarray
+    bpc: jnp.ndarray           # off-chip bytes per cycle
+    bps: jnp.ndarray           # off-chip bytes per second
+    clock_hz: jnp.ndarray
+    wordbytes: jnp.ndarray
+
+
+jax.tree_util.register_dataclass(
+    DeviceTables,
+    data_fields=["pes", "on_chip_bytes", "bpc", "bps", "clock_hz",
+                 "wordbytes"],
+    meta_fields=[],
+)
+
+
+def make_device_tables(dev: DeviceSpec) -> DeviceTables:
+    s = lambda x: jnp.asarray(x, jnp.float32)
+    return DeviceTables(
+        pes=s(dev.pes), on_chip_bytes=s(dev.on_chip_bytes),
+        bpc=s(dev.off_chip_bytes_per_cycle), bps=s(dev.off_chip_gbps * 1e9),
+        clock_hz=s(dev.clock_hz), wordbytes=s(dev.wordbytes))
+
+
+def pes_hint(pes: float) -> int | None:
+    """Static pair-pruning bucket for a concrete PE count (None = no
+    pruning for devices beyond the ladder)."""
+    for h in PES_HINTS:
+        if pes <= h:
+            return h
+    return None
 
 
 # --------------------------------------------------------------------------
@@ -96,7 +203,7 @@ def make_tables(net: Network,
 def _largest_remainder(shares, total, valid):
     """Vectorized largest-remainder rounding (floor 1 per valid CE).
 
-    shares: (B, NC) f64; total: scalar; valid: (B, NC) bool.
+    shares: (B, NC) f32; total: scalar; valid: (B, NC) bool.
     Mirrors builder._largest_remainder including tie-breaking by index.
     """
     n = valid.sum(-1)                                  # (B,)
@@ -138,20 +245,50 @@ def _seg_max(x, onehot):
     return big.max(axis=1)
 
 
-# --------------------------------------------------------------------------
-# the jitted core
-# --------------------------------------------------------------------------
-@partial(jax.jit, static_argnames=("tables", "dev", "fm_tile_rows"))
-def evaluate_batch(design: DesignBatch, tables: NetTables, dev: DeviceSpec,
-                   fm_tile_rows: int = 2) -> dict[str, jnp.ndarray]:
-    t, B, L = tables, design.batch, tables.L
-    wb = float(dev.wordbytes)
-    bpc = dev.off_chip_bytes_per_cycle
-    cand = jnp.asarray(t.CAND, jnp.float32)
-    ncand = cand.shape[0]
-    layer_ix = jnp.arange(L)
+def seg_scan_max(vals, start_flags, reverse=False):
+    """Running max within groups delimited by start_flags (B, L).
 
-    # ---- layer -> segment / CE maps --------------------------------------
+    Associative, so log2(L) vector steps; a flagged element STARTS its own
+    group.  With ``reverse=True`` the scan runs right-to-left (flags then
+    mark group *ends*)."""
+    def combine(a, b):
+        fa, va = a
+        fb, vb = b
+        return fa | fb, jnp.where(fb, vb, jnp.maximum(va, vb))
+    flags = start_flags[..., ::-1] if reverse else start_flags
+    v = vals[..., ::-1] if reverse else vals
+    _, out = jax.lax.associative_scan(combine, (flags, v), axis=1)
+    return out[..., ::-1] if reverse else out
+
+
+# --------------------------------------------------------------------------
+# the traced core (works on any batch size; callers tile it)
+# --------------------------------------------------------------------------
+class _CEMaps(NamedTuple):
+    seg_start: jnp.ndarray
+    seg_len: jnp.ndarray
+    seg_valid: jnp.ndarray
+    n_seg: jnp.ndarray
+    seg_of_layer: jnp.ndarray
+    onehot: jnp.ndarray
+    valid_b: jnp.ndarray        # (B, max_L) bool
+    idx_in_seg: jnp.ndarray
+    nce_of_layer: jnp.ndarray
+    pipe_bool: jnp.ndarray      # (B, max_L) bool (masked to valid layers)
+    slot_of_layer: jnp.ndarray
+    round_of_layer: jnp.ndarray
+    ce_base: jnp.ndarray
+    ce_of_layer: jnp.ndarray    # clipped to [0, NC)
+    ce_oh: jnp.ndarray
+    pes_ce: jnp.ndarray
+    ce_valid: jnp.ndarray
+
+
+def _ce_maps(design: DesignBatch, t: NetTables, dev: DeviceTables) -> _CEMaps:
+    """Layer -> segment / CE maps + the PE distribution (Eq. 1 prologue)."""
+    B, max_L = design.batch, t.max_L
+    layer_ix = jnp.arange(max_L)
+
     seg_end = design.seg_end                      # (B, NS)
     seg_start = jnp.concatenate(
         [jnp.zeros((B, 1), jnp.int32), seg_end[:, :-1]], axis=1)
@@ -159,72 +296,73 @@ def evaluate_batch(design: DesignBatch, tables: NetTables, dev: DeviceSpec,
     seg_valid = seg_len > 0
     n_seg = seg_valid.sum(-1)                     # (B,)
 
-    # seg of layer: first segment with end > l
-    seg_of_layer = jnp.sum(
+    # seg of layer: first segment with end > l (padded layers clip to the
+    # last column; the valid mask removes them from every reduction)
+    seg_of_layer = jnp.minimum(jnp.sum(
         (layer_ix[None, :, None] >= seg_end[:, None, :]).astype(jnp.int32),
-        axis=-1)                                  # (B, L)
-    valid_layer = jnp.ones((B, L), jnp.float32)   # all layers always covered
-    onehot = _seg_onehot(seg_of_layer, valid_layer)     # (B, L, NS)
+        axis=-1), NS - 1)                         # (B, max_L)
+    valid_b = layer_ix[None, :] < t.L             # (B, max_L) bool
+    valid_layer = valid_b.astype(jnp.float32) * t.valid[None, :]
+    onehot = _seg_onehot(seg_of_layer, valid_layer)     # (B, max_L, NS)
 
     idx_in_seg = layer_ix[None, :] - jnp.take_along_axis(
         seg_start, seg_of_layer, axis=1)
     nce_of_layer = jnp.take_along_axis(design.seg_nce, seg_of_layer, axis=1)
-    pipe_of_layer = jnp.take_along_axis(
-        design.seg_pipe.astype(jnp.int32), seg_of_layer, axis=1) > 0
+    pipe_bool = (jnp.take_along_axis(
+        design.seg_pipe.astype(jnp.int32), seg_of_layer, axis=1) > 0) \
+        & valid_b
     slot_of_layer = idx_in_seg % jnp.maximum(nce_of_layer, 1)
     round_of_layer = idx_in_seg // jnp.maximum(nce_of_layer, 1)
 
     ce_base = jnp.cumsum(design.seg_nce * seg_valid, axis=-1) \
         - design.seg_nce * seg_valid
     ce_of_layer = jnp.take_along_axis(ce_base, seg_of_layer, axis=1) \
-        + slot_of_layer                            # (B, L) in [0, NC)
-    ce_oh = jax.nn.one_hot(ce_of_layer, NC, dtype=jnp.float32)  # (B, L, NC)
+        + slot_of_layer                            # (B, max_L)
+    # overflowing CEs (non-canonical rows) and padded layers map to a zero
+    # one-hot row; clip keeps the ref path's gathers in bounds
+    ce_oh = jax.nn.one_hot(ce_of_layer, NC, dtype=jnp.float32) \
+        * valid_layer[..., None]
+    ce_of_layer = jnp.clip(ce_of_layer, 0, NC - 1)
 
-    # ---- 1. PE distribution (largest remainder over per-CE MACs) --------
-    macs = jnp.asarray(t.MACS)
-    macs_ce = jnp.einsum("l,blc->bc", macs, ce_oh)       # (B, NC)
+    # PE distribution (largest remainder over per-CE MACs)
+    macs_ce = jnp.einsum("l,blc->bc", jnp.asarray(t.MACS), ce_oh)
     ce_valid = jnp.einsum("blc->bc", ce_oh) > 0
-    pes_ce = _largest_remainder(macs_ce, float(dev.pes), ce_valid)  # (B, NC)
+    pes_ce = _largest_remainder(macs_ce, dev.pes, ce_valid)
+    return _CEMaps(seg_start, seg_len, seg_valid, n_seg, seg_of_layer,
+                   onehot, valid_b, idx_in_seg, nce_of_layer, pipe_bool,
+                   slot_of_layer, round_of_layer, ce_base, ce_of_layer,
+                   ce_oh, pes_ce, ce_valid)
 
-    # ---- 2. parallelism search: best <pf, ph, pw> per CE -----------------
-    # pw index per (B, NC, i, j): largest cand with pf*ph*pw <= pes
-    pf_ph = cand[:, None] * cand[None, :]                # (i, j)
-    budget = pes_ce[:, :, None, None] / pf_ph[None, None]
-    pw_idx = jnp.clip(
-        jnp.searchsorted(cand, jnp.floor(budget), side="right") - 1,
-        0, ncand - 1)                                    # (B, NC, i, j)
-    feasible = budget >= 1.0                             # pf*ph <= pes
 
-    ceil_f = jnp.asarray(t.CEIL_F)                       # (L, i)
-    ceil_oh = jnp.asarray(t.CEIL_OH)                     # (L, j)
-    ceil_ow = jnp.asarray(t.CEIL_OW)                     # (L, w)
-    ckk = jnp.asarray(t.CKK)
+def _pair_layer_tables(t: NetTables, pairs):
+    """Per-(layer, pair) factor tables for the fused search."""
+    pi = jnp.asarray(pairs.pair_i, jnp.int32)
+    pj = jnp.asarray(pairs.pair_j, jnp.int32)
+    fc_pair = t.CEIL_F[:, pi] * t.CKK[:, None]      # (max_L, P)
+    coh_pair = t.CEIL_OH[:, pj]                     # (max_L, P)
+    return fc_pair, coh_pair
 
-    # cost accumulation as ONE batched GEMM: per-layer cycles for every
-    # (i, j) with the layer's own CE's pw budget, then contract over layers
-    # against the CE one-hot.  (A lax.scan formulation was 50x slower —
-    # 53 dispatches moving a (B, NC, 18, 18) carry each step.)
-    pw_sel = jnp.take_along_axis(
-        pw_idx, ce_of_layer[:, :, None, None], axis=1)   # (B, L, i, j)
-    cow_sel = ceil_ow[jnp.arange(L)[None, :, None, None], pw_sel]
-    Hmat = (ceil_f[None, :, :, None] * ckk[None, :, None, None]
-            * ceil_oh[None, :, None, :] * cow_sel)       # (B, L, i, j)
-    cost_ce = jnp.einsum("blk,blc->bck",
-                         Hmat.reshape(B, L, ncand * ncand),
-                         ce_oh).reshape(B, NC, ncand, ncand)
-    cost_ce = jnp.where(feasible, cost_ce, jnp.inf)
-    flat = cost_ce.reshape(B, NC, -1)
-    best = jnp.argmin(flat, axis=-1)                     # (B, NC)
-    bi, bj = best // ncand, best % ncand
-    pf_ce = cand[bi]                                     # (B, NC)
-    ph_ce = cand[bj]
-    pw_ce = cand[jnp.take_along_axis(
-        pw_idx.reshape(B, NC, -1), best[..., None], axis=-1)[..., 0]]
+
+def _evaluate_core(design: DesignBatch, t: NetTables, dev: DeviceTables,
+                   m: _CEMaps, par, fm_tile_rows: int
+                   ) -> dict[str, jnp.ndarray]:
+    """Eqs. 2–9 given the CE maps and the per-CE ⟨pf, ph, pw⟩ winners."""
+    B, max_L = design.batch, t.max_L
+    wb = dev.wordbytes
+    bpc = dev.bpc
+    pf_ce, ph_ce, pw_ce = par
+    (seg_start, seg_len, seg_valid, n_seg, seg_of_layer, onehot, valid_b,
+     idx_in_seg, nce_of_layer, pipe_bool, slot_of_layer, _round,
+     ce_base, _ce_of_layer, ce_oh, _pes, ce_valid) = m
+    valid_f = valid_b.astype(jnp.float32)
+    seg_end = design.seg_end
 
     # ---- per-layer compute cycles & utilization --------------------------
-    pf_l = jnp.einsum("bc,blc->bl", pf_ce, ce_oh)        # (B, L)
-    ph_l = jnp.einsum("bc,blc->bl", ph_ce, ce_oh)
-    pw_l = jnp.einsum("bc,blc->bl", pw_ce, ce_oh)
+    macs = jnp.asarray(t.MACS)
+    ckk = jnp.asarray(t.CKK)
+    pf_l = jnp.where(valid_b, jnp.einsum("bc,blc->bl", pf_ce, ce_oh), 1.0)
+    ph_l = jnp.where(valid_b, jnp.einsum("bc,blc->bl", ph_ce, ce_oh), 1.0)
+    pw_l = jnp.where(valid_b, jnp.einsum("bc,blc->bl", pw_ce, ce_oh), 1.0)
     F = jnp.asarray(t.F)
     OH = jnp.asarray(t.OH)
     OW = jnp.asarray(t.OW)
@@ -233,7 +371,10 @@ def evaluate_batch(design: DesignBatch, tables: NetTables, dev: DeviceSpec,
     par_total = pf_l * ph_l * pw_l
     util = macs[None] / jnp.maximum(comp * par_total, 1.0)
 
-    # ---- 3. buffer floors / desires (Eq. 4 / 5) ---------------------------
+    pipe_l = pipe_bool.astype(jnp.float32)
+    single_l = (1.0 - pipe_l) * valid_f
+
+    # ---- buffer floors / desires (Eq. 4 / 5) ------------------------------
     W = jnp.asarray(t.W)
     IFM = jnp.asarray(t.IFM)
     OFM = jnp.asarray(t.OFM)
@@ -245,12 +386,10 @@ def evaluate_batch(design: DesignBatch, tables: NetTables, dev: DeviceSpec,
     wtile = jnp.minimum(pf_l, F[None]) * ckk[None] * wb  # (B, L)
     fm_tile2 = 2.0 * OFM_ROW[None] * fm_tile_rows * wb
 
-    pipe_l = pipe_of_layer.astype(jnp.float32)
     # pipelined: floor = sum(2*fm_tile + wtile); desire = sum(W + 2*fm_tile)
     floor_pipe = _seg_sum((fm_tile2 + wtile) * pipe_l, onehot)
     desire_pipe = _seg_sum((W[None] * wb + fm_tile2) * pipe_l, onehot)
     # single: floor = max(wtile + band + ofm_row); desire = max FMS + max wtile
-    single_l = 1.0 - pipe_l
     floor_single = _seg_max(
         jnp.where(single_l > 0, wtile + (BAND + OFM_ROW)[None] * wb, NEG),
         onehot)
@@ -267,18 +406,18 @@ def evaluate_batch(design: DesignBatch, tables: NetTables, dev: DeviceSpec,
                                   jnp.maximum(desire_single, 0.0), 0.0))
     desires = jnp.maximum(desires, floors)
 
-    budget_b = float(dev.on_chip_bytes)
+    budget_b = dev.on_chip_bytes
     alloc = floors
     over = alloc.sum(-1) > budget_b
     scale = jnp.where(over, budget_b / jnp.maximum(alloc.sum(-1), 1.0), 1.0)
     alloc = jnp.floor(alloc * scale[:, None])
     remaining = budget_b - alloc.sum(-1)                 # (B,)
 
-    # ---- 4. inter-segment double buffers, smallest-first ------------------
+    # ---- inter-segment double buffers, smallest-first ---------------------
     # boundary i lives after segment i (valid while i < n_seg - 1)
     b_ix = jnp.arange(NS)
     bound_valid = (b_ix[None, :] < (n_seg - 1)[:, None])
-    last_of_seg = jnp.clip(seg_end - 1, 0, L - 1)        # (B, NS)
+    last_of_seg = jnp.clip(seg_end - 1, 0, t.L - 1)      # (B, NS)
     bound_size = OFM[last_of_seg] * wb                   # (B, NS)
     bound_size = jnp.where(bound_valid, bound_size, jnp.inf)
     order = jnp.argsort(bound_size, axis=-1, stable=True)
@@ -292,7 +431,7 @@ def evaluate_batch(design: DesignBatch, tables: NetTables, dev: DeviceSpec,
     remaining = remaining - (2 * jnp.where(inter_onchip, OFM[last_of_seg]
                                            * wb, 0.0)).sum(-1)
 
-    # ---- 5. grant remaining toward minimum-access desires -----------------
+    # ---- grant remaining toward minimum-access desires --------------------
     gaps = jnp.maximum(desires - alloc, 0.0)
     gap_sum = gaps.sum(-1)
     grant = jnp.minimum(jnp.maximum(remaining, 0.0), gap_sum)
@@ -304,7 +443,7 @@ def evaluate_batch(design: DesignBatch, tables: NetTables, dev: DeviceSpec,
     # ---- pipelined per-CE buffer split (desire share within segment) ------
     ce_desire_l = (W[None] * wb + fm_tile2) * pipe_l     # (B, L)
     ce_desire = jnp.einsum("bl,blc->bc", ce_desire_l, ce_oh)
-    seg_of_ce_desire = _seg_sum(ce_desire_l, onehot)     # (B, NS) == desire_pipe
+    seg_of_ce_desire = _seg_sum(ce_desire_l, onehot)     # (B, NS)
     alloc_of_layer = jnp.take_along_axis(alloc, seg_of_layer, axis=1)
     segdes_of_layer = jnp.take_along_axis(
         jnp.maximum(seg_of_ce_desire, 1.0), seg_of_layer, axis=1)
@@ -313,21 +452,23 @@ def evaluate_batch(design: DesignBatch, tables: NetTables, dev: DeviceSpec,
         alloc_of_layer * cedes_of_layer / segdes_of_layer)
 
     # weights resident (Eq. 5 regime): alloc covers the Eq. 5 requirement
-    # (mirrors builder: resident = alloc >= pipelined_min_buffer)
     resident_seg = (alloc >= desire_pipe) & is_pipe_seg
     resident_l = jnp.take_along_axis(
         resident_seg.astype(jnp.int32), seg_of_layer, axis=1) > 0
 
-    # n_tiles per layer: max OH over the layers of the same (seg, round)
-    # round key: seg * 256 + round  (round < 256 given L <= 255)
-    rkey = seg_of_layer * 256 + jnp.clip(round_of_layer, 0, 255)
-    # max OH per key via segment max over sorted keys: use scatter-max
-    ntile_map = jnp.full((B, NS * 256), 0.0).at[
-        jnp.arange(B)[:, None], rkey].max(OH[None].repeat(B, 0))
-    n_tiles_l = jnp.take_along_axis(ntile_map, rkey, axis=1)
-    n_tiles_l = jnp.maximum(n_tiles_l, 1.0)
+    # n_tiles per layer: max OH over the layers of the same (seg, round).
+    # Rounds are contiguous layer runs, so the group max is the combine of
+    # a forward and a backward segmented max-scan — no (B, NS*rounds)
+    # scatter map needed.
+    is_round_start = slot_of_layer == 0
+    is_round_last = (slot_of_layer == nce_of_layer - 1) | \
+        (idx_in_seg == jnp.take_along_axis(seg_len, seg_of_layer, axis=1) - 1)
+    OH_b = jnp.broadcast_to(OH[None], (B, max_L))
+    n_tiles_l = jnp.maximum(
+        jnp.maximum(seg_scan_max(OH_b, is_round_start),
+                    seg_scan_max(OH_b, is_round_last, reverse=True)), 1.0)
 
-    # ---- 6. off-chip accesses --------------------------------------------
+    # ---- off-chip accesses ------------------------------------------------
     # pipelined (Eq. 7)
     w_bytes = W[None] * wb
     w_acc_pipe = jnp.where(
@@ -392,48 +533,27 @@ def evaluate_batch(design: DesignBatch, tables: NetTables, dev: DeviceSpec,
     seg_lat_single = _seg_sum(lat_l_single, onehot)      # (B, NS)
 
     # pipelined: tile lat per layer; exact stage-sum per round via the
-    # prefix/suffix-max identity.  The within-round running maxima are
-    # *segmented* max-scans — associative, so log2(L) vector steps.
+    # prefix/suffix-max identity (segmented max-scans, log2(L) steps).
     tile_lat = jnp.maximum(comp, mem_cyc_pipe) / n_tiles_l   # (B, L)
-
-    def seg_scan_max(vals, start_flags, reverse=False):
-        """Running max within groups delimited by start_flags (B, L)."""
-        def combine(a, b):
-            fa, va = a
-            fb, vb = b
-            return fa | fb, jnp.where(fb, vb, jnp.maximum(va, vb))
-        flags = start_flags[..., ::-1] if reverse else start_flags
-        v = vals[..., ::-1] if reverse else vals
-        # shift flags so each element STARTS its own group when flagged
-        _, out = jax.lax.associative_scan(combine, (flags, v), axis=1)
-        return out[..., ::-1] if reverse else out
-
-    is_round_start = slot_of_layer == 0
-    is_round_last = (slot_of_layer == nce_of_layer - 1) | \
-        (idx_in_seg == jnp.take_along_axis(seg_len, seg_of_layer, axis=1) - 1)
     pmax_seq = seg_scan_max(tile_lat, is_round_start)
     smax_seq = seg_scan_max(tile_lat, is_round_last, reverse=True)
-    pipe_f = pipe_of_layer
+    pipe_f = pipe_bool
     prefix_sum_all = jnp.where(pipe_f, pmax_seq, 0.0).sum(-1)
     suffix_sum_all = jnp.where(pipe_f, smax_seq, 0.0).sum(-1)
     gmax_l = jnp.where(pipe_f & is_round_last, pmax_seq, 0.0)
 
     # round latency = prefix_sum(0..n-1) + suffix_sum(0..n-1) - gmax
     #                 + (T - n) * gmax            [T = n_tiles, n = slots]
-    # prefix_sum_all already sums prefix maxes over all slots (incl. last =
-    # gmax); suffix likewise. slots per round:
-    slots_round = jnp.where(pipe_of_layer & is_round_last,
+    slots_round = jnp.where(pipe_f & is_round_last,
                             slot_of_layer.astype(jnp.float32) + 1.0, 0.0)
-    T_round = jnp.where(pipe_of_layer & is_round_last, n_tiles_l, 0.0)
+    T_round = jnp.where(pipe_f & is_round_last, n_tiles_l, 0.0)
     lat_pipe_total = (prefix_sum_all + suffix_sum_all
                       + ((T_round - slots_round - 1.0) * gmax_l).sum(-1))
-    seg_lat_pipe_share = None  # folded into total below
 
     # per-CE busy (Eq. 3 / throughput)
     busy_l = jnp.maximum(comp, mem_cyc_pipe)             # pipelined layers
     busy_slot = jnp.einsum("bl,blc->bc", busy_l * pipe_l, ce_oh)  # (B, NC)
     # pipelined block busy = max over its slots; map back per segment:
-    # compute per (B, NS) = max over CEs in segment
     seg_of_ce = jnp.sum(
         (jnp.arange(NC)[None, :, None]
          >= (ce_base + design.seg_nce * seg_valid)[:, None, :]),
@@ -447,7 +567,6 @@ def evaluate_batch(design: DesignBatch, tables: NetTables, dev: DeviceSpec,
                                 seg_lat_single, 0.0)
 
     # single-CE ids may serve multiple segments: busy adds per CE
-    ce_busy = busy_slot * 0.0
     ce_first = ce_base                                   # (B, NS)
     add_single = jnp.zeros((B, NC)).at[
         jnp.arange(B)[:, None], ce_first].add(
@@ -460,7 +579,7 @@ def evaluate_batch(design: DesignBatch, tables: NetTables, dev: DeviceSpec,
     access = (acc_single * single_l + w_acc_pipe * pipe_l).sum(-1)
     w_access = (wacc_single * single_l + w_acc_pipe * pipe_l).sum(-1)
     fm_access = (facc_single * single_l).sum(-1)
-    mandatory = (t.IFM[0] + t.OFM[-1]) * wb
+    mandatory = (IFM[0] + jnp.take(OFM, t.L - 1)) * wb
     access = access + mandatory
     fm_access = fm_access + mandatory
 
@@ -468,8 +587,7 @@ def evaluate_batch(design: DesignBatch, tables: NetTables, dev: DeviceSpec,
     spill = bound_valid & ~inter_onchip
     access = access + (2 * jnp.where(spill, bound_sz, 0.0)).sum(-1)
     fm_access = fm_access + (2 * jnp.where(spill, bound_sz, 0.0)).sum(-1)
-    bps = dev.off_chip_gbps * 1e9
-    comm_cyc = ((jnp.where(spill, 2 * bound_sz, bound_sz) / bps)
+    comm_cyc = ((jnp.where(spill, 2 * bound_sz, bound_sz) / dev.bps)
                 * dev.clock_hz * bound_valid).sum(-1)
 
     latency_cyc = seg_lat_single.sum(-1) + lat_pipe_total + comm_cyc
@@ -487,7 +605,7 @@ def evaluate_batch(design: DesignBatch, tables: NetTables, dev: DeviceSpec,
     buffer_req = desires.sum(-1) + jnp.where(
         design.inter_pipe, (2 * bound_sz).sum(-1), 0.0)
 
-    util_avg = (util * macs[None]).sum(-1) / macs.sum()
+    util_avg = (util * macs[None]).sum(-1) / jnp.maximum(macs.sum(), 1.0)
 
     return {
         "latency_s": latency_s,
@@ -502,13 +620,151 @@ def evaluate_batch(design: DesignBatch, tables: NetTables, dev: DeviceSpec,
     }
 
 
+def _pad_rows(design: DesignBatch, n: int) -> DesignBatch:
+    """Edge-pad a DesignBatch to ``n`` rows (padded rows are evaluated and
+    discarded — keeping shapes static kills tail recompiles)."""
+    pad = n - design.batch
+    if pad <= 0:
+        return design
+    rep = lambda a: jnp.concatenate([a, jnp.repeat(a[-1:], pad, 0)], 0)
+    return DesignBatch(rep(design.seg_end), rep(design.seg_pipe),
+                       rep(design.seg_nce), rep(design.inter_pipe))
+
+
+def padded_rows(B: int, tile: int = DEFAULT_TILE) -> int:
+    """Rows actually executed for a B-design call (B padded to a tile
+    multiple) — the single source of the tiling policy for benchmarks."""
+    return -(-B // tile) * tile
+
+
+def evaluate_batch_traced(design: DesignBatch, tables: NetTables,
+                          dev: DeviceTables, *, backend: str = "ref",
+                          tile: int = DEFAULT_TILE, fm_tile_rows: int = 2,
+                          pes_hint_static: int | None = None,
+                          design_tile: int = 16) -> dict[str, jnp.ndarray]:
+    """The traced hot path (call under jit; ``evaluate_batch`` wraps it).
+
+    Designs are processed in ``tile``-wide blocks through ``lax.map`` so
+    every intermediate — most importantly the (tile, L, P) parallelism-
+    search block — stays cache/VMEM-resident; per tile the search
+    dispatches to the selected ``kernels.mccm_eval`` backend.
+
+    ``pes_hint_static`` prunes the candidate-pair grid and is only sound
+    when the device's PE total is <= the hint; the default (None) keeps
+    every pair.  ``evaluate_batch``/``search`` pass the bucket computed
+    from the concrete device.
+    """
+    B = design.batch
+    pairs = pair_tables(tables.candidates, pes_hint_static)
+    fc_pair, coh_pair = _pair_layer_tables(tables, pairs)
+    ceil_ow = tables.CEIL_OW
+    ow_col = tables.OW[:, None]
+
+    nt = -(-B // tile)
+    padded = _pad_rows(design, nt * tile)
+
+    def one(args):
+        d = DesignBatch(*args)
+        m = _ce_maps(d, tables, dev)
+        pf, ph, pw, _cost = parallelism_search(
+            m.pes_ce, m.ce_of_layer, m.ce_oh, fc_pair, coh_pair,
+            ceil_ow, ow_col, pairs, backend=backend,
+            design_tile=design_tile)
+        return _evaluate_core(d, tables, dev, m, (pf, ph, pw), fm_tile_rows)
+
+    out = jax.lax.map(one, (padded.seg_end.reshape(nt, tile, NS),
+                            padded.seg_pipe.reshape(nt, tile, NS),
+                            padded.seg_nce.reshape(nt, tile, NS),
+                            padded.inter_pipe.reshape(nt, tile)))
+    return {k: v.reshape(nt * tile)[:B] for k, v in out.items()}
+
+
+@partial(jax.jit, static_argnames=("backend", "tile", "fm_tile_rows",
+                                   "pes_hint_static", "design_tile"))
+def _evaluate_jit(design, tables, dev, *, backend, tile, fm_tile_rows,
+                  pes_hint_static, design_tile):
+    return evaluate_batch_traced(
+        design, tables, dev, backend=backend, tile=tile,
+        fm_tile_rows=fm_tile_rows, pes_hint_static=pes_hint_static,
+        design_tile=design_tile)
+
+
+def evaluate_batch(design: DesignBatch, tables: NetTables,
+                   dev: DeviceSpec | DeviceTables, fm_tile_rows: int = 2,
+                   *, backend: str | None = None, tile: int = DEFAULT_TILE,
+                   design_tile: int = 16) -> dict[str, jnp.ndarray]:
+    """DesignBatch -> metric arrays, one jitted dispatch.
+
+    One compiled program serves every CNN (tables are traced, padded to a
+    shared ``max_L``) and every board (traced scalars); only the batch
+    shape and the static knobs key the jit cache.
+    """
+    backend = resolve_backend(backend)
+    if isinstance(dev, DeviceSpec):
+        hint = pes_hint(dev.pes)
+        devt = make_device_tables(dev)
+    else:
+        devt = dev
+        hint = pes_hint(float(dev.pes))
+    return _evaluate_jit(design, tables, devt, backend=backend, tile=tile,
+                         fm_tile_rows=fm_tile_rows, pes_hint_static=hint,
+                         design_tile=design_tile)
+
+
+# --------------------------------------------------------------------------
+# spec-list convenience wrappers (recompile-free chunking)
+# --------------------------------------------------------------------------
+def _bucket(b: int, tile: int) -> int:
+    """Smallest power-of-two multiple of ``tile`` holding ``b`` designs —
+    bounds the number of distinct compiled shapes to the ladder size."""
+    n = tile
+    while n < b:
+        n *= 2
+    return n
+
+
 def evaluate_specs(specs: list[AcceleratorSpec], net: Network,
-                   dev: DeviceSpec, chunk: int = 2048) -> dict[str, np.ndarray]:
-    """Convenience wrapper: specs -> stacked metric arrays (chunked)."""
-    tables = make_tables(net)
+                   dev: DeviceSpec, chunk: int = 2048, *,
+                   tables: NetTables | None = None,
+                   backend: str | None = None,
+                   tile: int = DEFAULT_TILE,
+                   pad_to: int | None = None) -> dict[str, np.ndarray]:
+    """Convenience wrapper: specs -> stacked metric arrays (chunked).
+
+    Every chunk — including the tail — is padded to a static shape, so a
+    100k-design sweep compiles exactly once (and shares that compile with
+    every other CNN × board sweep at the same chunk size).  ``pad_to``
+    overrides the bucket (``evaluate_specs_multi`` uses it to share one
+    shape across differently-sized jobs)."""
+    tables = make_tables(net) if tables is None else tables
+    n_layers = len(net)
     outs: list[dict] = []
-    for i in range(0, len(specs), chunk):
-        batch = encode_specs(specs[i:i + chunk], len(net))
-        outs.append({k: np.asarray(v)
-                     for k, v in evaluate_batch(batch, tables, dev).items()})
+    n = len(specs)
+    if pad_to is None:
+        pad_to = chunk if n > chunk else _bucket(max(n, 1), tile)
+    for i in range(0, n, chunk):
+        sub = specs[i:i + chunk]
+        batch = _pad_rows(encode_specs(sub, n_layers), pad_to)
+        out = evaluate_batch(batch, tables, dev, backend=backend, tile=tile)
+        outs.append({k: np.asarray(v)[:len(sub)] for k, v in out.items()})
     return {k: np.concatenate([o[k] for o in outs]) for k in outs[0]}
+
+
+def evaluate_specs_multi(jobs, chunk: int = 2048, *,
+                         backend: str | None = None,
+                         tile: int = DEFAULT_TILE) -> list[dict]:
+    """Cross-(CNN × board) megabatch: ``jobs`` is a sequence of
+    ``(specs, net, dev)`` triples; returns one metric dict per job.
+
+    Because NetTables / DeviceTables are traced pytrees padded to shared
+    shapes, and every job's chunks are padded to one shared bucket, the
+    whole sweep runs through a single compiled program — the per-job work
+    differs only in array *values*."""
+    sizes = [min(max(len(specs), 1), chunk) for specs, _, _ in jobs]
+    pad_to = max((_bucket(s, tile) for s in sizes), default=tile)
+    results = []
+    for specs, net, dev in jobs:
+        results.append(evaluate_specs(specs, net, dev, chunk,
+                                      backend=backend, tile=tile,
+                                      pad_to=pad_to))
+    return results

@@ -78,7 +78,10 @@ def explore(net, dev, n: int = 100_000, *,
 
     import jax
 
-    from ..batch_eval import evaluate_batch, make_tables
+    from ...compat import enable_persistent_compilation_cache
+    from ..batch_eval import _pad_rows, evaluate_batch, make_tables
+
+    enable_persistent_compilation_cache()
 
     def sampler(rng, n_layers, b):
         if family == "custom":
@@ -93,16 +96,19 @@ def explore(net, dev, n: int = 100_000, *,
 
     rng = np.random.default_rng(seed)
     tables = make_tables(net)
+    n_layers = tables.n_layers
     outs: list[dict] = []
     batches: list[DesignBatch] = []
     t0 = time.time()
     done = 0
     while done < n:
         b = min(chunk, n - done)
-        batch = sampler(rng, tables.L, b)
-        out = evaluate_batch(batch, tables, dev)
+        batch = sampler(rng, n_layers, b)
+        # pad the tail chunk to the full chunk size: a 100k-design sweep
+        # compiles exactly once (padded rows are sliced off below)
+        out = evaluate_batch(_pad_rows(batch, min(chunk, n)), tables, dev)
         jax.block_until_ready(out["latency_s"])
-        outs.append({k: np.asarray(v) for k, v in out.items()})
+        outs.append({k: np.asarray(v)[:b] for k, v in out.items()})
         batches.append(batch)
         done += b
     dt = time.time() - t0

@@ -114,6 +114,91 @@ def decode_batch(batch: DesignBatch, n_layers: int) -> list[AcceleratorSpec]:
     return [decode_design(batch, i, n_layers) for i in range(batch.batch)]
 
 
+def validate_batch_jax(batch: DesignBatch, n_layers, *,
+                       min_ces: int = 1, max_ces: int = NC) -> jnp.ndarray:
+    """Traced twin of :func:`validate_batch` (``n_layers`` may be a traced
+    scalar) — lets the guided search keep validity checking on device."""
+    seg_end, seg_pipe, seg_nce = batch.seg_end, batch.seg_pipe, batch.seg_nce
+    B = seg_end.shape[0]
+    prev = jnp.concatenate(
+        [jnp.zeros((B, 1), seg_end.dtype), seg_end[:, :-1]], axis=1)
+    d = seg_end - prev
+    active = d > 0
+    ok = (d >= 0).all(1)
+    ok &= (seg_end[:, -1] == n_layers) & (seg_end[:, 0] >= 1)
+    ok &= (seg_end <= n_layers).all(1)
+    # compact: once a segment is empty, all later ones are empty too
+    prefix_active = jnp.cumprod(active.astype(jnp.int32), axis=1) > 0
+    ok &= ~(active & ~prefix_active).any(1)
+    ok &= (seg_nce >= 1).all(1)
+    ok &= (seg_pipe == ((seg_nce > 1) & active)).all(1)
+    ok &= (jnp.where(active, 1, seg_nce) == 1).all(1)   # padding nce == 1
+    total = (seg_nce * active).sum(1)
+    ok &= (total >= min_ces) & (total <= min(max_ces, NC))
+    return ok
+
+
+def repair_batch_jax(batch: DesignBatch, n_layers, *,
+                     min_ces: int = 1, max_ces: int = NC) -> DesignBatch:
+    """Traced constraint repair: canonicalize a batch and clamp its CE
+    totals into [min_ces, min(max_ces, NC)].
+
+    Bit-identity on already-canonical rows (sorting, compaction and both
+    clamp loops are no-ops there), so the guided search can run it inside
+    the jitted generation step as a safety net without perturbing the
+    host-side breeding pipeline.  Deterministic (takes from the largest
+    segment, gives to the first) where the host repair randomizes.
+
+    Repair never merges segments: a row with more active segments than
+    ``max_ces`` cannot reach the cap (each needs >= 1 CE) and stays
+    invalid — the breeding pipeline already bounds segment counts by
+    ``min(NS, max_ces)``, and ``validate_batch_jax`` screens the rest.
+    """
+    B = batch.batch
+    end0 = jnp.clip(batch.seg_end, 0, n_layers)
+    order = jnp.argsort(end0, axis=1, stable=True)
+    end = jnp.take_along_axis(end0, order, axis=1)
+    nce = jnp.take_along_axis(jnp.clip(batch.seg_nce, 1, NC), order, axis=1)
+    end = end.at[:, -1].set(jnp.broadcast_to(n_layers, (B,)))
+    prev = jnp.concatenate(
+        [jnp.zeros((B, 1), end.dtype), end[:, :-1]], axis=1)
+    active = end > prev
+    # compaction: actives first (stable keeps ascending order), padding
+    # columns forced to the canonical (n_layers, 1, False)
+    corder = jnp.argsort(~active, axis=1, stable=True)
+    active_s = jnp.take_along_axis(active, corder, axis=1)
+    end = jnp.where(active_s, jnp.take_along_axis(end, corder, axis=1),
+                    n_layers)
+    nce = jnp.where(active_s, jnp.take_along_axis(nce, corder, axis=1), 1)
+    prev = jnp.concatenate(
+        [jnp.zeros((B, 1), end.dtype), end[:, :-1]], axis=1)
+    active = end > prev
+
+    cap = min(max_ces, NC)
+    floor_ces = min(min_ces, cap)
+    rows = jnp.arange(B)
+
+    def shrink(_, nc):
+        over = (nc * active).sum(1) > cap
+        key = jnp.where(active & (nc > 1), nc, -1)
+        col = jnp.argmax(key, axis=1)
+        hit = over & (key.max(1) > 0)
+        return nc.at[rows, col].add(-jnp.where(hit, 1, 0))
+
+    def grow(_, nc):
+        under = (nc * active).sum(1) < floor_ces
+        col = jnp.argmax(active, axis=1)
+        return nc.at[rows, col].add(jnp.where(under & active.any(1), 1, 0))
+
+    # worst case needs NS*NC - cap decrements (all NS segments at nce=NC)
+    nce = jax.lax.fori_loop(0, NS * NC, shrink, nce)
+    nce = jax.lax.fori_loop(0, 2 * NC, grow, nce)
+    nce = jnp.where(active, nce, 1)
+    pipe = (nce > 1) & active
+    return DesignBatch(end.astype(jnp.int32), pipe,
+                       nce.astype(jnp.int32), batch.inter_pipe)
+
+
 def validate_batch(batch: DesignBatch, n_layers: int, *,
                    min_ces: int = 1, max_ces: int = NC) -> np.ndarray:
     """Per-row canonical-form + constraint check -> bool mask (B,).

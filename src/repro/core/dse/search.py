@@ -23,7 +23,15 @@ per-layer boundary bitmask):
 Selection keeps a persistent :class:`ParetoArchive` (mode="pareto") or a
 weighted-scalarization elite (mode="scalarized"); children violating the
 NS/NC/CE-count constraints are repaired, and anything that slips through
-is filtered by ``validate_batch`` before it can enter the archive.
+is filtered before it can enter the archive.
+
+The generation step is ONE jitted device program (evaluation, constraint
+repair, validity, objective orientation and selection scoring — see
+``_search_step_impl``): metrics stay on device for the whole run,
+population buffers are donated off-CPU, every sub-batch is padded to
+``pop_size`` so the entire search compiles once, and per generation the
+host pulls only the objective points (for the archive), the validity mask
+and the scores.
 """
 from __future__ import annotations
 
@@ -32,7 +40,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from .encoding import NC, NS, DesignBatch, concat_batches, validate_batch
+from .encoding import NC, NS, DesignBatch, concat_batches
 from .pareto import ParetoArchive
 from .samplers import sample_custom, sample_mixed
 
@@ -263,6 +271,57 @@ def make_children(rng: np.random.Generator, parents: DesignBatch,
 
 
 # --------------------------------------------------------------------------
+# the jitted generation step
+# --------------------------------------------------------------------------
+# One device dispatch per (sub-)generation: constraint repair, evaluation,
+# validity, objective orientation and selection scoring all run inside the
+# jit; the host only pulls the (pop, M) points for the Pareto archive, the
+# validity mask and the scores.  Metrics stay on device until the end of
+# the whole search.  Population buffers are donated off-CPU (XLA reuses
+# them for the repaired copy); CPU ignores donation, so we skip it there
+# to avoid the warning.
+_STEP_CACHE: dict = {}
+
+
+def _search_step_impl(seg_end, seg_pipe, seg_nce, inter, tables, devt, w,
+                      lo, hi, *, objectives, min_ces, max_ces, backend,
+                      tile, hint):
+    import jax.numpy as jnp
+
+    from ..batch_eval import evaluate_batch_traced
+    from .encoding import repair_batch_jax, validate_batch_jax
+
+    design = DesignBatch(seg_end, seg_pipe, seg_nce, inter)
+    design = repair_batch_jax(design, tables.L, min_ces=min_ces,
+                              max_ces=max_ces)
+    metrics = evaluate_batch_traced(design, tables, devt, backend=backend,
+                                    tile=tile, pes_hint_static=hint)
+    pts = jnp.stack(
+        [(-1.0 if k in ORIENT_MAX else 1.0) * metrics[k]
+         for k in objectives], axis=1)
+    ok = validate_batch_jax(design, tables.L, min_ces=min_ces,
+                            max_ces=max_ces)
+    ok &= jnp.isfinite(pts).all(1)
+    lo = jnp.minimum(lo, jnp.where(ok[:, None], pts, jnp.inf).min(0))
+    hi = jnp.maximum(hi, jnp.where(ok[:, None], pts, -jnp.inf).max(0))
+    span = jnp.maximum(hi - lo, 1e-30)
+    score = jnp.where(ok, ((pts - lo) / span) @ w, jnp.inf)
+    return ((design.seg_end, design.seg_pipe, design.seg_nce,
+             design.inter_pipe), metrics, pts, ok, score, lo, hi)
+
+
+def _jitted_step(donate: bool):
+    import jax
+    if donate not in _STEP_CACHE:
+        _STEP_CACHE[donate] = jax.jit(
+            _search_step_impl,
+            static_argnames=("objectives", "min_ces", "max_ces", "backend",
+                             "tile", "hint"),
+            donate_argnums=(0, 1, 2, 3) if donate else ())
+    return _STEP_CACHE[donate]
+
+
+# --------------------------------------------------------------------------
 # the search loop
 # --------------------------------------------------------------------------
 def _initial_pop(rng, n_layers, cfg, n):
@@ -287,8 +346,12 @@ def _initial_pop(rng, n_layers, cfg, n):
 def search(net, dev, config: SearchConfig | None = None,
            tables=None) -> SearchResult:
     """Run the guided loop: sample -> evaluate -> archive -> breed."""
-    from ..batch_eval import evaluate_batch, make_tables
     import jax
+    import jax.numpy as jnp
+
+    from ..batch_eval import (DEFAULT_TILE, _pad_rows, make_device_tables,
+                              make_tables, pes_hint)
+    from ...kernels.mccm_eval import resolve_backend
 
     cfg = config or SearchConfig()
     n_obj = len(cfg.objectives)
@@ -302,12 +365,21 @@ def search(net, dev, config: SearchConfig | None = None,
             and len(cfg.weights) != n_obj:
         raise ValueError("weights must match objectives")
     tables = tables if tables is not None else make_tables(net)
-    n_layers = tables.L
+    n_layers = tables.n_layers
     rng = np.random.default_rng(cfg.seed)
 
+    devt = make_device_tables(dev)
+    hint = pes_hint(dev.pes)
+    backend = resolve_backend(None)
+    step = _jitted_step(donate=jax.default_backend() != "cpu")
+    statics = dict(objectives=tuple(cfg.objectives), min_ces=cfg.min_ces,
+                   max_ces=cfg.max_ces, backend=backend, tile=DEFAULT_TILE,
+                   hint=hint)
+
     # generation sizes: pop_n each, the final one absorbing the remainder
-    # so the evaluation count equals the budget EXACTLY (the final odd-size
-    # batch costs one extra jit compile, same as random explore's tail)
+    # so the evaluation count equals the budget EXACTLY.  Every device
+    # call is padded to pop_n rows (the final oversized generation splits
+    # into pop_n-shaped sub-batches) — ONE compile for the whole search.
     pop_n = min(cfg.pop_size, cfg.budget)
     gens = max(1, cfg.budget // pop_n)
     sizes = [pop_n] * gens
@@ -320,47 +392,51 @@ def search(net, dev, config: SearchConfig | None = None,
     hall_inter = np.empty((total,), bool)
     all_points = np.empty((total, n_obj))
     hall_ok = np.zeros((total,), bool)
-    all_metrics: list[dict[str, np.ndarray]] = []
+    all_metrics: list[dict] = []
 
     archive = ParetoArchive(n_obj)
-    lo = np.full(n_obj, np.inf)
-    hi = np.full(n_obj, -np.inf)
+    lo = jnp.full(n_obj, jnp.inf, jnp.float32)
+    hi = jnp.full(n_obj, -jnp.inf, jnp.float32)
     history: list[dict] = []
+
+    def eval_gen(pop: DesignBatch, w, lo, hi):
+        """Evaluate a generation in pop_n-shaped padded sub-batches."""
+        n = pop.batch
+        pts_l, ok_l, score_l, design_l = [], [], [], []
+        for s in range(0, n, pop_n):
+            sub = _pad_rows(pop.take(np.arange(s, min(s + pop_n, n))), pop_n)
+            keep = min(s + pop_n, n) - s
+            (darrs, metrics, pts, ok, score, lo, hi) = step(
+                sub.seg_end, sub.seg_pipe, sub.seg_nce, sub.inter_pipe,
+                tables, devt, jnp.asarray(w, jnp.float32), lo, hi, **statics)
+            all_metrics.append({k: v[:keep] for k, v in metrics.items()})
+            design_l.append([np.asarray(a)[:keep] for a in darrs])
+            pts_l.append(np.asarray(pts, np.float64)[:keep])
+            ok_l.append(np.asarray(ok)[:keep])
+            score_l.append(np.asarray(score, np.float64)[:keep])
+        cat = lambda xs: np.concatenate(xs) if len(xs) > 1 else xs[0]
+        darrs = [cat([d[i] for d in design_l]) for i in range(4)]
+        return darrs, cat(pts_l), cat(ok_l), cat(score_l), lo, hi
 
     pop = _initial_pop(rng, n_layers, cfg, sizes[0])
     base = 0
     t0 = time.time()
     for gen in range(gens):
-        out = evaluate_batch(pop, tables, dev)
-        jax.block_until_ready(out["latency_s"])
-        out = {k: np.asarray(v) for k, v in out.items()}
-        pts = orient(out, cfg.objectives)
-        idx = np.arange(base, base + sizes[gen])
-        base += sizes[gen]
-        e, p, c, i = pop.to_numpy()
-        hall_end[idx], hall_pipe[idx] = e, p
-        hall_nce[idx], hall_inter[idx] = c, i
-        all_points[idx] = pts
-        all_metrics.append(out)
-
-        ok = validate_batch(pop, n_layers, min_ces=cfg.min_ces,
-                            max_ces=cfg.max_ces)
-        ok &= np.isfinite(pts).all(1)
-        hall_ok[idx] = ok
-        archive.update(pts[ok], idx[ok])
-
-        # running normalization for scalar selection scores
-        if ok.any():
-            lo = np.minimum(lo, pts[ok].min(0))
-            hi = np.maximum(hi, pts[ok].max(0))
-        span = np.maximum(hi - lo, 1e-30)
         if cfg.mode == "scalarized":
             w = np.asarray(cfg.weights if cfg.weights is not None
                            else np.ones(n_obj))
         else:
             w = rng.random(n_obj) + 0.1       # fresh direction each gen
         w = w / w.sum()
-        score = np.where(ok, ((pts - lo) / span) @ w, np.inf)
+
+        (e, p, c, i), pts, ok, score, lo, hi = eval_gen(pop, w, lo, hi)
+        idx = np.arange(base, base + sizes[gen])
+        base += sizes[gen]
+        hall_end[idx], hall_pipe[idx] = e, p
+        hall_nce[idx], hall_inter[idx] = c, i
+        all_points[idx] = pts
+        hall_ok[idx] = ok
+        archive.update(pts[ok], idx[ok])
 
         if gen == gens - 1:
             break
@@ -385,8 +461,11 @@ def search(net, dev, config: SearchConfig | None = None,
                             if len(archive) else {}))
 
     seconds = time.time() - t0
-    metrics = {k: np.concatenate([m[k] for m in all_metrics])
+    # one host pull per metric for the whole search (they stayed on device)
+    metrics = {k: np.concatenate([np.asarray(m[k]) for m in all_metrics])
                for k in all_metrics[0]}
+    lo_h = np.asarray(lo, np.float64)
+    hi_h = np.asarray(hi, np.float64)
     # best single design under one CONSISTENT scalarization (final
     # normalization span; configured weights, equal if none)
     w = np.asarray(cfg.weights) if cfg.weights is not None \
@@ -394,7 +473,7 @@ def search(net, dev, config: SearchConfig | None = None,
     w = w / w.sum()
     final_scores = np.where(
         hall_ok,
-        ((all_points - lo) / np.maximum(hi - lo, 1e-30)) @ w, np.inf)
+        ((all_points - lo_h) / np.maximum(hi_h - lo_h, 1e-30)) @ w, np.inf)
     best_scalar_idx = int(np.argmin(final_scores))
     history.append(dict(gen=gens - 1, evals=total, archive=len(archive),
                         best=dict(zip(cfg.objectives,

@@ -1,1 +1,8 @@
-from .ops import mccm_latency  # noqa: F401
+from .ops import (  # noqa: F401
+    BACKEND_ENV,
+    PairTables,
+    mccm_latency,
+    pair_tables,
+    parallelism_search,
+    resolve_backend,
+)

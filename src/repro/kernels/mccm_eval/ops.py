@@ -1,11 +1,93 @@
-"""jit'd wrapper for the MCCM latency kernel."""
+"""jit'd wrappers + shared static tables for the MCCM evaluation kernels."""
 from __future__ import annotations
 
-from functools import partial
+import os
+from functools import lru_cache, partial
+from typing import NamedTuple
+
+import numpy as np
 
 import jax
 
-from .kernel import mccm_latency_call
+from .kernel import mccm_latency_call, parallelism_search_call
+from .ref import parallelism_search_ref
+
+#: env var selecting the parallelism-search backend for the DSE hot path:
+#: "ref" (pure jnp, CPU default), "pallas" (compiled TPU kernel),
+#: "pallas_interpret" (same kernel under the interpreter — what CPU CI
+#: exercises), or "auto" (pallas on TPU, ref elsewhere).
+BACKEND_ENV = "REPRO_MCCM_BACKEND"
+BACKENDS = ("ref", "pallas", "pallas_interpret")
+
+
+def resolve_backend(backend: str | None = None) -> str:
+    backend = backend or os.environ.get(BACKEND_ENV, "auto")
+    if backend == "auto":
+        platform = jax.devices()[0].platform
+        return "pallas" if platform == "tpu" else "ref"
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; known: "
+                         f"{BACKENDS + ('auto',)}")
+    return backend
+
+
+class PairTables(NamedTuple):
+    """Static ⟨pf, ph⟩ pair list, row-major over the candidate grid."""
+
+    pair_i: np.ndarray      # (P,) i32 index into cand (pf)
+    pair_j: np.ndarray      # (P,) i32 index into cand (ph)
+    pair_prod: np.ndarray   # (P,) f32 pf*ph
+    pair_pf: np.ndarray     # (P,) f32
+    pair_ph: np.ndarray     # (P,) f32
+    cand: np.ndarray        # (K,) f32 ascending
+
+
+@lru_cache(maxsize=None)
+def pair_tables(candidates: tuple, pes_hint: int | None) -> PairTables:
+    """Flatten the candidate grid, pruning pairs with pf*ph > pes_hint.
+
+    Pruned pairs are infeasible for every CE of every device whose total
+    PE count is <= ``pes_hint`` (per-CE allocations never exceed the
+    total), so the argmin over the pruned list selects exactly the pair
+    the full-grid argmin would.  ``pes_hint=None`` keeps every pair.
+    """
+    cand = np.asarray(candidates, np.float64)
+    k = len(cand)
+    ii, jj = np.meshgrid(np.arange(k), np.arange(k), indexing="ij")
+    ii, jj = ii.ravel(), jj.ravel()                 # row-major (i, j)
+    prod = cand[ii] * cand[jj]
+    if pes_hint is not None:
+        keep = prod <= pes_hint
+        keep[0] = True                              # (1, 1) always survives
+        ii, jj, prod = ii[keep], jj[keep], prod[keep]
+    return PairTables(ii.astype(np.int32), jj.astype(np.int32),
+                      prod.astype(np.float32),
+                      cand[ii].astype(np.float32),
+                      cand[jj].astype(np.float32),
+                      cand.astype(np.float32))
+
+
+def parallelism_search(pes_ce, ce_of_layer, ce_oh, fc_pair, coh_pair,
+                       ceil_ow, ow, pairs: PairTables, *,
+                       backend: str = "ref", design_tile: int = 16):
+    """Backend dispatch for the fused search (traced; jit at the caller).
+
+    ``ceil_ow`` (L, K) feeds the ref gather; ``ow`` (L, 1) feeds the
+    kernel's in-VMEM ceil-div — both encode the same table.
+    """
+    import jax.numpy as jnp
+
+    cand = jnp.asarray(pairs.cand)
+    if backend == "ref":
+        return parallelism_search_ref(
+            pes_ce, ce_of_layer, ce_oh, fc_pair, coh_pair, ceil_ow, cand,
+            jnp.asarray(pairs.pair_prod), jnp.asarray(pairs.pair_pf),
+            jnp.asarray(pairs.pair_ph))
+    return parallelism_search_call(
+        pes_ce, ce_oh, fc_pair, coh_pair, ow, cand,
+        jnp.asarray(pairs.pair_prod), jnp.asarray(pairs.pair_pf),
+        jnp.asarray(pairs.pair_ph), design_tile=design_tile,
+        interpret=(backend == "pallas_interpret"))
 
 
 @partial(jax.jit, static_argnames=("design_blk", "interpret"))

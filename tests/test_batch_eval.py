@@ -76,3 +76,89 @@ def test_explore_speed_and_consistency():
     m = res.metrics
     assert np.all(m["latency_s"] > 0)
     assert np.all(m["throughput_ips"] * m["latency_s"] >= 0.99)
+
+
+def test_fused_path_backends_bit_identical():
+    """The Pallas kernel (interpret mode — what TPU runs, on CPU) and the
+    pure-jnp ref produce bit-identical metrics through evaluate_batch."""
+    from repro.core.batch_eval import evaluate_batch, make_tables
+
+    net = get_cnn("xception")
+    dev = get_board("zc706")
+    rng = np.random.default_rng(11)
+    db = sample_mixed(rng, len(net), 48)
+    tables = make_tables(net)
+    ref = evaluate_batch(db, tables, dev, backend="ref")
+    pal = evaluate_batch(db, tables, dev, backend="pallas_interpret")
+    for k in ref:
+        np.testing.assert_array_equal(
+            np.asarray(ref[k]), np.asarray(pal[k]), err_msg=k)
+
+
+def test_matches_scalar_through_pallas_interpret():
+    """Scalar parity holds through the fused kernel path itself."""
+    net = get_cnn("mobilenetv2")
+    dev = get_board("vcu108")
+    specs = [make_arch(a, net, n) for a in ARCH_NAMES for n in (2, 9)]
+    batch = evaluate_specs(specs, net, dev, backend="pallas_interpret")
+    for i, s in enumerate(specs):
+        sv = _scalar_vals(evaluate_design(s, net, dev))
+        for k in METRICS:
+            np.testing.assert_allclose(
+                float(batch[k][i]), sv[k], rtol=RTOL[k],
+                err_msg=f"{s.name} {k}")
+
+
+def test_one_compile_serves_all_cnns_and_boards():
+    """The recompile-free claim, asserted: NetTables / DeviceTables are
+    traced pytrees padded to shared shapes, so ONE jit compile evaluates
+    every registered CNN on every registered board."""
+    import jax
+
+    from repro.core import batch_eval
+    from repro.core.batch_eval import evaluate_batch, make_tables
+    from repro.fpga.boards import BOARD_NAMES
+
+    jax.clear_caches()
+    assert batch_eval._evaluate_jit._cache_size() == 0
+    rng = np.random.default_rng(5)
+    for cnn in CNN_NAMES:
+        net = get_cnn(cnn)
+        tables = make_tables(net)
+        db = sample_mixed(rng, len(net), 64)
+        for board in BOARD_NAMES:
+            out = evaluate_batch(db, tables, get_board(board))
+            assert np.isfinite(np.asarray(out["latency_s"])).all()
+    assert batch_eval._evaluate_jit._cache_size() == 1
+
+
+def test_evaluate_specs_multi_matches_single_jobs():
+    """The cross-(CNN × board) megabatch returns exactly what per-job
+    evaluation returns."""
+    from repro.core.batch_eval import evaluate_specs_multi
+
+    jobs = []
+    for cnn, board in (("mobilenetv2", "zc706"), ("xception", "vcu110")):
+        net = get_cnn(cnn)
+        jobs.append(([make_arch(a, net, 4) for a in ARCH_NAMES], net,
+                     get_board(board)))
+    multi = evaluate_specs_multi(jobs)
+    for (specs, net, dev), got in zip(jobs, multi):
+        want = evaluate_specs(specs, net, dev)
+        for k in want:
+            np.testing.assert_array_equal(got[k], want[k], err_msg=k)
+
+
+def test_evaluate_specs_tail_padding_exact():
+    """Chunked evaluation with a ragged tail equals unchunked evaluation
+    (padded rows are sliced off, not leaked)."""
+    net = get_cnn("mobilenetv2")
+    dev = get_board("zc706")
+    rng = np.random.default_rng(13)
+    db = sample_mixed(rng, len(net), 37)
+    specs = [decode_design(db, i, len(net)) for i in range(37)]
+    whole = evaluate_specs(specs, net, dev, chunk=2048)
+    ragged = evaluate_specs(specs, net, dev, chunk=16)
+    for k in whole:
+        np.testing.assert_array_equal(whole[k], ragged[k], err_msg=k)
+        assert len(ragged[k]) == 37

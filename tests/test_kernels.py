@@ -85,3 +85,81 @@ def test_mccm_latency_vs_ref(B, L, blk):
     rtot, rcyc = mccm_latency_ref(dims, par)
     np.testing.assert_allclose(np.asarray(tot), np.asarray(rtot), rtol=1e-6)
     np.testing.assert_allclose(np.asarray(cyc), np.asarray(rcyc), rtol=1e-6)
+
+
+# ---------------------------------------------- fused parallelism search
+def _search_inputs(cnn, board="vcu110"):
+    """Baseline arch templates -> raw inputs of the fused search."""
+    from repro.cnn.registry import get_cnn
+    from repro.core.batch_eval import (_ce_maps, _pair_layer_tables,
+                                       encode_specs, make_device_tables,
+                                       make_tables, pes_hint)
+    from repro.fpga.archs import ARCH_NAMES, make_arch
+    from repro.fpga.boards import get_board
+    from repro.kernels.mccm_eval import pair_tables
+
+    net, dev = get_cnn(cnn), get_board(board)
+    specs = [make_arch(a, net, n) for a in ARCH_NAMES for n in (2, 5, 9, 11)]
+    tables = make_tables(net)
+    maps = _ce_maps(encode_specs(specs, len(net)), tables,
+                    make_device_tables(dev))
+    pairs = pair_tables(tables.candidates, pes_hint(dev.pes))
+    fc_pair, coh_pair = _pair_layer_tables(tables, pairs)
+    return net, dev, specs, tables, maps, pairs, fc_pair, coh_pair
+
+
+@pytest.mark.parametrize("cnn", ["resnet50", "xception", "mobilenetv2",
+                                 "densenet121", "resnet152"])
+def test_parallelism_search_kernel_vs_ref_vs_scalar(cnn):
+    """Pallas kernel (interpret) == pure-jnp ref bit for bit, and both
+    reproduce the scalar Builder's per-CE ⟨pf, ph, pw⟩ choice exactly, on
+    every baseline arch template."""
+    from repro.core.evaluator import build_design
+    from repro.kernels.mccm_eval import parallelism_search
+
+    net, dev, specs, tables, maps, pairs, fc, coh = _search_inputs(cnn)
+    args = (maps.pes_ce, maps.ce_of_layer, maps.ce_oh, fc, coh,
+            tables.CEIL_OW, tables.OW[:, None], pairs)
+    ref = parallelism_search(*args, backend="ref")
+    ker = parallelism_search(*args, backend="pallas_interpret",
+                             design_tile=8)
+    for name, r, k in zip(("pf", "ph", "pw", "cost"), ref, ker):
+        np.testing.assert_array_equal(np.asarray(r), np.asarray(k),
+                                      err_msg=f"{cnn} {name}")
+
+    pf, ph, pw, _ = (np.asarray(x) for x in ref)
+    for b, spec in enumerate(specs):
+        acc = build_design(spec, net, dev)
+        ce_id = 0
+        for seg, cseg in zip(spec.segments, acc.segments):
+            n_layers_seg = seg.layer_hi - seg.layer_lo + 1
+            for slot, ce in enumerate(cseg.ces):
+                if slot < n_layers_seg:          # live CE (has layers)
+                    got = (pf[b, ce_id], ph[b, ce_id], pw[b, ce_id])
+                    want = (ce.par_of("f"), ce.par_of("oh"), ce.par_of("ow"))
+                    assert got == want, \
+                        f"{cnn} {spec.name} CE{ce_id}: {got} != {want}"
+                ce_id += 1
+
+
+def test_parallelism_search_infeasible_ce_degrades_to_unit():
+    """A CE with 0 PEs (no layers) selects ⟨1, 1, 1⟩ in both backends."""
+    from repro.core.batch_eval import make_tables, pes_hint
+    from repro.cnn.registry import get_cnn
+    from repro.kernels.mccm_eval import pair_tables, parallelism_search
+    from repro.core.batch_eval import _pair_layer_tables
+
+    tables = make_tables(get_cnn("mobilenetv2"))
+    pairs = pair_tables(tables.candidates, pes_hint(900))
+    fc, coh = _pair_layer_tables(tables, pairs)
+    L = tables.max_L
+    pes = jnp.zeros((2, 16), jnp.float32)
+    cel = jnp.zeros((2, L), jnp.int32)
+    ceoh = jnp.zeros((2, L, 16), jnp.float32)
+    for backend in ("ref", "pallas_interpret"):
+        pf, ph, pw, cost = parallelism_search(
+            pes, cel, ceoh, fc, coh, tables.CEIL_OW, tables.OW[:, None],
+            pairs, backend=backend)
+        assert (np.asarray(pf) == 1).all() and (np.asarray(ph) == 1).all()
+        assert (np.asarray(pw) == 1).all()
+        assert np.isinf(np.asarray(cost)).all()
