@@ -35,6 +35,8 @@ from .common import fmt_table, save
 
 FULL_SIZES = (32, 4096, 65536)
 QUICK_SIZES = (32, 512)
+MULTINET_B_FULL = 1024
+MULTINET_B_QUICK = 128
 
 #: pre-fusion evaluate_batch at B=4096 (xception × vcu110, this container),
 #: measured at the commit preceding the fused/tiled hot path
@@ -108,6 +110,47 @@ def run(verbose: bool = True, quick: bool = False,
                       str(rows), f"{max(first_s - steady_s, 0.0):.2f}",
                       f"{peak/1e6:.1f}"])
 
+    # ---- multinet joint-eval point: µs/deployment at M=2 + compile count
+    from repro.core.dse.encoding import stack_designs
+    from repro.core.multinet import (DEFAULT_MAX_M, joint_evaluate,
+                                     make_multi_tables, sample_shares)
+    from repro.core.multinet import joint_eval as _je
+
+    mb = MULTINET_B_QUICK if quick else MULTINET_B_FULL
+    nets = [get_cnn("resnet50"), get_cnn("mobilenetv2")]
+    mdev = get_board("zc706")
+    mt = make_multi_tables(nets)
+    md = stack_designs([sample_mixed(rng, len(n), mb) for n in nets],
+                       DEFAULT_MAX_M)
+    sh = [sample_shares(rng, mb, DEFAULT_MAX_M, 2) for _ in range(3)]
+    misses0 = _je._joint_spatial_jit._cache_size()
+    t0 = time.time()
+    r = joint_evaluate(md, mt, mdev, pes_shares=sh[0], buf_shares=sh[1],
+                       bw_shares=sh[2])
+    jax.block_until_ready(r["worst_latency_s"])
+    first_s = time.time() - t0
+    reps = 1 if quick else 3
+    t0 = time.time()
+    for _ in range(reps):
+        r = joint_evaluate(md, mt, mdev, pes_shares=sh[0],
+                           buf_shares=sh[1], bw_shares=sh[2])
+        jax.block_until_ready(r["worst_latency_s"])
+    msteady = (time.time() - t0) / reps
+    mcompiles = _je._joint_spatial_jit._cache_size() - misses0
+    points["multinet_m2"] = {
+        "B": mb,
+        "max_m": DEFAULT_MAX_M,
+        "us_per_deployment": msteady / mb * 1e6,
+        "us_per_model_eval": msteady / (mb * 2) * 1e6,
+        "steady_s": msteady,
+        "compile_s": max(first_s - msteady, 0.0),
+        "compile_count": mcompiles,
+    }
+    table.append([f"multinet M=2 B={mb}",
+                  f"{msteady / mb * 1e6:.1f}",
+                  f"{msteady / (mb * 2) * 1e6:.1f}", str(mb),
+                  f"{max(first_s - msteady, 0.0):.2f}", "-"])
+
     payload = {
         "benchmark": "evaluate_batch hot path (xception x vcu110)",
         "backend": backend,
@@ -123,6 +166,7 @@ def run(verbose: bool = True, quick: bool = False,
             "speedup_2x_at_4096": (
                 points["4096"]["us_per_design"] < PRE_FUSION_B4096_US / 2
                 if "4096" in points else True),
+            "multinet_single_compile": mcompiles == 1,
         },
     }
     if verbose:

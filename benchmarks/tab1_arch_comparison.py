@@ -12,23 +12,27 @@ Builder heuristics are re-implemented from the paper's prose (DESIGN.md §7).
 from __future__ import annotations
 
 from repro.cnn.registry import get_cnn
-from repro.core.evaluator import evaluate_design
+from repro.core.batch_eval import evaluate_specs
 from repro.fpga.archs import make_arch
 from repro.fpga.boards import get_board
 
 from .common import fmt_table, save
 
 N_CES = 10  # representative instance (see module docstring)
+ARCHS = ("segmented_rr", "segmented", "hybrid")
 
 
 def run(verbose: bool = True) -> dict:
     net = get_cnn("resnet50")
     dev = get_board("zcu102")
-    res = {}
-    for arch in ("segmented_rr", "segmented", "hybrid"):
-        m = evaluate_design(make_arch(arch, net, N_CES), net, dev)
-        res[arch] = dict(latency=m.latency_s, buffers=float(m.buffer_bytes),
-                         accesses=m.access_bytes)
+    # one batched call over the three architectures (replaces the three
+    # re-traced scalar evaluations; shares the zoo-wide compile)
+    out = evaluate_specs([make_arch(a, net, N_CES) for a in ARCHS],
+                         net, dev)
+    res = {arch: dict(latency=float(out["latency_s"][i]),
+                      buffers=float(out["buffer_bytes"][i]),
+                      accesses=float(out["access_bytes"][i]))
+           for i, arch in enumerate(ARCHS)}
 
     lat0 = min(v["latency"] for v in res.values())
     buf0 = min(v["buffers"] for v in res.values())

@@ -1,0 +1,71 @@
+"""Multi-tenant deployment walkthrough: co-schedule two CNNs on one FPGA.
+
+Shows the three co-execution options for serving ResNet-50 and MobileNetV2
+from a single zc706 and what partition-aware joint DSE buys over the
+obvious baselines:
+
+1. equal split          — half the DSPs/BRAM/bandwidth each, designs
+                          searched for that fixed split;
+2. time multiplexing    — full board per model, round-robin (weights
+                          re-stream on every context switch);
+3. joint search         — budget split AND per-model CE arrangements
+                          searched together.
+
+    PYTHONPATH=src python examples/multinet_deploy.py [--n 2048]
+"""
+import argparse
+
+import numpy as np
+
+from repro.cnn.registry import get_cnn
+from repro.core.dse import decode_design
+from repro.core.dse.pareto import knee_point
+from repro.core.multinet import MultinetSearchConfig, joint_explore
+from repro.core.notation import format_spec
+from repro.fpga.boards import get_board
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--n", type=int, default=2048,
+                help="deployment-evaluation budget for EACH arm")
+args = ap.parse_args()
+
+names = ("resnet50", "mobilenetv2")
+nets = [get_cnn(n) for n in names]
+dev = get_board("zc706")
+cfg = MultinetSearchConfig(pop_size=min(256, args.n), seed=0)
+
+arms = {}
+for arm in ("equal_split", "temporal", "search"):
+    res = joint_explore(nets, dev, args.n, strategy=arm, config=cfg)
+    arms[arm] = res
+    pts = res.front_points()
+    best = pts[np.argmin(pts[:, 0])]
+    print(f"{arm:>12}: {res.n_evals} deployments in {res.seconds:.1f}s "
+          f"({res.per_eval_us:.0f} µs/deployment) — best worst-model "
+          f"latency {best[0] * 1e3:.1f} ms at min-throughput "
+          f"{-best[1]:.1f}/s")
+
+# ---- unpack the searched deployment at the knee of the front -------------
+res = arms["search"]
+pts = res.front_points()
+knee = res.front[int(np.argmin(np.abs(pts - knee_point(pts)).sum(1)))]
+m = res.metrics
+print(f"\nknee deployment (row {knee}):")
+print(f"  worst latency {m['worst_latency_s'][knee] * 1e3:.1f} ms | "
+      f"aggregate {m['agg_throughput_ips'][knee]:.1f}/s | "
+      f"fairness {m['fairness'][knee]:.2f}")
+for i, name in enumerate(names):
+    pes = m["pes_split"][knee][i]
+    buf = m["buf_split"][knee][i]
+    bw = m["bw_split"][knee][i]
+    spec = decode_design(res.designs.model(i), int(knee), len(nets[i]))
+    print(f"  {name}: {pes:.0f} DSPs, {buf / 2**20:.2f} MiB BRAM, "
+          f"{bw:.0%} bandwidth")
+    print(f"    lat {m['per_model_latency_s'][knee][i] * 1e3:.1f} ms, "
+          f"tp {m['per_model_throughput_ips'][knee][i]:.1f}/s")
+    print(f"    {format_spec(spec, len(nets[i]))}")
+
+eq = arms["equal_split"].front_points()
+print(f"\nequal split never beats {eq[:, 0].min() * 1e3:.1f} ms worst "
+      f"latency; the searched split reaches "
+      f"{pts[:, 0].min() * 1e3:.1f} ms at the same budget.")

@@ -1,13 +1,15 @@
-"""ResNet-50 / ResNet-152 layer generators (He et al. [15]).
+"""ResNet-50 / 101 / 152 layer generators (He et al. [15]).
 
-Conv layers only (53 / 155 convs, matching paper Table III); the final FC is
-reported separately for weight-count validation.
+Conv layers only (53 / 104 / 155 convs; 50/152 match paper Table III,
+ResNet-101 extends the zoo Table-III-style); the final FC is reported
+separately for weight-count validation.
 """
 from __future__ import annotations
 
 from ..core.workload import Network, make_network
 
-_BLOCKS = {"resnet50": (3, 4, 6, 3), "resnet152": (3, 8, 36, 3)}
+_BLOCKS = {"resnet50": (3, 4, 6, 3), "resnet101": (3, 4, 23, 3),
+           "resnet152": (3, 8, 36, 3)}
 
 
 def _resnet(name: str, blocks: tuple[int, ...]) -> tuple[Network, int]:
@@ -69,6 +71,10 @@ def _resnet(name: str, blocks: tuple[int, ...]) -> tuple[Network, int]:
 
 def resnet50() -> tuple[Network, int]:
     return _resnet("resnet50", _BLOCKS["resnet50"])
+
+
+def resnet101() -> tuple[Network, int]:
+    return _resnet("resnet101", _BLOCKS["resnet101"])
 
 
 def resnet152() -> tuple[Network, int]:

@@ -47,10 +47,37 @@ from .workload import Network
 
 NEG = -1.0e30
 
-#: shared layer-axis padding: covers the whole CNN zoo (resnet152 = 155),
-#: so one compiled program serves every registered CNN.  Larger nets pad
-#: to the next multiple of 32 (one extra compile per new size bucket).
+#: base of the layer-axis padding ladder: covers the whole CNN zoo
+#: (resnet152 = 155), so one compiled program serves every registered CNN.
 DEFAULT_MAX_L = 160
+
+#: bucket step above the base — larger nets pad to the next multiple, one
+#: extra compile per new size bucket instead of one per net.
+MAX_L_STEP = 32
+
+
+def bucket_max_L(L: int, base: int = DEFAULT_MAX_L,
+                 step: int = MAX_L_STEP) -> int:
+    """Shared layer-padding bucket for an L-layer net.
+
+    Every net at or under ``base`` layers shares the base bucket (one
+    compile for the whole zoo); larger nets land on the next ``step``
+    multiple, so two 200-ish-layer nets still share a compile instead of
+    each minting its own shape.
+    """
+    if L <= base:
+        return base
+    return -(-L // step) * step
+
+
+def shared_max_L(layer_counts) -> int:
+    """The one bucket a set of nets must share to be stacked/megabatched
+    (e.g. the model axis of ``core.multinet``): the max over their
+    individual buckets."""
+    counts = list(layer_counts)
+    if not counts:
+        return DEFAULT_MAX_L
+    return max(bucket_max_L(int(c)) for c in counts)
 
 #: design-tile width of the lax.map hot loop (the CPU analogue of the
 #: Pallas kernel's VMEM design tile).
@@ -117,9 +144,9 @@ def make_tables(net: Network, candidates=CANDIDATES_DEFAULT,
     cand = np.asarray(candidates, np.float64)
     L = len(net)
     if max_L is None:
-        max_L = DEFAULT_MAX_L
-    if L > max_L:
-        max_L = -(-L // 32) * 32
+        max_L = bucket_max_L(L)
+    elif L > max_L:
+        max_L = bucket_max_L(L, base=max_L)
     dims = [l.dims() for l in net]
 
     def pad(vals):
@@ -637,6 +664,24 @@ def padded_rows(B: int, tile: int = DEFAULT_TILE) -> int:
     return -(-B // tile) * tile
 
 
+def eval_design_block(design: DesignBatch, tables: NetTables,
+                      dev: DeviceTables, pairs, fc_pair, coh_pair, *,
+                      backend: str = "ref", design_tile: int = 16,
+                      fm_tile_rows: int = 2) -> dict[str, jnp.ndarray]:
+    """Fully traced evaluation of one design block (no tiling/padding):
+    CE maps -> fused ⟨pf, ph, pw⟩ search -> Eqs. 2–9.
+
+    The shared building block: the ``lax.map`` hot loop below runs it per
+    design tile, and ``core.multinet`` vmaps it across the model axis with
+    per-row partitioned devices."""
+    m = _ce_maps(design, tables, dev)
+    pf, ph, pw, _cost = parallelism_search(
+        m.pes_ce, m.ce_of_layer, m.ce_oh, fc_pair, coh_pair,
+        tables.CEIL_OW, tables.OW[:, None], pairs, backend=backend,
+        design_tile=design_tile)
+    return _evaluate_core(design, tables, dev, m, (pf, ph, pw), fm_tile_rows)
+
+
 def evaluate_batch_traced(design: DesignBatch, tables: NetTables,
                           dev: DeviceTables, *, backend: str = "ref",
                           tile: int = DEFAULT_TILE, fm_tile_rows: int = 2,
@@ -657,20 +702,15 @@ def evaluate_batch_traced(design: DesignBatch, tables: NetTables,
     B = design.batch
     pairs = pair_tables(tables.candidates, pes_hint_static)
     fc_pair, coh_pair = _pair_layer_tables(tables, pairs)
-    ceil_ow = tables.CEIL_OW
-    ow_col = tables.OW[:, None]
 
     nt = -(-B // tile)
     padded = _pad_rows(design, nt * tile)
 
     def one(args):
-        d = DesignBatch(*args)
-        m = _ce_maps(d, tables, dev)
-        pf, ph, pw, _cost = parallelism_search(
-            m.pes_ce, m.ce_of_layer, m.ce_oh, fc_pair, coh_pair,
-            ceil_ow, ow_col, pairs, backend=backend,
-            design_tile=design_tile)
-        return _evaluate_core(d, tables, dev, m, (pf, ph, pw), fm_tile_rows)
+        return eval_design_block(
+            DesignBatch(*args), tables, dev, pairs, fc_pair, coh_pair,
+            backend=backend, design_tile=design_tile,
+            fm_tile_rows=fm_tile_rows)
 
     out = jax.lax.map(one, (padded.seg_end.reshape(nt, tile, NS),
                             padded.seg_pipe.reshape(nt, tile, NS),

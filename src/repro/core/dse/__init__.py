@@ -27,13 +27,16 @@ from .encoding import (
     NC,
     NS,
     DesignBatch,
+    MultiDesignBatch,
     concat_batches,
     decode_batch,
     decode_design,
     encode_specs,
+    pad_deployments,
+    stack_designs,
     validate_batch,
 )
-from .pareto import ParetoArchive, pareto
+from .pareto import ParetoArchive, hypervolume_2d, pareto
 from .samplers import (
     sample_custom,
     sample_custom_loop,
@@ -46,6 +49,7 @@ __all__ = [
     "DEFAULT_OBJECTIVES",
     "DSEResult",
     "DesignBatch",
+    "MultiDesignBatch",
     "NC",
     "NS",
     "ParetoArchive",
@@ -58,9 +62,12 @@ __all__ = [
     "dominating_indices",
     "encode_specs",
     "explore",
+    "hypervolume_2d",
     "make_children",
     "orient",
+    "pad_deployments",
     "pareto",
+    "stack_designs",
     "sample_custom",
     "sample_custom_loop",
     "sample_mixed",

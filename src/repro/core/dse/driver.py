@@ -42,7 +42,8 @@ def explore(net, dev, n: int = 100_000, *,
             family: str = "custom", seed: int = 0, chunk: int = 4096,
             strategy: str = "random",
             objectives: tuple[str, ...] = DEFAULT_OBJECTIVES,
-            config: SearchConfig | None = None) -> DSEResult:
+            config: SearchConfig | None = None,
+            tables=None) -> DSEResult:
     """Evaluate ``n`` designs and return the sample plus its Pareto front.
 
     strategy="random": sample ``family`` ("custom" | "mixed" | "both") and
@@ -67,7 +68,7 @@ def explore(net, dev, n: int = 100_000, *,
                                objectives=tuple(objectives),
                                init_family=family)
         objectives = cfg.objectives
-        res: SearchResult = search(net, dev, cfg)
+        res: SearchResult = search(net, dev, cfg, tables=tables)
         return DSEResult(
             batch=res.batch, metrics=res.metrics, seconds=res.seconds,
             per_design_us=res.seconds / max(res.n_evals, 1) * 1e6,
@@ -95,7 +96,7 @@ def explore(net, dev, n: int = 100_000, *,
         raise ValueError(f"unknown family {family!r}")
 
     rng = np.random.default_rng(seed)
-    tables = make_tables(net)
+    tables = make_tables(net) if tables is None else tables
     n_layers = tables.n_layers
     outs: list[dict] = []
     batches: list[DesignBatch] = []

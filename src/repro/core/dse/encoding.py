@@ -69,6 +69,78 @@ def concat_batches(batches: list[DesignBatch]) -> DesignBatch:
         jnp.concatenate([b.inter_pipe for b in batches]))
 
 
+@jax.tree_util.register_dataclass
+@dataclass
+class MultiDesignBatch:
+    """The model-axis extension of :class:`DesignBatch`: row b describes a
+    *deployment* of ``n_models`` co-resident accelerators — model m of row
+    b runs design ``(seg_end[b, m], ...)`` on its slice of the board.
+
+    Segment arrays are (B, M, NS), ``inter_pipe`` is (B, M).  Each model's
+    plane is a canonical DesignBatch for *that model's* layer count, so
+    every single-model invariant (validate/repair/decode) applies
+    per-plane via :meth:`model`.
+    """
+
+    seg_end: jnp.ndarray       # int32 (B, M, NS)
+    seg_pipe: jnp.ndarray      # bool  (B, M, NS)
+    seg_nce: jnp.ndarray       # int32 (B, M, NS)
+    inter_pipe: jnp.ndarray    # bool  (B, M)
+
+    @property
+    def batch(self) -> int:
+        return self.seg_end.shape[0]
+
+    @property
+    def n_models(self) -> int:
+        return self.seg_end.shape[1]
+
+    def model(self, m: int) -> DesignBatch:
+        """Model m's plane as a plain (B, NS) DesignBatch."""
+        return DesignBatch(self.seg_end[:, m], self.seg_pipe[:, m],
+                           self.seg_nce[:, m], self.inter_pipe[:, m])
+
+    def take(self, idx) -> "MultiDesignBatch":
+        return MultiDesignBatch(self.seg_end[idx], self.seg_pipe[idx],
+                                self.seg_nce[idx], self.inter_pipe[idx])
+
+    def to_numpy(self):
+        return (np.asarray(self.seg_end), np.asarray(self.seg_pipe),
+                np.asarray(self.seg_nce), np.asarray(self.inter_pipe))
+
+
+def stack_designs(batches: list[DesignBatch],
+                  max_m: int | None = None) -> MultiDesignBatch:
+    """Stack per-model DesignBatches (equal B) into a MultiDesignBatch,
+    padding the model axis to ``max_m`` by repeating the LAST entry — the
+    same padding rule ``multinet.make_multi_tables`` applies to the stacked
+    NetTables, so padded design planes always pair with matching tables.
+    """
+    if not batches:
+        raise ValueError("stack_designs needs at least one DesignBatch")
+    if len({b.batch for b in batches}) != 1:
+        raise ValueError("all model DesignBatches must share one batch size")
+    if max_m is None:
+        max_m = len(batches)
+    if len(batches) > max_m:
+        raise ValueError(f"{len(batches)} models exceed max_m={max_m}")
+    batches = list(batches) + [batches[-1]] * (max_m - len(batches))
+    stack = lambda f: jnp.stack([getattr(b, f) for b in batches], axis=1)
+    return MultiDesignBatch(stack("seg_end"), stack("seg_pipe"),
+                            stack("seg_nce"), stack("inter_pipe"))
+
+
+def pad_deployments(md: MultiDesignBatch, n: int) -> MultiDesignBatch:
+    """Edge-pad a MultiDesignBatch to ``n`` rows (the model-axis analogue
+    of ``batch_eval._pad_rows``; padded rows are evaluated and sliced off)."""
+    pad = n - md.batch
+    if pad <= 0:
+        return md
+    rep = lambda a: jnp.concatenate([a, jnp.repeat(a[-1:], pad, 0)], 0)
+    return MultiDesignBatch(rep(md.seg_end), rep(md.seg_pipe),
+                            rep(md.seg_nce), rep(md.inter_pipe))
+
+
 def encode_specs(specs: list[AcceleratorSpec], n_layers: int) -> DesignBatch:
     B = len(specs)
     seg_end = np.full((B, NS), n_layers, np.int32)

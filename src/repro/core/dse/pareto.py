@@ -59,6 +59,39 @@ def pareto(points: np.ndarray) -> np.ndarray:
     return _front_nd(points)
 
 
+def hypervolume_2d(points: np.ndarray, ref: np.ndarray) -> float:
+    """Dominated hypervolume of a 2-D lower-is-better point set w.r.t. a
+    reference (upper-bound) point — the scalar the multinet benchmarks use
+    to compare searched fronts against baseline fronts.
+
+    Points at or beyond ``ref`` in either coordinate contribute nothing.
+    """
+    points = np.asarray(points, np.float64)
+    ref = np.asarray(ref, np.float64)
+    if points.ndim != 2 or points.shape[1] != 2:
+        raise ValueError(f"points must be (N, 2), got {points.shape}")
+    inside = (points < ref[None, :]).all(1)
+    points = points[inside]
+    if len(points) == 0:
+        return 0.0
+    front = points[pareto(points)]
+    order = np.argsort(front[:, 0], kind="stable")
+    x, y = front[order, 0], front[order, 1]
+    # ascending x => strictly descending y on a clean front; guard ties
+    y = np.minimum.accumulate(y)
+    prev_y = np.concatenate(([ref[1]], y[:-1]))
+    return float(((ref[0] - x) * (prev_y - y)).sum())
+
+
+def knee_point(points: np.ndarray) -> np.ndarray:
+    """The span-normalized best-sum point of an oriented (lower-better)
+    point set — the single 'knee' the multinet benchmarks and examples
+    report from a front."""
+    points = np.asarray(points, np.float64)
+    span = np.maximum(np.ptp(points, 0), 1e-30)
+    return points[np.argmin(((points - points.min(0)) / span).sum(1))]
+
+
 def dominates_matrix(a: np.ndarray, b: np.ndarray) -> np.ndarray:
     """(len(a), len(b)) bool: a[i] dominates b[j] (all <=, any <)."""
     le = (a[:, None, :] <= b[None, :, :]).all(-1)

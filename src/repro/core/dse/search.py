@@ -45,7 +45,11 @@ from .pareto import ParetoArchive
 from .samplers import sample_custom, sample_mixed
 
 # metrics where HIGHER is better get flipped when building objective points
-ORIENT_MAX = frozenset({"throughput_ips", "utilization"})
+# (single-model metrics plus the multinet system metrics, so `orient` serves
+# both the single-model and the joint co-scheduling searches)
+ORIENT_MAX = frozenset({"throughput_ips", "utilization",
+                        "agg_throughput_ips", "min_model_throughput_ips",
+                        "fairness", "slo_attainment"})
 
 
 def orient(metrics: dict[str, np.ndarray],

@@ -1,0 +1,57 @@
+"""Multi-CNN co-scheduling: joint cost model + partition-aware DSE for
+multi-tenant FPGA deployments.
+
+Three layers over the single-model MCCM stack:
+
+* :mod:`~repro.core.multinet.partition`  — spatial DSP/BRAM/bandwidth
+  splits (traced validity/repair) and temporal round-robin time shares;
+* :mod:`~repro.core.multinet.joint_eval` — the (M, ...) NetTables
+  megabatch and the one-compile joint evaluator producing system metrics
+  (aggregate throughput, worst-model latency, fairness, SLO attainment,
+  off-chip traffic);
+* :mod:`~repro.core.multinet.search` / ``driver`` — joint DSE over
+  (per-model budget split × per-model CE arrangement), Pareto over system
+  metrics, with equal-split and time-multiplexed baseline arms.
+"""
+from .driver import JointDSEResult, joint_explore
+from .joint_eval import (
+    JOINT_TILE,
+    MultiNetTables,
+    joint_evaluate,
+    make_multi_tables,
+)
+from .partition import (
+    BUF_GRANULE,
+    DEFAULT_FLOORS,
+    DEFAULT_MAX_M,
+    PartitionBatch,
+    equal_shares,
+    partition_devices,
+    repair_partition_jax,
+    repair_time_shares_jax,
+    sample_shares,
+    validate_partition,
+)
+from .search import MultinetSearchConfig, MultinetSearchResult, joint_search
+
+__all__ = [
+    "BUF_GRANULE",
+    "DEFAULT_FLOORS",
+    "DEFAULT_MAX_M",
+    "JOINT_TILE",
+    "JointDSEResult",
+    "MultiNetTables",
+    "MultinetSearchConfig",
+    "MultinetSearchResult",
+    "PartitionBatch",
+    "equal_shares",
+    "joint_evaluate",
+    "joint_explore",
+    "joint_search",
+    "make_multi_tables",
+    "partition_devices",
+    "repair_partition_jax",
+    "repair_time_shares_jax",
+    "sample_shares",
+    "validate_partition",
+]

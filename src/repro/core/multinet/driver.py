@@ -1,0 +1,126 @@
+"""End-to-end multinet drivers: one ``joint_explore()`` call per arm.
+
+Four strategies at one evaluation budget (deployments evaluated):
+
+* ``"search"``      — joint DSE: per-model designs AND the spatial budget
+                      split evolve together (the headline arm);
+* ``"equal_split"`` — the same search with the split frozen to 1/M — the
+  ablation isolating what partition-awareness buys;
+* ``"temporal"``    — time-multiplexed baseline: full-board designs and
+  round-robin time shares evolve, no spatial split;
+* ``"random"``      — blind sampling of designs + Dirichlet splits.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..dse.encoding import MultiDesignBatch, stack_designs
+from ..dse.pareto import hypervolume_2d, pareto
+from ..dse.samplers import sample_mixed
+from ..dse.search import orient
+from .joint_eval import make_multi_tables, joint_evaluate
+from .partition import DEFAULT_MAX_M, sample_shares
+from .search import (JOINT_OBJECTIVES, MultinetSearchConfig,
+                     MultinetSearchResult, _KEEP_MODE, _KEEP_SYS,
+                     joint_search)
+
+
+@dataclass
+class JointDSEResult:
+    designs: MultiDesignBatch
+    metrics: dict[str, np.ndarray]
+    seconds: float
+    per_eval_us: float
+    strategy: str = "search"
+    mode: str = "spatial"
+    n_evals: int = 0
+    n_models: int = 0
+    objectives: tuple[str, ...] = JOINT_OBJECTIVES
+    front: np.ndarray = field(default_factory=lambda: np.empty(0, np.intp))
+    #: raw share genomes per resource, one row per evaluated deployment —
+    #: re-feeding row i to ``joint_evaluate`` reproduces its metrics
+    shares: dict[str, np.ndarray] = field(default_factory=dict)
+
+    def front_points(self) -> np.ndarray:
+        """Oriented (lower-better) objective points of the front rows."""
+        return orient(self.metrics, self.objectives)[self.front]
+
+    def hypervolume(self, ref: np.ndarray) -> float:
+        return hypervolume_2d(self.front_points(), ref)
+
+
+def joint_explore(nets, dev, n: int = 4096, *, strategy: str = "search",
+                  seed: int = 0, chunk: int = 512,
+                  objectives: tuple[str, ...] = JOINT_OBJECTIVES,
+                  config: MultinetSearchConfig | None = None,
+                  weights=None, slo_s=None) -> JointDSEResult:
+    """Evaluate ``n`` deployments of ``nets`` on ``dev`` and return the
+    sample plus its Pareto front over the system objectives.
+
+    A ``config``, when given, is authoritative for the guided arms (only
+    the budget comes from ``n``; strategy still selects mode/freeze).
+    """
+    if n < 1:
+        raise ValueError(f"n must be >= 1, got {n}")
+    m = len(nets)
+    if strategy in ("search", "equal_split", "temporal"):
+        base = config.__dict__ if config is not None else {}
+        over = dict(budget=n,
+                    mode="temporal" if strategy == "temporal" else "spatial",
+                    freeze_partition=strategy == "equal_split")
+        if config is None:
+            over.update(seed=seed, objectives=tuple(objectives),
+                        weights=weights, slo_s=slo_s)
+        cfg = MultinetSearchConfig(**{**base, **over})
+        res: MultinetSearchResult = joint_search(nets, dev, cfg)
+        return JointDSEResult(
+            designs=res.designs, metrics=res.metrics, seconds=res.seconds,
+            per_eval_us=res.seconds / max(res.n_evals, 1) * 1e6,
+            strategy=strategy, mode=res.mode, n_evals=res.n_evals,
+            n_models=m, objectives=res.objectives, front=res.front_idx,
+            shares=res.shares)
+    if strategy != "random":
+        raise ValueError(f"unknown strategy {strategy!r}")
+
+    rng = np.random.default_rng(seed)
+    mt = make_multi_tables(nets, weights=weights, slo_s=slo_s)
+    max_m = mt.max_m
+    keep = _KEEP_SYS + _KEEP_MODE["spatial"]
+    outs, mds = [], []
+    shares = {r: [] for r in ("pes", "buf", "bw")}
+    t0 = time.time()
+    done = 0
+    while done < n:
+        b = min(chunk, n - done)
+        md = stack_designs([sample_mixed(rng, len(net), b, min_ces=1)
+                            for net in nets], max_m)
+        sh = [sample_shares(rng, b, max_m, m) for _ in range(3)]
+        for r, s in zip(shares, sh):
+            shares[r].append(s)
+        if b < chunk:   # pad the tail chunk: the sweep compiles once
+            pad = np.concatenate([np.arange(b),
+                                  np.full(chunk - b, b - 1)])
+            md = md.take(pad)
+            sh = [s[pad] for s in sh]
+        out = joint_evaluate(md, mt, dev, pes_shares=sh[0],
+                             buf_shares=sh[1], bw_shares=sh[2])
+        outs.append({k: np.asarray(out[k])[:b] for k in keep})
+        mds.append(md.take(np.arange(b)))
+        done += b
+    dt = time.time() - t0
+    designs = MultiDesignBatch(
+        np.concatenate([np.asarray(d.seg_end) for d in mds]),
+        np.concatenate([np.asarray(d.seg_pipe) for d in mds]),
+        np.concatenate([np.asarray(d.seg_nce) for d in mds]),
+        np.concatenate([np.asarray(d.inter_pipe) for d in mds]))
+    metrics = {k: np.concatenate([o[k] for o in outs]) for k in outs[0]}
+    front = pareto(orient(metrics, objectives))
+    return JointDSEResult(designs=designs, metrics=metrics, seconds=dt,
+                          per_eval_us=dt / n * 1e6, strategy="random",
+                          n_evals=n, n_models=m,
+                          objectives=tuple(objectives), front=front,
+                          shares={r: np.concatenate(v)
+                                  for r, v in shares.items()})

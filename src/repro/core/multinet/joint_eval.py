@@ -1,0 +1,363 @@
+"""Joint cost model for M CNNs sharing one board — vectorized, one compile.
+
+A *deployment* row pairs M per-model multiple-CE designs with a resource
+split (spatial mode) or round-robin time shares (temporal mode).  The
+existing padded ``NetTables`` pytrees are stacked into an (M, ...)
+megabatch (``MultiNetTables``) and the single-model hot path
+(``batch_eval.eval_design_block``) is reused under ``vmap`` — once over
+the model axis with per-(row, model) partitioned devices, once over the
+rows of each ``lax.map`` design tile.  Because the model axis is padded to
+``DEFAULT_MAX_M``, the layer axis to a shared ``bucket_max_L`` bucket, and
+the batch to a tile multiple, ONE jit compile serves any model set × board
+× split — the single-model cache-miss-counter guarantee, extended.
+
+System-level outputs per deployment row:
+
+* ``agg_throughput_ips``   — summed model throughputs;
+* ``worst_latency_s``      — max per-model latency (temporal: including
+                             the round-robin wait);
+* ``fairness``             — Jain's index over request-weight-normalized
+                             throughputs;
+* ``slo_attainment``       — fraction of models meeting their latency SLO;
+* ``traffic_bytes_per_s``  — aggregate off-chip traffic at steady state;
+
+plus the per-model metric planes (``per_model_*``, each (B, M)) and the
+repaired split actually evaluated (``pes_split``/``buf_split``/
+``bw_split`` or ``time_share``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ...kernels.mccm_eval import pair_tables, resolve_backend
+from ..batch_eval import (DeviceTables, DeviceSpec, NetTables,
+                          _pair_layer_tables, eval_design_block,
+                          evaluate_batch_traced, make_device_tables,
+                          make_tables, pes_hint, shared_max_L)
+from ..dse.encoding import DesignBatch, MultiDesignBatch, pad_deployments
+from ..workload import Network
+from .partition import (DEFAULT_FLOORS, DEFAULT_MAX_M, PartitionBatch,
+                        partition_devices, repair_partition_jax,
+                        repair_time_shares_jax)
+
+NEG = -1.0e30
+
+#: deployment-tile width of the joint lax.map loop.  Each row carries
+#: MAX_M model lanes, so the tile is narrower than the single-model one.
+JOINT_TILE = 32
+
+#: per-model latency metrics the joint path reports as (B, M) planes
+PER_MODEL_KEYS = ("latency_s", "throughput_ips", "buffer_bytes",
+                  "access_bytes", "utilization", "n_ces")
+
+
+# --------------------------------------------------------------------------
+# stacked per-model tables
+# --------------------------------------------------------------------------
+@jax.tree_util.register_dataclass
+@dataclass
+class MultiNetTables:
+    """M CNNs as one traced pytree: ``tables`` is a NetTables whose leaves
+    carry a leading model axis (padded to ``max_m`` by repeating the last
+    net), ``model_valid`` masks the real models.  Weights are normalized
+    request rates; ``slo_s`` per-model latency SLOs (inf = none)."""
+
+    tables: NetTables          # leaves (max_m, ...)
+    model_valid: jnp.ndarray   # (max_m,) f32
+    weights: jnp.ndarray       # (max_m,) f32, sum 1 over valid
+    slo_s: jnp.ndarray         # (max_m,) f32
+
+    @property
+    def max_m(self) -> int:
+        return self.model_valid.shape[0]
+
+    @property
+    def n_models(self) -> int:
+        return int(np.asarray(self.model_valid).sum())
+
+    def n_layers(self, m: int) -> int:
+        """Concrete layer count of model m (host-side use only)."""
+        return int(self.tables.L[m])
+
+
+def make_multi_tables(nets: list[Network], *, weights=None, slo_s=None,
+                      max_m: int = DEFAULT_MAX_M,
+                      max_L: int | None = None) -> MultiNetTables:
+    """Stack per-model NetTables into the (max_m, ...) megabatch.
+
+    All models share one ``bucket_max_L`` layer bucket (adaptive — a
+    200-layer net bumps every model in the deployment to the next bucket
+    rather than silently truncating or forking compiles).  The model axis
+    pads by repeating the LAST net, matching ``dse.stack_designs``.
+    """
+    if not nets:
+        raise ValueError("make_multi_tables needs at least one network")
+    if len(nets) > max_m:
+        raise ValueError(f"{len(nets)} models exceed max_m={max_m}; raise "
+                         f"max_m (costs one extra compile per new value)")
+    if max_L is None:
+        max_L = shared_max_L(len(n) for n in nets)
+    per = [make_tables(net, max_L=max_L) for net in nets]
+    per = per + [per[-1]] * (max_m - len(per))
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per)
+
+    m = len(nets)
+    valid = np.zeros(max_m, np.float32)
+    valid[:m] = 1.0
+    w = np.ones(m, np.float64) if weights is None \
+        else np.asarray(weights, np.float64)
+    if len(w) != m or (w <= 0).any():
+        raise ValueError("weights must be positive, one per model")
+    wfull = np.zeros(max_m, np.float32)
+    wfull[:m] = (w / w.sum()).astype(np.float32)
+    sfull = np.full(max_m, np.inf, np.float32)
+    if slo_s is not None:
+        s = np.asarray(slo_s, np.float64)
+        if len(s) != m:
+            raise ValueError("slo_s must have one entry per model")
+        sfull[:m] = s
+    return MultiNetTables(tables=stacked, model_valid=jnp.asarray(valid),
+                          weights=jnp.asarray(wfull),
+                          slo_s=jnp.asarray(sfull))
+
+
+# --------------------------------------------------------------------------
+# system metrics from per-model planes
+# --------------------------------------------------------------------------
+def _system_metrics(per: dict[str, jnp.ndarray], mt: MultiNetTables
+                    ) -> dict[str, jnp.ndarray]:
+    """Per-model (B, M) metric planes -> (B,) system metrics."""
+    valid = mt.model_valid[None, :]                       # (1, M)
+    vmask = valid > 0
+    nv = jnp.maximum(mt.model_valid.sum(), 1.0)
+    tp = per["throughput_ips"]
+    lat = per["latency_s"]
+    acc = per["access_bytes"]
+
+    agg_tp = (tp * valid).sum(-1)
+    worst_lat = jnp.max(jnp.where(vmask, lat, NEG), axis=-1)
+    # request-weight-normalized service rates: Jain's index as the reported
+    # fairness, the max-min rate as the (non-gameable) search objective
+    x = jnp.where(vmask, tp / jnp.maximum(mt.weights[None, :], 1e-30), 0.0)
+    fairness = jnp.square(x.sum(-1)) / jnp.maximum(
+        nv * jnp.square(x).sum(-1), 1e-30)
+    # normalized so equal weights reduce to the plain min model throughput
+    min_tp = jnp.min(jnp.where(vmask, x, jnp.inf), axis=-1) / nv
+    slo_ok = jnp.where(vmask, (lat <= mt.slo_s[None, :]).astype(jnp.float32),
+                       0.0)
+    slo_att = slo_ok.sum(-1) / nv
+    traffic = (tp * acc * valid).sum(-1)
+    return {
+        "agg_throughput_ips": agg_tp,
+        "worst_latency_s": worst_lat,
+        "min_model_throughput_ips": min_tp,
+        "fairness": fairness,
+        "slo_attainment": slo_att,
+        "traffic_bytes_per_s": traffic,
+    }
+
+
+def _package(per, mt):
+    out = _system_metrics(per, mt)
+    for k in PER_MODEL_KEYS:
+        out[f"per_model_{k}"] = per[k]
+    return out
+
+
+# --------------------------------------------------------------------------
+# spatial mode: per-(row, model) partitioned devices
+# --------------------------------------------------------------------------
+def joint_spatial_traced(md: MultiDesignBatch, mt: MultiNetTables,
+                         dev: DeviceTables, pes_shares, buf_shares,
+                         bw_shares, *, backend: str = "ref",
+                         tile: int = JOINT_TILE, fm_tile_rows: int = 2,
+                         pes_hint_static: int | None = None,
+                         design_tile: int = 16,
+                         floors=DEFAULT_FLOORS) -> dict[str, jnp.ndarray]:
+    """The traced spatial joint path (call under jit).
+
+    Raw shares are repaired in-trace (every deployment row becomes a valid
+    split), the board is sliced into per-(row, model) DeviceTables, and
+    ``eval_design_block`` runs under vmap(model) ∘ vmap(row) inside
+    ``lax.map`` deployment tiles.  ``pes_hint_static`` uses the FULL
+    board's bucket — partition slices never exceed it, so pair pruning
+    stays sound for every split.
+    """
+    B, max_m = md.batch, md.n_models
+    part = repair_partition_jax(pes_shares, buf_shares, bw_shares, dev,
+                                mt.model_valid, floors=floors)
+    devs = partition_devices(dev, part, mt.model_valid)   # leaves (B, M)
+
+    pairs = pair_tables(mt.tables.candidates, pes_hint_static)
+    fc_pair, coh_pair = jax.vmap(
+        lambda t: _pair_layer_tables(t, pairs))(mt.tables)  # (M, L, P)
+
+    def one_row(se, sp, sn, ip, dv):
+        # one deployment: design leaves (M, NS), device leaves (M,)
+        def one_model(se_m, sp_m, sn_m, ip_m, t_m, dv_m, fc_m, coh_m):
+            d = DesignBatch(se_m[None], sp_m[None], sn_m[None], ip_m[None])
+            out = eval_design_block(d, t_m, dv_m, pairs, fc_m, coh_m,
+                                    backend=backend, design_tile=design_tile,
+                                    fm_tile_rows=fm_tile_rows)
+            return {k: v[0] for k, v in out.items()}
+        return jax.vmap(one_model)(se, sp, sn, ip, mt.tables, dv,
+                                   fc_pair, coh_pair)
+
+    nt = -(-B // tile)
+    pmd = pad_deployments(md, nt * tile)
+    pad_dev = jax.tree_util.tree_map(
+        lambda a: jnp.concatenate(
+            [a, jnp.repeat(a[-1:], nt * tile - B, 0)], 0)
+        if a.shape[0] < nt * tile else a, devs)
+
+    def one_tile(args):
+        se, sp, sn, ip, dv_leaves = args
+        dv = DeviceTables(*dv_leaves)
+        return jax.vmap(one_row, in_axes=(0, 0, 0, 0, 0))(se, sp, sn, ip, dv)
+
+    shp = lambda a: a.reshape((nt, tile) + a.shape[1:])
+    out = jax.lax.map(one_tile, (
+        shp(pmd.seg_end), shp(pmd.seg_pipe), shp(pmd.seg_nce),
+        shp(pmd.inter_pipe),
+        tuple(shp(l) for l in (pad_dev.pes, pad_dev.on_chip_bytes,
+                               pad_dev.bpc, pad_dev.bps, pad_dev.clock_hz,
+                               pad_dev.wordbytes))))
+    per = {k: v.reshape(nt * tile, max_m)[:B] for k, v in out.items()}
+    res = _package(per, mt)
+    res["pes_split"] = part.pes[:B]
+    res["buf_split"] = part.buf[:B]
+    res["bw_split"] = part.bw[:B]
+    return res
+
+
+# --------------------------------------------------------------------------
+# temporal mode: full board, weighted round-robin
+# --------------------------------------------------------------------------
+def joint_temporal_traced(md: MultiDesignBatch, mt: MultiNetTables,
+                          dev: DeviceTables, time_shares, *,
+                          backend: str = "ref", tile: int = JOINT_TILE,
+                          fm_tile_rows: int = 2,
+                          pes_hint_static: int | None = None,
+                          design_tile: int = 16,
+                          share_floor: float = DEFAULT_FLOORS[2],
+                          reconfig_s: float = 0.0
+                          ) -> dict[str, jnp.ndarray]:
+    """Weighted round-robin time multiplexing: every model's design runs on
+    the FULL board; model m holds the fabric for a ``w_m`` fraction of each
+    round.
+
+    Context switches are not free: when a model's slice starts, its
+    weights must re-stream from DDR (the board cannot hold every model's
+    weights resident), charging ``sw_m = weight_bytes_m / bps`` per round
+    (plus ``reconfig_s`` for boards that partially reconfigure).  The
+    shortest feasible round is ``T = max_m((lat_m + sw_m) / w_m)`` (every
+    slice fits its reload plus >= 1 inference); model m then sustains
+    ``w_m * tp_m - sw_m * tp_m / T`` and its worst-case response time is
+    ``(1 - w_m) * T + sw_m + lat_m``."""
+    B = md.batch
+    tsh = repair_time_shares_jax(time_shares, mt.model_valid,
+                                 floor=share_floor)       # (B, M)
+    per_mb = jax.vmap(
+        lambda se, sp, sn, ip, t: evaluate_batch_traced(
+            DesignBatch(se, sp, sn, ip), t, dev, backend=backend, tile=tile,
+            fm_tile_rows=fm_tile_rows, pes_hint_static=pes_hint_static,
+            design_tile=design_tile),
+        in_axes=(1, 1, 1, 1, 0), out_axes=1,
+    )(md.seg_end, md.seg_pipe, md.seg_nce, md.inter_pipe, mt.tables)
+    per = dict(per_mb)                                    # leaves (B, M)
+
+    vmask = mt.model_valid[None, :] > 0
+    safe_w = jnp.maximum(tsh, 1e-30)
+    lat_full = per["latency_s"]
+    w_bytes = (mt.tables.W * mt.tables.valid).sum(-1) * dev.wordbytes  # (M,)
+    sw = (w_bytes / dev.bps + reconfig_s)[None, :]        # (1, M)
+    T = jnp.max(jnp.where(vmask, (lat_full + sw) / safe_w, NEG),
+                axis=-1)                                  # (B,)
+    per["throughput_ips"] = per["throughput_ips"] * jnp.maximum(
+        tsh - sw / T[:, None], 0.0)
+    per["latency_s"] = jnp.where(vmask,
+                                 lat_full + sw + (1.0 - tsh) * T[:, None],
+                                 lat_full)
+    res = _package(per, mt)
+    res["time_share"] = tsh
+    res["round_period_s"] = T
+    return res
+
+
+# --------------------------------------------------------------------------
+# jitted public entry points
+# --------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("backend", "tile", "fm_tile_rows",
+                                   "pes_hint_static", "design_tile",
+                                   "floors"))
+def _joint_spatial_jit(md, mt, dev, pes_shares, buf_shares, bw_shares, *,
+                       backend, tile, fm_tile_rows, pes_hint_static,
+                       design_tile, floors):
+    return joint_spatial_traced(
+        md, mt, dev, pes_shares, buf_shares, bw_shares, backend=backend,
+        tile=tile, fm_tile_rows=fm_tile_rows,
+        pes_hint_static=pes_hint_static, design_tile=design_tile,
+        floors=floors)
+
+
+@partial(jax.jit, static_argnames=("backend", "tile", "fm_tile_rows",
+                                   "pes_hint_static", "design_tile",
+                                   "share_floor", "reconfig_s"))
+def _joint_temporal_jit(md, mt, dev, time_shares, *, backend, tile,
+                        fm_tile_rows, pes_hint_static, design_tile,
+                        share_floor, reconfig_s):
+    return joint_temporal_traced(
+        md, mt, dev, time_shares, backend=backend, tile=tile,
+        fm_tile_rows=fm_tile_rows, pes_hint_static=pes_hint_static,
+        design_tile=design_tile, share_floor=share_floor,
+        reconfig_s=reconfig_s)
+
+
+def joint_evaluate(md: MultiDesignBatch, mt: MultiNetTables,
+                   dev: DeviceSpec | DeviceTables, *, mode: str = "spatial",
+                   pes_shares=None, buf_shares=None, bw_shares=None,
+                   time_shares=None, backend: str | None = None,
+                   tile: int = JOINT_TILE, fm_tile_rows: int = 2,
+                   design_tile: int = 16, floors=DEFAULT_FLOORS,
+                   reconfig_s: float = 0.0) -> dict[str, jnp.ndarray]:
+    """Evaluate a batch of M-model deployments — one jitted dispatch.
+
+    ``mode="spatial"`` consumes raw (B, M) resource shares (repaired
+    in-trace; defaults to an equal split), ``mode="temporal"`` raw
+    round-robin time shares.  One compiled program per mode serves every
+    model set (padded to ``DEFAULT_MAX_M``), board and split; only the
+    batch shape and static knobs key the jit cache.
+    """
+    backend = resolve_backend(backend)
+    if isinstance(dev, DeviceSpec):
+        hint = pes_hint(dev.pes)
+        devt = make_device_tables(dev)
+    else:
+        devt = dev
+        hint = pes_hint(float(dev.pes))
+    B, max_m = md.batch, md.n_models
+    ones = jnp.ones((B, max_m), jnp.float32)
+    if mode == "spatial":
+        pes_shares = ones if pes_shares is None else jnp.asarray(pes_shares)
+        buf_shares = ones if buf_shares is None else jnp.asarray(buf_shares)
+        bw_shares = ones if bw_shares is None else jnp.asarray(bw_shares)
+        return _joint_spatial_jit(
+            md, mt, devt, pes_shares, buf_shares, bw_shares,
+            backend=backend, tile=tile, fm_tile_rows=fm_tile_rows,
+            pes_hint_static=hint, design_tile=design_tile,
+            floors=tuple(floors))
+    if mode == "temporal":
+        time_shares = ones if time_shares is None \
+            else jnp.asarray(time_shares)
+        return _joint_temporal_jit(
+            md, mt, devt, time_shares, backend=backend, tile=tile,
+            fm_tile_rows=fm_tile_rows, pes_hint_static=hint,
+            design_tile=design_tile, share_floor=float(floors[2]),
+            reconfig_s=float(reconfig_s))
+    raise ValueError(f"unknown mode {mode!r}; known: spatial, temporal")

@@ -1,0 +1,211 @@
+"""Resource partitioning for multi-CNN co-scheduling — the two co-execution
+modes of a shared FPGA (Shen et al.'s resource-partitioning design space,
+arXiv:1607.00064, made analytic):
+
+* **spatial** — the board's DSPs / BRAM / off-chip bandwidth are split into
+  M disjoint slices, one per-model multiple-CE accelerator each.  Splits
+  are integer (DSPs; BRAM in 1-KiB granules) and live in the *traced* path:
+  ``repair_partition_jax`` turns arbitrary positive shares into a valid
+  split inside the jitted joint evaluator, so the joint DSE mutates raw
+  shares freely and one compile serves every split.
+* **temporal** — one full-board accelerator per model, time-multiplexed by
+  weighted round-robin; ``repair_time_shares_jax`` normalizes the slice
+  weights the same way.
+
+Host-side twins (`sample_shares`, `equal_shares`, `validate_partition`)
+feed the search and the property tests.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..batch_eval import DeviceTables
+
+#: model-axis padding: deployments of 1..MAX_M models share one compiled
+#: joint program (the model axis is padded, never a static shape change).
+DEFAULT_MAX_M = 4
+
+#: BRAM split granularity (bytes).  Multi-model splits allocate whole
+#: granules — physical BRAM comes in blocks, and granule totals stay exact
+#: in f32 where raw byte counts (> 2^24) would not.
+BUF_GRANULE = 1024
+
+#: default per-model resource floors, as fractions of the board budget —
+#: repair never starves a co-resident model below its floor.
+DEFAULT_FLOORS = (0.05, 0.05, 0.05)   # (pes, buf, bw)
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class PartitionBatch:
+    """(B, M) per-deployment resource split: integer DSPs, integer BRAM
+    bytes (1-KiB granules), and off-chip bandwidth fractions.  Invalid
+    (padded) model columns carry zeros."""
+
+    pes: jnp.ndarray   # f32 (B, M) integer-valued DSP split
+    buf: jnp.ndarray   # f32 (B, M) integer-valued BRAM bytes
+    bw: jnp.ndarray    # f32 (B, M) bandwidth fractions, sum 1 over valid
+
+    @property
+    def batch(self) -> int:
+        return self.pes.shape[0]
+
+    @property
+    def n_models(self) -> int:
+        return self.pes.shape[1]
+
+    def take(self, idx) -> "PartitionBatch":
+        return PartitionBatch(self.pes[idx], self.buf[idx], self.bw[idx])
+
+    def to_numpy(self):
+        return (np.asarray(self.pes), np.asarray(self.buf),
+                np.asarray(self.bw))
+
+
+def _proportional_split(shares, total, valid, floor_frac):
+    """Traced largest-remainder split of an integer ``total`` (traced
+    scalar) proportional to ``shares`` (B, M), each valid model floored at
+    ``floor_frac * total`` (static float).
+
+    Sums exactly to ``total`` on every row; invalid columns get 0.  Rows
+    with a single valid model get the whole budget verbatim (bit-exact
+    M=1 reduction to the single-model evaluator).
+    """
+    valid_f = valid.astype(jnp.float32)
+    nv = jnp.maximum(valid_f.sum(-1, keepdims=True), 1.0)      # (B, 1)
+    fl = jnp.floor(jnp.minimum(floor_frac * total,
+                               jnp.floor(total / nv)))          # (B, 1)
+    rem_total = total - fl * nv                                 # (B, 1)
+    s = jnp.where(shares > 0, shares, 0.0) * valid_f
+    ssum = s.sum(-1, keepdims=True)
+    s = jnp.where(ssum > 0, s / jnp.maximum(ssum, 1e-30), valid_f / nv)
+    raw = s * rem_total
+    base = jnp.floor(raw)
+    short = rem_total[..., 0] - (base * valid_f).sum(-1)        # (B,)
+    frac = jnp.where(valid, raw - base, -1.0)
+    order = jnp.argsort(-frac, axis=-1, stable=True)
+    rank = jnp.argsort(order, axis=-1, stable=True)
+    bonus = (rank < short[:, None]) & valid
+    out = (fl + base + bonus) * valid_f
+    # single-model rows take the budget verbatim (no floor/granule detour)
+    single = (valid_f.sum(-1, keepdims=True) == 1.0) & valid
+    return jnp.where(single, jnp.broadcast_to(total, out.shape), out)
+
+
+def repair_partition_jax(pes_shares, buf_shares, bw_shares,
+                         dev: DeviceTables, model_valid,
+                         floors=DEFAULT_FLOORS) -> PartitionBatch:
+    """Traced spatial-split repair: arbitrary positive (B, M) shares ->
+    a valid :class:`PartitionBatch` for board ``dev``.
+
+    Guarantees, per row (over valid models):
+    * ``pes`` are integers summing exactly to ``dev.pes``;
+    * ``buf`` are 1-KiB multiples summing exactly to the board's BRAM
+      rounded down to the granule (single-model rows take the full budget);
+    * ``bw`` fractions sum to 1;
+    * every valid model receives at least its ``floors`` fraction (clamped
+      to an equal split when M * floor > 1).
+
+    ``floors`` is a static (pes, buf, bw) fraction triple.
+    """
+    valid = jnp.broadcast_to((model_valid > 0)[None, :], pes_shares.shape)
+    valid_f = valid.astype(jnp.float32)
+    pes = _proportional_split(pes_shares, dev.pes, valid, floors[0])
+    buf_g = _proportional_split(buf_shares, jnp.floor(dev.on_chip_bytes
+                                                      / BUF_GRANULE),
+                                valid, floors[1])
+    single = (valid_f.sum(-1, keepdims=True) == 1.0) & valid
+    buf = jnp.where(single, jnp.broadcast_to(dev.on_chip_bytes, buf_g.shape),
+                    buf_g * BUF_GRANULE)
+    bw = repair_time_shares_jax(bw_shares, model_valid, floor=floors[2])
+    return PartitionBatch(pes, buf, bw)
+
+
+def repair_time_shares_jax(raw, model_valid, floor: float = 0.05):
+    """Traced share normalization: positive (B, M) raw weights -> fractions
+    summing to 1 over valid models, each at least ``floor`` (clamped to an
+    equal split when M * floor > 1).  Used for both bandwidth fractions
+    (spatial) and round-robin time slices (temporal)."""
+    valid = jnp.broadcast_to((model_valid > 0)[None, :], raw.shape)
+    valid_f = valid.astype(jnp.float32)
+    nv = jnp.maximum(valid_f.sum(-1, keepdims=True), 1.0)
+    fl = jnp.minimum(floor, 1.0 / nv)
+    s = jnp.where(raw > 0, raw, 0.0) * valid_f
+    ssum = s.sum(-1, keepdims=True)
+    s = jnp.where(ssum > 0, s / jnp.maximum(ssum, 1e-30), valid_f / nv)
+    return (fl + (1.0 - nv * fl) * s) * valid_f
+
+
+def partition_devices(dev: DeviceTables, part: PartitionBatch,
+                      model_valid) -> DeviceTables:
+    """Per-(row, model) DeviceTables for the spatial mode: every leaf is
+    (B, M).  Invalid (padded) model columns get the FULL board — their
+    metrics are numerically safe and masked out of every system metric."""
+    valid = jnp.broadcast_to((model_valid > 0)[None, :], part.pes.shape)
+    full = lambda x: jnp.broadcast_to(x, part.pes.shape)
+    return DeviceTables(
+        pes=jnp.where(valid, part.pes, full(dev.pes)),
+        on_chip_bytes=jnp.where(valid, part.buf, full(dev.on_chip_bytes)),
+        bpc=jnp.where(valid, part.bw * dev.bpc, full(dev.bpc)),
+        bps=jnp.where(valid, part.bw * dev.bps, full(dev.bps)),
+        clock_hz=full(dev.clock_hz),
+        wordbytes=full(dev.wordbytes))
+
+
+# --------------------------------------------------------------------------
+# host-side helpers (search init, baselines, tests)
+# --------------------------------------------------------------------------
+def sample_shares(rng: np.random.Generator, n: int, max_m: int,
+                  n_models: int | None = None) -> np.ndarray:
+    """(n, max_m) random positive shares (Dirichlet over the real models,
+    zeros on padded columns) — the raw genome the traced repair consumes."""
+    m = max_m if n_models is None else n_models
+    out = np.zeros((n, max_m), np.float32)
+    out[:, :m] = rng.dirichlet(np.ones(m), size=n).astype(np.float32)
+    return out
+
+
+def equal_shares(n: int, max_m: int, n_models: int | None = None) -> np.ndarray:
+    """(n, max_m) equal shares over the real models — the equal-split
+    baseline's frozen genome."""
+    m = max_m if n_models is None else n_models
+    out = np.zeros((n, max_m), np.float32)
+    out[:, :m] = 1.0 / m
+    return out
+
+
+def validate_partition(part: PartitionBatch, dev, model_valid,
+                       floors=DEFAULT_FLOORS) -> np.ndarray:
+    """Host-side check of the repair guarantees -> bool mask (B,).
+
+    ``dev`` is a DeviceSpec (exact host integers).  Budgets are compared
+    against the f32 board values the traced path sees.
+    """
+    pes, buf, bw = part.to_numpy()
+    valid = np.asarray(model_valid) > 0
+    nv = int(valid.sum())
+    pes_total = float(np.float32(dev.pes))
+    buf_total = float(np.float32(dev.on_chip_bytes))
+    ok = np.abs((pes * valid[None, :]).sum(-1) - pes_total) < 0.5
+    if nv == 1:
+        ok &= np.abs((buf * valid[None, :]).sum(-1) - buf_total) < 0.5
+    else:
+        gran_total = np.floor(buf_total / BUF_GRANULE) * BUF_GRANULE
+        ok &= np.abs((buf * valid[None, :]).sum(-1) - gran_total) < 0.5
+    ok &= np.abs((bw * valid[None, :]).sum(-1) - 1.0) < 1e-5
+    fl_pes = np.floor(min(floors[0], 1.0 / nv) * pes_total)
+    fl_buf = np.floor(min(floors[1], 1.0 / nv)
+                      * np.floor(buf_total / BUF_GRANULE)) * BUF_GRANULE
+    fl_bw = min(floors[2], 1.0 / nv)
+    ok &= (pes[:, valid] >= fl_pes - 0.5).all(-1)
+    ok &= (buf[:, valid] >= fl_buf - 0.5).all(-1)
+    ok &= (bw[:, valid] >= fl_bw - 1e-6).all(-1)
+    ok &= (pes[:, ~valid] == 0).all(-1)    # padded columns stay zeroed
+    ok &= (buf[:, ~valid] == 0).all(-1)
+    ok &= (bw[:, ~valid] == 0).all(-1)
+    return ok

@@ -1,0 +1,353 @@
+"""Joint DSE over (per-model budget split × per-model CE arrangement).
+
+The multinet genome extends the single-model one: each deployment row is M
+``DesignBatch`` planes (bred per model with the existing ``make_children``
+operators, so every segment/CE/pipeline mutation carries over) plus raw
+resource shares (spatial: DSP/BRAM/bandwidth; temporal: round-robin time
+slices).  Share variation adds two operators of its own:
+
+* share mutation          — one model's share scaled by a lognormal factor;
+* transfer-of-budget      — crossover takes parent A's deployment and
+  re-allocates budget model-wise from parent B, plus an explicit
+  move-δ-from-model-i-to-j mutation.
+
+Raw shares are repaired *inside* the jitted joint evaluator
+(``repair_partition_jax``), so the breeding pipeline never has to keep
+splits feasible — mutation space stays unconstrained and ONE compile
+serves the whole search.  Selection keeps a :class:`ParetoArchive` over
+the oriented system objectives (worst-model latency vs aggregate
+throughput by default).
+
+The equal-split baseline arm is the SAME search with
+``freeze_partition=True`` (shares pinned to 1/M): identical budget,
+operators and seeds — the front difference isolates exactly what
+partition-awareness buys.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..dse.encoding import NS, DesignBatch, MultiDesignBatch, stack_designs
+from ..dse.pareto import ParetoArchive
+from ..dse.samplers import sample_mixed
+from ..dse.search import SearchConfig, make_children, orient
+from .joint_eval import make_multi_tables, joint_evaluate
+from .partition import DEFAULT_FLOORS, DEFAULT_MAX_M, equal_shares, \
+    sample_shares
+
+#: default joint objectives: the multi-tenant serving trade-off — the
+#: worst co-resident model's latency vs the max-min (weighted) model
+#: throughput.  Aggregate throughput stays reported but is not the default
+#: objective: it rewards starving the expensive model.
+JOINT_OBJECTIVES = ("worst_latency_s", "min_model_throughput_ips")
+
+#: metric keys persisted for every evaluated deployment (system metrics
+#: plus the repaired splits, so fronts decode straight to deployments)
+_KEEP_SYS = ("agg_throughput_ips", "worst_latency_s",
+             "min_model_throughput_ips", "fairness",
+             "slo_attainment", "traffic_bytes_per_s",
+             "per_model_latency_s", "per_model_throughput_ips",
+             "per_model_access_bytes")
+_KEEP_MODE = {"spatial": ("pes_split", "buf_split", "bw_split"),
+              "temporal": ("time_share", "round_period_s")}
+
+
+@dataclass
+class MultinetSearchConfig:
+    pop_size: int = 512
+    budget: int = 4096                # total deployment evaluations
+    objectives: tuple[str, ...] = JOINT_OBJECTIVES
+    mode: str = "spatial"             # "spatial" | "temporal"
+    freeze_partition: bool = False    # pin shares to the equal split
+    min_ces: int = 1                  # per-model CE bounds
+    max_ces: int = 11
+    seed: int = 0
+    # per-model design variation (forwarded to dse.make_children)
+    crossover_frac: float = 0.5
+    shift_frac: float = 0.6
+    split_frac: float = 0.15
+    merge_frac: float = 0.15
+    nce_frac: float = 0.4
+    flip_frac: float = 0.15
+    inter_frac: float = 0.1
+    # share variation
+    share_mutate_frac: float = 0.5
+    share_sigma: float = 0.35
+    transfer_frac: float = 0.4
+    transfer_delta: float = 0.5
+    share_crossover_frac: float = 0.5
+    #: trailing fraction of generations run memetically: children inherit a
+    #: front parent's split (small jitter only), concentrating the design
+    #: operators on the promising splits the explore phase surfaced
+    exploit_frac: float = 0.4
+    immigrant_frac: float = 0.15
+    elite_frac: float = 0.25
+    weights: tuple[float, ...] | None = None   # per-model request weights
+    slo_s: tuple[float, ...] | None = None
+    floors: tuple[float, float, float] = DEFAULT_FLOORS
+    max_m: int = DEFAULT_MAX_M
+
+    def design_cfg(self) -> SearchConfig:
+        return SearchConfig(
+            min_ces=self.min_ces, max_ces=self.max_ces,
+            crossover_frac=self.crossover_frac, shift_frac=self.shift_frac,
+            split_frac=self.split_frac, merge_frac=self.merge_frac,
+            nce_frac=self.nce_frac, flip_frac=self.flip_frac,
+            inter_frac=self.inter_frac)
+
+
+@dataclass
+class MultinetSearchResult:
+    designs: MultiDesignBatch         # every evaluated deployment, in order
+    shares: dict[str, np.ndarray]     # raw share genomes per resource
+    metrics: dict[str, np.ndarray]    # system metrics + repaired splits
+    points: np.ndarray                # (n_evals, n_obj) oriented objectives
+    front_idx: np.ndarray
+    objectives: tuple[str, ...]
+    mode: str
+    n_evals: int
+    seconds: float
+    history: list[dict] = field(default_factory=list)
+
+    def front_points(self) -> np.ndarray:
+        return self.points[self.front_idx]
+
+
+# --------------------------------------------------------------------------
+# share variation operators (host numpy, raw positive genomes)
+# --------------------------------------------------------------------------
+def _mutate_shares(rng, shares, m, frac, sigma):
+    """One random model's share scaled by lognormal(sigma), per row w.p.
+    ``frac``.  Operates in place on the (n, max_m) raw genome."""
+    n = len(shares)
+    do = rng.random(n) < frac
+    col = rng.integers(0, m, size=n)
+    factor = np.exp(rng.normal(0.0, sigma, size=n)).astype(np.float32)
+    rows = np.nonzero(do)[0]
+    shares[rows, col[rows]] *= factor[rows]
+
+
+def _transfer_budget(rng, shares, m, frac, delta):
+    """Move ``delta`` of model i's share to model j (i != j), per row w.p.
+    ``frac`` — the explicit budget-transfer mutation."""
+    if m < 2:
+        return
+    n = len(shares)
+    do = rng.random(n) < frac
+    i = rng.integers(0, m, size=n)
+    j = (i + rng.integers(1, m, size=n)) % m
+    rows = np.nonzero(do)[0]
+    moved = delta * shares[rows, i[rows]]
+    shares[rows, i[rows]] -= moved
+    shares[rows, j[rows]] += moved
+
+
+def _crossover_shares(rng, a, b, m, frac):
+    """Transfer-of-budget crossover: child keeps parent A's shares but,
+    per row w.p. ``frac``, adopts parent B's allocation on a random
+    nonempty model subset — budget moves between models exactly as the two
+    parents disagreed."""
+    n, max_m = a.shape
+    take_b = rng.random((n, max_m)) < 0.5
+    take_b[:, m:] = False
+    none = ~take_b[:, :m].any(1)
+    take_b[none, rng.integers(0, m, size=int(none.sum()))] = True
+    do = (rng.random(n) < frac)[:, None]
+    return np.where(do & take_b, b, a)
+
+
+def _breed_shares(rng, pool_shares, pa, pb, m, cfg) -> np.ndarray:
+    child = _crossover_shares(rng, pool_shares[pa].copy(),
+                              pool_shares[pb], m,
+                              cfg.share_crossover_frac)
+    _transfer_budget(rng, child, m, cfg.transfer_frac, cfg.transfer_delta)
+    _mutate_shares(rng, child, m, cfg.share_mutate_frac, cfg.share_sigma)
+    return np.maximum(child, 1e-6 * child.max(initial=1.0))
+
+
+# --------------------------------------------------------------------------
+# the search loop
+# --------------------------------------------------------------------------
+def joint_search(nets, dev, config: MultinetSearchConfig | None = None,
+                 mtables=None) -> MultinetSearchResult:
+    """Run the joint loop: sample deployments -> joint evaluate -> archive
+    -> breed designs and budget splits together."""
+    cfg = config or MultinetSearchConfig()
+    if cfg.budget < 1 or cfg.pop_size < 1:
+        raise ValueError(f"budget and pop_size must be >= 1 "
+                         f"(got {cfg.budget}, {cfg.pop_size})")
+    if cfg.mode not in ("spatial", "temporal"):
+        raise ValueError(f"unknown mode {cfg.mode!r}")
+    mt = mtables if mtables is not None else make_multi_tables(
+        nets, weights=cfg.weights, slo_s=cfg.slo_s, max_m=cfg.max_m)
+    m = len(nets)
+    max_m = mt.max_m
+    n_layers = [len(net) for net in nets]
+    n_obj = len(cfg.objectives)
+    rng = np.random.default_rng(cfg.seed)
+    dcfg = cfg.design_cfg()
+    resources = ("pes", "buf", "bw") if cfg.mode == "spatial" else ("time",)
+
+    pop_n = min(cfg.pop_size, cfg.budget)
+    gens = max(1, cfg.budget // pop_n)
+    sizes = [pop_n] * gens
+    sizes[-1] += cfg.budget - gens * pop_n
+    total = cfg.budget
+
+    def fresh_shares(n):
+        if cfg.freeze_partition:
+            return {r: equal_shares(n, max_m, m) for r in resources}
+        sh = {r: sample_shares(rng, n, max_m, m) for r in resources}
+        # anchor a few exact equal-split rows so the searched space always
+        # contains the baseline deployment
+        k = max(1, n // 16)
+        for r in resources:
+            sh[r][:k] = equal_shares(k, max_m, m)
+        return sh
+
+    def fresh_designs(n):
+        return [sample_mixed(rng, L, n, min_ces=cfg.min_ces,
+                             max_ces=cfg.max_ces) for L in n_layers]
+
+    # hall-of-everything buffers (preallocated; written incrementally)
+    hall_end = np.empty((total, max_m, NS), np.int32)
+    hall_pipe = np.empty((total, max_m, NS), bool)
+    hall_nce = np.empty((total, max_m, NS), np.int32)
+    hall_inter = np.empty((total, max_m), bool)
+    hall_sh = {r: np.empty((total, max_m), np.float32) for r in resources}
+    all_points = np.empty((total, n_obj))
+    all_metrics: list[dict] = []
+    archive = ParetoArchive(n_obj)
+    history: list[dict] = []
+
+    def eval_gen(md: MultiDesignBatch, sh: dict) -> dict:
+        """Evaluate one generation in pop_n-shaped sub-batches (the final
+        oversized generation splits; every call is pop_n rows)."""
+        n = md.batch
+        outs = []
+        for s in range(0, n, pop_n):
+            idx = np.arange(s, min(s + pop_n, n))
+            sub = md.take(idx)
+            subsh = {r: v[idx] for r, v in sh.items()}
+            if len(idx) < pop_n:
+                pad = np.concatenate([idx, np.repeat(idx[-1:],
+                                                     pop_n - len(idx))])
+                sub = md.take(pad)
+                subsh = {r: v[pad] for r, v in sh.items()}
+            if cfg.mode == "spatial":
+                out = joint_evaluate(sub, mt, dev,
+                                     pes_shares=subsh["pes"],
+                                     buf_shares=subsh["buf"],
+                                     bw_shares=subsh["bw"],
+                                     floors=cfg.floors)
+            else:
+                out = joint_evaluate(sub, mt, dev, mode="temporal",
+                                     time_shares=subsh["time"],
+                                     floors=cfg.floors)
+            keep = _KEEP_SYS + _KEEP_MODE[cfg.mode]
+            outs.append({k: np.asarray(out[k])[:len(idx)] for k in keep})
+        return {k: np.concatenate([o[k] for o in outs])
+                if len(outs) > 1 else outs[0][k] for k in outs[0]}
+
+    pop_md = stack_designs(fresh_designs(sizes[0]), max_m)
+    pop_sh = fresh_shares(sizes[0])
+    base = 0
+    t0 = time.time()
+    for gen in range(gens):
+        out = eval_gen(pop_md, pop_sh)
+        pts = orient(out, cfg.objectives)
+        ok = np.isfinite(pts).all(1)
+        idx = np.arange(base, base + sizes[gen])
+        base += sizes[gen]
+        (hall_end[idx], hall_pipe[idx], hall_nce[idx],
+         hall_inter[idx]) = pop_md.to_numpy()
+        for r in resources:
+            hall_sh[r][idx] = pop_sh[r]
+        all_points[idx] = pts
+        all_metrics.append(out)
+        archive.update(pts[ok], idx[ok])
+
+        if gen == gens - 1:
+            break
+
+        # ---- parents: archive front + this generation's elite slice ----
+        lo, hi = np.nanmin(all_points[:base], 0), np.nanmax(
+            np.where(np.isfinite(all_points[:base]), all_points[:base],
+                     np.nan), 0)
+        norm = (pts - lo) / np.maximum(hi - lo, 1e-30)
+        score = np.where(ok, norm.sum(1), np.inf)
+        n_elite = max(1, int(sizes[gen] * cfg.elite_frac))
+        elite = idx[np.argsort(score, kind="stable")[:n_elite]]
+        pool = np.unique(np.concatenate([archive.payload, elite]))
+        pool_sh = {r: hall_sh[r][pool] for r in resources}
+
+        n_next = sizes[gen + 1]
+        n_imm = int(n_next * cfg.immigrant_frac)
+        n_child = n_next - n_imm
+        kids = [make_children(
+            rng, DesignBatch.from_numpy(
+                hall_end[pool][:, mm], hall_pipe[pool][:, mm],
+                hall_nce[pool][:, mm], hall_inter[pool][:, mm]),
+            n_layers[mm], dcfg, n_child) for mm in range(m)]
+        exploit = gen + 1 >= gens - int((gens - 1) * cfg.exploit_frac)
+        if cfg.freeze_partition:
+            kid_sh = {r: equal_shares(n_child, max_m, m) for r in resources}
+        else:
+            pa = rng.integers(0, len(pool), size=n_child)
+            pb = rng.integers(0, len(pool), size=n_child)
+            if exploit:
+                # memetic tail: inherit parent A's split near-verbatim so
+                # design breeding refines the surfaced splits
+                kid_sh = {}
+                for r in resources:
+                    sh_r = pool_sh[r][pa].copy()
+                    _mutate_shares(rng, sh_r, m, 0.3,
+                                   0.2 * cfg.share_sigma)
+                    kid_sh[r] = sh_r
+            else:
+                kid_sh = {r: _breed_shares(rng, pool_sh[r], pa, pb, m, cfg)
+                          for r in resources}
+        if n_imm:
+            imm = fresh_designs(n_imm)
+            if exploit and not cfg.freeze_partition:
+                pi = rng.integers(0, len(pool), size=n_imm)
+                imm_sh = {r: pool_sh[r][pi].copy() for r in resources}
+            else:
+                imm_sh = fresh_shares(n_imm)
+            kids = [DesignBatch.from_numpy(
+                np.concatenate([np.asarray(k.seg_end),
+                                np.asarray(i.seg_end)]),
+                np.concatenate([np.asarray(k.seg_pipe),
+                                np.asarray(i.seg_pipe)]),
+                np.concatenate([np.asarray(k.seg_nce),
+                                np.asarray(i.seg_nce)]),
+                np.concatenate([np.asarray(k.inter_pipe),
+                                np.asarray(i.inter_pipe)]))
+                for k, i in zip(kids, imm)]
+            kid_sh = {r: np.concatenate([kid_sh[r], imm_sh[r]])
+                      for r in resources}
+        pop_md = stack_designs(kids, max_m)
+        pop_sh = kid_sh
+
+        history.append(dict(gen=gen, evals=base, archive=len(archive),
+                            best=dict(zip(cfg.objectives,
+                                          archive.points.min(0).tolist()))
+                            if len(archive) else {}))
+
+    seconds = time.time() - t0
+    cat_md = MultiDesignBatch(hall_end, hall_pipe, hall_nce, hall_inter)
+    metrics = {k: np.concatenate([mtr[k] for mtr in all_metrics])
+               if len(all_metrics) > 1 else all_metrics[0][k]
+               for k in all_metrics[0]}
+    history.append(dict(gen=gens - 1, evals=total, archive=len(archive),
+                        best=dict(zip(cfg.objectives,
+                                      archive.points.min(0).tolist()))
+                        if len(archive) else {}))
+    return MultinetSearchResult(
+        designs=cat_md, shares=hall_sh, metrics=metrics, points=all_points,
+        front_idx=np.sort(archive.payload.copy()),
+        objectives=tuple(cfg.objectives), mode=cfg.mode, n_evals=total,
+        seconds=seconds, history=history)

@@ -1,0 +1,217 @@
+"""The multinet co-scheduling subsystem: M=1 reduction to the single-model
+evaluator, partition-repair guarantees, the extended one-compile claim, and
+joint DSE dominating the equal-split baseline."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.cnn.registry import CNN_NAMES, get_cnn
+from repro.core.batch_eval import (bucket_max_L, evaluate_batch, make_tables,
+                                   make_device_tables, shared_max_L)
+from repro.core.dse import stack_designs
+from repro.core.dse.pareto import hypervolume_2d
+from repro.core.dse.samplers import sample_mixed
+from repro.core.dse.search import orient
+from repro.core.multinet import (DEFAULT_MAX_M, MultinetSearchConfig,
+                                 PartitionBatch, equal_shares, joint_evaluate,
+                                 joint_explore, make_multi_tables,
+                                 repair_partition_jax, sample_shares,
+                                 validate_partition)
+from repro.fpga.archs import ARCH_NAMES, make_arch
+from repro.fpga.boards import BOARD_NAMES, get_board
+
+from hypo_fallback import given, settings, st
+
+
+# ------------------------------------------------------------- M=1 identity
+@pytest.mark.parametrize("cnn", CNN_NAMES)
+def test_m1_spatial_bit_identical_to_single_model(cnn):
+    """A single-model spatial deployment (full budget) reproduces the
+    single-model evaluator bit for bit, on every baseline arch × CNN."""
+    net = get_cnn(cnn)
+    dev = get_board("vcu108")
+    specs = [make_arch(a, net, n) for a in ARCH_NAMES for n in (2, 9)]
+    from repro.core.dse.encoding import encode_specs
+    db = encode_specs(specs, len(net))
+    single = evaluate_batch(db, make_tables(net), dev, backend="ref")
+    mt = make_multi_tables([net])
+    out = joint_evaluate(stack_designs([db], DEFAULT_MAX_M), mt, dev)
+    for k in ("latency_s", "throughput_ips", "buffer_bytes", "access_bytes",
+              "utilization", "n_ces"):
+        np.testing.assert_array_equal(
+            np.asarray(single[k]), np.asarray(out[f"per_model_{k}"])[:, 0],
+            err_msg=f"{cnn} {k}")
+    # system metrics reduce to the single model's metrics
+    np.testing.assert_array_equal(np.asarray(out["worst_latency_s"]),
+                                  np.asarray(single["latency_s"]))
+    np.testing.assert_array_equal(np.asarray(out["agg_throughput_ips"]),
+                                  np.asarray(single["throughput_ips"]))
+
+
+# -------------------------------------------------------- partition repair
+@settings(max_examples=40, deadline=None)
+@given(m=st.integers(1, DEFAULT_MAX_M),
+       board=st.sampled_from(BOARD_NAMES),
+       seed=st.integers(0, 10_000))
+def test_partition_repair_sums_to_budget_and_respects_floors(m, board, seed):
+    """Property: repaired partitions always sum to the board budget (BRAM
+    in 1-KiB granules for M >= 2) and never starve a model below its
+    floor — for arbitrary raw shares, including degenerate ones."""
+    rng = np.random.default_rng(seed)
+    dev = get_board(board)
+    devt = make_device_tables(dev)
+    model_valid = np.zeros(DEFAULT_MAX_M, np.float32)
+    model_valid[:m] = 1.0
+    B = 16
+    raw = [rng.gamma(0.3, 1.0, size=(B, DEFAULT_MAX_M)).astype(np.float32)
+           for _ in range(3)]
+    raw[0][0] = 0.0                      # all-zero row -> equal fallback
+    raw[1][1, :1] = 1e9                  # extreme skew
+    part = repair_partition_jax(raw[0], raw[1], raw[2], devt,
+                                model_valid)
+    part = PartitionBatch(*[np.asarray(x) for x in
+                            (part.pes, part.buf, part.bw)])
+    assert validate_partition(part, dev, model_valid).all()
+    # pes splits are integers
+    assert (np.asarray(part.pes) == np.round(np.asarray(part.pes))).all()
+
+
+def test_equal_shares_round_trip():
+    dev = get_board("zc706")
+    devt = make_device_tables(dev)
+    model_valid = np.array([1, 1, 0, 0], np.float32)
+    eq = equal_shares(4, DEFAULT_MAX_M, 2)
+    part = repair_partition_jax(eq, eq, eq, devt, model_valid)
+    pes = np.asarray(part.pes)
+    assert pes[:, :2].sum(-1) == pytest.approx(dev.pes)
+    assert abs(pes[0, 0] - pes[0, 1]) <= 1       # near-equal integers
+    assert (pes[:, 2:] == 0).all()
+
+
+# ----------------------------------------------------- one-compile at M<=3
+def test_joint_eval_single_compile_across_m_boards_models():
+    """The extended recompile-free claim: ONE jit compile serves every
+    (model set × board × split) joint evaluation at M ∈ {1, 2, 3}."""
+    import jax
+
+    from repro.core.multinet import joint_eval as je
+
+    jax.clear_caches()
+    assert je._joint_spatial_jit._cache_size() == 0
+    rng = np.random.default_rng(11)
+    combos = [(("mobilenetv2",), "zc706"),
+              (("resnet50", "mobilenetv2"), "vcu110"),
+              (("resnet50", "mobilenetv2", "densenet121"), "zcu102"),
+              (("vgg16", "resnet101"), "vcu108")]
+    B = 32
+    for names, board in combos:
+        nets = [get_cnn(n) for n in names]
+        mt = make_multi_tables(nets)
+        md = stack_designs([sample_mixed(rng, len(n), B) for n in nets],
+                           DEFAULT_MAX_M)
+        sh = [sample_shares(rng, B, DEFAULT_MAX_M, len(nets))
+              for _ in range(3)]
+        out = joint_evaluate(md, mt, get_board(board), pes_shares=sh[0],
+                             buf_shares=sh[1], bw_shares=sh[2])
+        assert np.isfinite(np.asarray(out["worst_latency_s"])).all()
+    assert je._joint_spatial_jit._cache_size() == 1
+
+
+def test_shared_max_l_bucketing():
+    """All zoo nets share the base bucket; oversized nets move the whole
+    deployment to the next step instead of forking compiles."""
+    assert bucket_max_L(52) == bucket_max_L(155) == 160
+    assert bucket_max_L(161) == 192
+    assert shared_max_L([53, 52]) == 160
+    assert shared_max_L([53, 170]) == 192
+    mt = make_multi_tables([get_cnn("resnet152"), get_cnn("mobilenetv2")])
+    assert mt.tables.F.shape == (DEFAULT_MAX_M, 160)
+
+
+# ------------------------------------------------------------ temporal mode
+def test_temporal_metrics_account_for_sharing_and_switching():
+    """Round-robin time shares sum to 1; each model's effective throughput
+    is below its time-share of the full-board throughput (weight reload
+    charges); latency exceeds the full-board latency."""
+    rng = np.random.default_rng(5)
+    nets = [get_cnn("resnet50"), get_cnn("mobilenetv2")]
+    dev = get_board("zc706")
+    mt = make_multi_tables(nets)
+    B = 16
+    dbs = [sample_mixed(rng, len(n), B) for n in nets]
+    md = stack_designs(dbs, DEFAULT_MAX_M)
+    tsh = sample_shares(rng, B, DEFAULT_MAX_M, 2)
+    out = joint_evaluate(md, mt, dev, mode="temporal", time_shares=tsh)
+    shares = np.asarray(out["time_share"])
+    np.testing.assert_allclose(shares[:, :2].sum(-1), 1.0, rtol=1e-5)
+    full = [evaluate_batch(db, make_tables(net), dev)
+            for db, net in zip(dbs, nets)]
+    for i in range(2):
+        tp = np.asarray(out["per_model_throughput_ips"])[:, i]
+        lat = np.asarray(out["per_model_latency_s"])[:, i]
+        assert (tp <= np.asarray(full[i]["throughput_ips"])
+                * shares[:, i] + 1e-6).all()
+        assert (lat > np.asarray(full[i]["latency_s"])).all()
+
+
+# ------------------------------------------------------------- joint DSE
+def test_joint_search_dominates_equal_split_baseline():
+    """Acceptance: joint DSE on resnet50+mobilenetv2/zc706 yields a front
+    that dominates the equal-split baseline at the SAME budget (same
+    operators and seed; only the split is free vs frozen)."""
+    nets = [get_cnn("resnet50"), get_cnn("mobilenetv2")]
+    dev = get_board("zc706")
+    budget, cfg = 1536, MultinetSearchConfig(pop_size=256, seed=3)
+    srch = joint_explore(nets, dev, budget, strategy="search", config=cfg)
+    eq = joint_explore(nets, dev, budget, strategy="equal_split",
+                       config=cfg)
+    sp, ep = srch.front_points(), eq.front_points()
+    allp = np.concatenate([sp, ep])
+    # pad outward (oriented coords are negative on the throughput axis)
+    ref = allp.max(0) + 0.05 * np.maximum(np.ptp(allp, 0), 1e-9)
+    assert hypervolume_2d(sp, ref) > hypervolume_2d(ep, ref)
+    # every equal-split front point is weakly dominated by the searched
+    # front, at least one strictly
+    weak = np.array([((sp <= q).all(1)).any() for q in ep])
+    strict = np.array([((sp <= q).all(1) & (sp < q).any(1)).any()
+                       for q in ep])
+    assert weak.all() and strict.any()
+
+
+def test_joint_explore_random_and_result_shape():
+    nets = [get_cnn("mobilenetv2"), get_cnn("xception")]
+    dev = get_board("vcu110")
+    res = joint_explore(nets, dev, 96, strategy="random", seed=1, chunk=64)
+    assert res.n_evals == 96
+    assert res.metrics["worst_latency_s"].shape == (96,)
+    assert res.metrics["pes_split"].shape == (96, DEFAULT_MAX_M)
+    assert len(res.front) >= 1
+    pts = orient(res.metrics, res.objectives)
+    fp = res.front_points()
+    for p in fp:                     # front is mutually non-dominated
+        assert not ((fp <= p).all(1) & (fp < p).any(1)).any()
+    assert np.isfinite(pts).all()
+
+
+def test_joint_search_metrics_match_direct_evaluation():
+    """Re-evaluating a searched front deployment through joint_evaluate
+    with its reported split reproduces the archived system metrics."""
+    nets = [get_cnn("resnet50"), get_cnn("mobilenetv2")]
+    dev = get_board("zc706")
+    cfg = MultinetSearchConfig(pop_size=128, seed=9)
+    res = joint_explore(nets, dev, 256, strategy="search", config=cfg)
+    mt = make_multi_tables(nets)
+    i = int(res.front[0])
+    md = res.designs.take(np.array([i]))
+    # re-feed the archived raw share genome of row i: metrics reproduce
+    out = joint_evaluate(
+        md, mt, dev,
+        pes_shares=res.shares["pes"][i][None],
+        buf_shares=res.shares["buf"][i][None],
+        bw_shares=res.shares["bw"][i][None])
+    np.testing.assert_allclose(
+        float(np.asarray(out["worst_latency_s"])[0]),
+        res.metrics["worst_latency_s"][i], rtol=1e-5)
+    np.testing.assert_array_equal(
+        np.asarray(out["pes_split"])[0], res.metrics["pes_split"][i])
