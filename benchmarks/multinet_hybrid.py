@@ -1,0 +1,128 @@
+"""SLO-driven hybrid spatial/temporal deployments vs the pure modes.
+
+A 3-model mix (resnet50 + mobilenetv2 + densenet121) on the
+resource-starved zc706 under tight per-model SLOs and a 1:2:1 request
+mix.  Three guided arms run with identical budget, operators, seed and
+``objective="slo"`` (graded deadline attainment under the per-model
+deadline-scale grid); only the deployment space differs:
+
+* ``search``   — pure spatial: every model owns a dedicated slice;
+* ``temporal`` — pure time-multiplexing: full board, weighted RR;
+* ``hybrid``   — the general space: per-model spatial/shared assignment,
+  splits and time shares all evolve (anchored with both pure modes, so
+  the hybrid front can only extend them).
+
+The committed artifact records each arm's front over
+(slo_attainment_dist, agg_throughput_ips) and checks that the hybrid
+front attains at least the best SLO attainment of BOTH pure modes at
+equal budget — the deployment-space inclusion made measurable.
+
+    python -m benchmarks.multinet_hybrid            # full budget
+    python -m benchmarks.multinet_hybrid --quick    # CI smoke
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.cnn.registry import get_cnn
+from repro.core.dse.pareto import hypervolume_2d
+from repro.core.multinet import (MultinetSearchConfig, joint_explore,
+                                 make_multi_tables)
+from repro.fpga.boards import get_board
+
+from .common import fmt_table, save
+
+MODELS = ("resnet50", "mobilenetv2", "densenet121")
+BOARD = "zc706"
+#: tight per-model latency SLOs (s): the 3-way spatial split of zc706's
+#: 900 DSPs cannot serve all three, and the RR round wait breaks the pure
+#: temporal mode — the regime where mixing the modes pays.
+SLO_S = (0.120, 0.030, 0.130)
+WEIGHTS = (1.0, 2.0, 1.0)           # mobilenetv2 carries 2x the traffic
+ARMS = ("search", "temporal", "hybrid")
+FULL_BUDGET, FULL_POP = 6144, 512
+QUICK_BUDGET, QUICK_POP = 1536, 256
+
+
+def run(verbose: bool = True, quick: bool = False) -> dict:
+    budget = QUICK_BUDGET if quick else FULL_BUDGET
+    pop = QUICK_POP if quick else FULL_POP
+    nets = [get_cnn(n) for n in MODELS]
+    dev = get_board(BOARD)
+    mt = make_multi_tables(nets, weights=WEIGHTS, slo_s=SLO_S)
+
+    arms = {}
+    for arm in ARMS:
+        cfg = MultinetSearchConfig(pop_size=pop, seed=3, objective="slo",
+                                   slo_s=SLO_S, weights=WEIGHTS)
+        arms[arm] = joint_explore(nets, dev, budget, strategy=arm,
+                                  config=cfg)
+    fronts = {a: r.front_points() for a, r in arms.items()}
+    # oriented col 0 is -slo_attainment_dist: front-best attainment
+    best_slo = {a: float(-fronts[a][:, 0].min()) for a in ARMS}
+    allp = np.concatenate(list(fronts.values()))
+    ref = allp.max(0) + 0.05 * np.maximum(np.ptp(allp, 0), 1e-9)
+    hv = {a: hypervolume_2d(f, ref) for a, f in fronts.items()}
+
+    hyb = arms["hybrid"]
+    i = int(np.argmax(hyb.metrics["slo_attainment_dist"]))
+    best_deploy = {
+        "slo_attainment_dist": float(
+            hyb.metrics["slo_attainment_dist"][i]),
+        "assign": hyb.metrics["assign"][i][:len(MODELS)].tolist(),
+        "pes_split": hyb.metrics["pes_split"][i][:len(MODELS)].tolist(),
+        "time_share": hyb.metrics["time_share"][i][:len(MODELS)].tolist(),
+        "per_model_latency_ms": (
+            hyb.metrics["per_model_latency_s"][i][:len(MODELS)]
+            * 1e3).tolist(),
+    }
+    front_assign = hyb.metrics["assign"][hyb.front][:, :len(MODELS)]
+    n_shared = front_assign.sum(1)
+    checks = {
+        "hybrid_best_slo_ge_spatial":
+            best_slo["hybrid"] >= best_slo["search"] - 1e-9,
+        "hybrid_best_slo_ge_temporal":
+            best_slo["hybrid"] >= best_slo["temporal"] - 1e-9,
+    }
+    out = {
+        "benchmark": "SLO-driven hybrid deployments "
+                     f"({'+'.join(MODELS)} on {BOARD})",
+        "budget": budget, "pop_size": pop, "quick": bool(quick),
+        "models": list(MODELS), "board": BOARD,
+        "slo_s": list(SLO_S),
+        "normalized_weights": mt.normalized_weights.tolist(),
+        "objectives": list(arms["hybrid"].objectives),
+        "best_slo_attainment": best_slo,
+        "hypervolume": hv,
+        "seconds": {a: arms[a].seconds for a in ARMS},
+        "per_eval_us": {a: arms[a].per_eval_us for a in ARMS},
+        "fronts": {a: fronts[a].tolist() for a in ARMS},
+        "hybrid_front_shared_counts": n_shared.tolist(),
+        "hybrid_best_deployment": best_deploy,
+        "checks": checks,
+    }
+    if verbose:
+        rows = [[a, f"{best_slo[a]:.3f}", f"{hv[a]:.3f}",
+                 str(len(fronts[a])), f"{arms[a].seconds:.1f}s"]
+                for a in ARMS]
+        print(fmt_table(rows, ["arm", "best slo-att", "hv", "front",
+                               "time"]))
+        print("hybrid best deployment:", best_deploy)
+        print("checks:", checks)
+    save("multinet_hybrid", out)
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small budget (CI smoke)")
+    args = ap.parse_args(argv)
+    payload = run(quick=args.quick)
+    return 0 if all(payload["checks"].values()) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -151,6 +151,51 @@ def run(verbose: bool = True, quick: bool = False,
                   f"{msteady / (mb * 2) * 1e6:.1f}", str(mb),
                   f"{max(first_s - msteady, 0.0):.2f}", "-"])
 
+    # ---- hybrid joint-eval point: µs/deployment at M=3, mixed
+    # spatial/shared assignments, single compile across assignment changes
+    from repro.core.dse.encoding import sample_assign
+
+    hnets = [get_cnn(n) for n in ("resnet50", "mobilenetv2",
+                                  "densenet121")]
+    hmt = make_multi_tables(hnets)
+    hmd = stack_designs([sample_mixed(rng, len(n), mb) for n in hnets],
+                        DEFAULT_MAX_M)
+    hsh = [sample_shares(rng, mb, DEFAULT_MAX_M, 3) for _ in range(4)]
+    asg = sample_assign(rng, mb, DEFAULT_MAX_M, 3)
+    hmisses0 = _je._joint_hybrid_jit._cache_size()
+    t0 = time.time()
+    r = joint_evaluate(hmd, hmt, mdev, mode="hybrid", assign=asg,
+                       pes_shares=hsh[0], buf_shares=hsh[1],
+                       bw_shares=hsh[2], time_shares=hsh[3])
+    jax.block_until_ready(r["worst_latency_s"])
+    first_s = time.time() - t0
+    # assignment changes (incl. the pure extremes) must reuse the compile
+    asg2 = np.zeros_like(asg)
+    asg3 = np.zeros_like(asg)
+    asg3[:, :3] = 1.0
+    assigns = [asg, asg2, asg3]
+    t0 = time.time()
+    for a in assigns:
+        r = joint_evaluate(hmd, hmt, mdev, mode="hybrid", assign=a,
+                           pes_shares=hsh[0], buf_shares=hsh[1],
+                           bw_shares=hsh[2], time_shares=hsh[3])
+        jax.block_until_ready(r["worst_latency_s"])
+    hsteady = (time.time() - t0) / len(assigns)
+    hcompiles = _je._joint_hybrid_jit._cache_size() - hmisses0
+    points["multinet_hybrid_m3"] = {
+        "B": mb,
+        "max_m": DEFAULT_MAX_M,
+        "us_per_deployment": hsteady / mb * 1e6,
+        "us_per_model_eval": hsteady / (mb * 3) * 1e6,
+        "steady_s": hsteady,
+        "compile_s": max(first_s - hsteady, 0.0),
+        "compile_count": hcompiles,
+    }
+    table.append([f"hybrid M=3 B={mb}",
+                  f"{hsteady / mb * 1e6:.1f}",
+                  f"{hsteady / (mb * 3) * 1e6:.1f}", str(mb),
+                  f"{max(first_s - hsteady, 0.0):.2f}", "-"])
+
     payload = {
         "benchmark": "evaluate_batch hot path (xception x vcu110)",
         "backend": backend,
@@ -167,6 +212,7 @@ def run(verbose: bool = True, quick: bool = False,
                 points["4096"]["us_per_design"] < PRE_FUSION_B4096_US / 2
                 if "4096" in points else True),
             "multinet_single_compile": mcompiles == 1,
+            "hybrid_single_compile_across_assignments": hcompiles == 1,
         },
     }
     if verbose:

@@ -25,7 +25,8 @@ def main(argv=None) -> int:
     enable_persistent_compilation_cache()
 
     from . import (eval_speed, fig5_fig8_fronts, fig6_fig7_breakdown,
-                   fig9_fig10_dse, multinet_fronts, perf_gate,
+                   fig9_fig10_dse, multinet_fronts, multinet_hybrid,
+                   perf_gate,
                    roofline_report, tab1_arch_comparison, tab4_accuracy,
                    tab5_best_arch, tpu_model_accuracy)
 
@@ -38,6 +39,7 @@ def main(argv=None) -> int:
         ("fig9_fig10_dse", fig9_fig10_dse.run,
          {"n_sample": 10_000 if args.quick else 100_000}),
         ("multinet_fronts", multinet_fronts.run, {"quick": args.quick}),
+        ("multinet_hybrid", multinet_hybrid.run, {"quick": args.quick}),
         ("eval_speed", eval_speed.run, {}),
         ("perf_gate", perf_gate.run, {"quick": args.quick}),
         ("roofline_report", roofline_report.run, {}),

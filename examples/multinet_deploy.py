@@ -1,8 +1,8 @@
-"""Multi-tenant deployment walkthrough: co-schedule two CNNs on one FPGA.
+"""Multi-tenant deployment walkthrough: co-schedule CNNs on one FPGA.
 
-Shows the three co-execution options for serving ResNet-50 and MobileNetV2
-from a single zc706 and what partition-aware joint DSE buys over the
-obvious baselines:
+Part 1 shows the three co-execution options for serving ResNet-50 and
+MobileNetV2 from a single zc706 and what partition-aware joint DSE buys
+over the obvious baselines:
 
 1. equal split          — half the DSPs/BRAM/bandwidth each, designs
                           searched for that fixed split;
@@ -10,6 +10,11 @@ obvious baselines:
                           re-stream on every context switch);
 3. joint search         — budget split AND per-model CE arrangements
                           searched together.
+
+Part 2 adds a third model and tight per-model SLOs, and lets the
+SLO-driven search (``objective="slo"``) pick over the full hybrid space:
+each model either owns a dedicated slice or joins the time-multiplexed
+shared slice, and the front is driven by graded deadline attainment.
 
     PYTHONPATH=src python examples/multinet_deploy.py [--n 2048]
 """
@@ -69,3 +74,35 @@ eq = arms["equal_split"].front_points()
 print(f"\nequal split never beats {eq[:, 0].min() * 1e3:.1f} ms worst "
       f"latency; the searched split reaches "
       f"{pts[:, 0].min() * 1e3:.1f} ms at the same budget.")
+
+# ---- part 2: tight SLOs on a 3-model mix — the hybrid deployment space ---
+print("\n=== SLO-driven hybrid deployments (3-model mix) ===")
+names3 = ("resnet50", "mobilenetv2", "densenet121")
+nets3 = [get_cnn(n) for n in names3]
+slo_s = (0.120, 0.030, 0.130)        # per-model latency SLOs (s)
+weights = (1.0, 2.0, 1.0)            # mobilenetv2 carries 2x the traffic
+cfg = MultinetSearchConfig(pop_size=min(256, args.n), seed=0,
+                           objective="slo", slo_s=slo_s, weights=weights)
+slo_arms = {}
+for arm in ("search", "temporal", "hybrid"):
+    res = joint_explore(nets3, dev, args.n, strategy=arm, config=cfg)
+    slo_arms[arm] = res
+    best = res.metrics["slo_attainment_dist"].max()
+    label = {"search": "pure spatial", "temporal": "pure temporal",
+             "hybrid": "hybrid"}[arm]
+    print(f"{label:>14}: best SLO attainment {best:.2f} "
+          f"({res.n_evals} deployments, {res.seconds:.1f}s)")
+
+res = slo_arms["hybrid"]
+i = int(np.argmax(res.metrics["slo_attainment_dist"]))
+m = res.metrics
+print(f"\nbest hybrid deployment (attainment "
+      f"{m['slo_attainment_dist'][i]:.2f}):")
+for j, name in enumerate(names3):
+    shared = m["assign"][i][j] > 0.5
+    kind = "shared slice (RR)" if shared else "dedicated slice"
+    extra = f", {m['time_share'][i][j]:.0%} of its slice's rounds" \
+        if shared else ""
+    print(f"  {name}: {kind} — {m['pes_split'][i][j]:.0f} DSPs{extra}; "
+          f"lat {m['per_model_latency_s'][i][j] * 1e3:.1f} ms "
+          f"(SLO {slo_s[j] * 1e3:.0f} ms)")

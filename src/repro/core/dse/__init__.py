@@ -33,6 +33,7 @@ from .encoding import (
     decode_design,
     encode_specs,
     pad_deployments,
+    sample_assign,
     stack_designs,
     validate_batch,
 )
@@ -68,6 +69,7 @@ __all__ = [
     "pad_deployments",
     "pareto",
     "stack_designs",
+    "sample_assign",
     "sample_custom",
     "sample_custom_loop",
     "sample_mixed",

@@ -16,6 +16,17 @@ segment is pipelined iff ``seg_nce > 1``, and padding columns carry
 ``end == n_layers, nce == 1, pipe == False``.  ``validate_batch`` checks
 exactly this plus the NS/NC CE-count bounds, and ``decode_design`` ->
 ``encode_specs`` round-trips any canonical row bit-exactly.
+
+Multi-model deployments (``core.multinet``) extend the encoding along a
+model axis: :class:`MultiDesignBatch` stacks M per-model design planes
+into (B, M, NS) arrays, and a hybrid deployment adds one more gene — the
+**assignment** plane, a float (B, M) array where ``assign[b, m] > 0.5``
+places model m in deployment b's single time-multiplexed *shared slice*
+and anything else gives it a dedicated spatial slice.  ``sample_assign``
+draws random assignments; the traced evaluator canonicalizes them with a
+plain ``> 0.5`` threshold (and masks padded model columns), so the search
+mutates assignment genes as freely as resource shares without forking
+compiles.
 """
 from __future__ import annotations
 
@@ -44,14 +55,17 @@ class DesignBatch:
 
     @property
     def batch(self) -> int:
+        """Number of designs in the batch."""
         return self.seg_end.shape[0]
 
     @classmethod
     def from_numpy(cls, seg_end, seg_pipe, seg_nce, inter_pipe) -> "DesignBatch":
+        """Host arrays -> device DesignBatch with canonical dtypes."""
         return cls(jnp.asarray(seg_end, jnp.int32), jnp.asarray(seg_pipe, bool),
                    jnp.asarray(seg_nce, jnp.int32), jnp.asarray(inter_pipe, bool))
 
     def to_numpy(self) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """(seg_end, seg_pipe, seg_nce, inter_pipe) as host arrays."""
         return (np.asarray(self.seg_end), np.asarray(self.seg_pipe),
                 np.asarray(self.seg_nce), np.asarray(self.inter_pipe))
 
@@ -62,6 +76,7 @@ class DesignBatch:
 
 
 def concat_batches(batches: list[DesignBatch]) -> DesignBatch:
+    """Row-concatenate DesignBatches (all for the same n_layers)."""
     return DesignBatch(
         jnp.concatenate([b.seg_end for b in batches]),
         jnp.concatenate([b.seg_pipe for b in batches]),
@@ -89,10 +104,12 @@ class MultiDesignBatch:
 
     @property
     def batch(self) -> int:
+        """Number of deployment rows."""
         return self.seg_end.shape[0]
 
     @property
     def n_models(self) -> int:
+        """Padded model-axis length (max_m)."""
         return self.seg_end.shape[1]
 
     def model(self, m: int) -> DesignBatch:
@@ -101,10 +118,12 @@ class MultiDesignBatch:
                            self.seg_nce[:, m], self.inter_pipe[:, m])
 
     def take(self, idx) -> "MultiDesignBatch":
+        """Row subset (numpy/jnp fancy index)."""
         return MultiDesignBatch(self.seg_end[idx], self.seg_pipe[idx],
                                 self.seg_nce[idx], self.inter_pipe[idx])
 
     def to_numpy(self):
+        """(seg_end, seg_pipe, seg_nce, inter_pipe) as host arrays."""
         return (np.asarray(self.seg_end), np.asarray(self.seg_pipe),
                 np.asarray(self.seg_nce), np.asarray(self.inter_pipe))
 
@@ -130,6 +149,22 @@ def stack_designs(batches: list[DesignBatch],
                             stack("seg_nce"), stack("inter_pipe"))
 
 
+def sample_assign(rng: np.random.Generator, n: int, max_m: int,
+                  n_models: int | None = None,
+                  p_shared: float = 0.5) -> np.ndarray:
+    """(n, max_m) random hybrid-deployment assignments: each real model is
+    a shared-slice member with probability ``p_shared`` (1.0 on the gene ==
+    member, 0.0 == dedicated spatial slice); padded columns stay 0.
+
+    This is the assignment-gene twin of ``multinet.sample_shares`` — the
+    raw genome the traced hybrid evaluator consumes (see
+    ``multinet.partition.slice_masks`` for the canonicalization)."""
+    m = max_m if n_models is None else n_models
+    out = np.zeros((n, max_m), np.float32)
+    out[:, :m] = (rng.random((n, m)) < p_shared).astype(np.float32)
+    return out
+
+
 def pad_deployments(md: MultiDesignBatch, n: int) -> MultiDesignBatch:
     """Edge-pad a MultiDesignBatch to ``n`` rows (the model-axis analogue
     of ``batch_eval._pad_rows``; padded rows are evaluated and sliced off)."""
@@ -142,6 +177,8 @@ def pad_deployments(md: MultiDesignBatch, n: int) -> MultiDesignBatch:
 
 
 def encode_specs(specs: list[AcceleratorSpec], n_layers: int) -> DesignBatch:
+    """AcceleratorSpecs -> one canonical (B, NS) DesignBatch (the inverse
+    of :func:`decode_design`; round-trips bit-exactly)."""
     B = len(specs)
     seg_end = np.full((B, NS), n_layers, np.int32)
     seg_pipe = np.zeros((B, NS), bool)
@@ -183,6 +220,7 @@ def decode_design(batch: DesignBatch, i: int, n_layers: int) -> AcceleratorSpec:
 
 
 def decode_batch(batch: DesignBatch, n_layers: int) -> list[AcceleratorSpec]:
+    """Decode every row of a DesignBatch (see :func:`decode_design`)."""
     return [decode_design(batch, i, n_layers) for i in range(batch.batch)]
 
 

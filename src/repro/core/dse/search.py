@@ -49,7 +49,8 @@ from .samplers import sample_custom, sample_mixed
 # both the single-model and the joint co-scheduling searches)
 ORIENT_MAX = frozenset({"throughput_ips", "utilization",
                         "agg_throughput_ips", "min_model_throughput_ips",
-                        "fairness", "slo_attainment"})
+                        "fairness", "slo_attainment",
+                        "slo_attainment_dist"})
 
 
 def orient(metrics: dict[str, np.ndarray],

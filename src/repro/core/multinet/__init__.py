@@ -1,24 +1,30 @@
-"""Multi-CNN co-scheduling: joint cost model + partition-aware DSE for
-multi-tenant FPGA deployments.
+"""Multi-CNN co-scheduling: joint cost model + deployment-aware DSE for
+multi-tenant FPGA boards.
 
 Three layers over the single-model MCCM stack:
 
 * :mod:`~repro.core.multinet.partition`  — spatial DSP/BRAM/bandwidth
-  splits (traced validity/repair) and temporal round-robin time shares;
+  splits (traced validity/repair), temporal round-robin time shares, and
+  the hybrid slice structure (dedicated spatial slices + one
+  time-multiplexed shared slice, per-row);
 * :mod:`~repro.core.multinet.joint_eval` — the (M, ...) NetTables
-  megabatch and the one-compile joint evaluator producing system metrics
-  (aggregate throughput, worst-model latency, fairness, SLO attainment,
-  off-chip traffic);
+  megabatch and the one-compile joint evaluator for all three
+  co-execution modes, producing system metrics (aggregate throughput,
+  worst-model latency, fairness, SLO attainment — binary and graded under
+  per-model deadline distributions — off-chip traffic);
 * :mod:`~repro.core.multinet.search` / ``driver`` — joint DSE over
-  (per-model budget split × per-model CE arrangement), Pareto over system
-  metrics, with equal-split and time-multiplexed baseline arms.
+  (per-model budget split × per-model CE arrangement × spatial/shared
+  assignment), Pareto over system metrics, with equal-split,
+  time-multiplexed and hybrid arms plus the SLO-driven objective.
 """
 from .driver import JointDSEResult, joint_explore
 from .joint_eval import (
+    DEADLINE_SCALES,
     JOINT_TILE,
     MultiNetTables,
     joint_evaluate,
     make_multi_tables,
+    slo_attainment_dist,
 )
 from .partition import (
     BUF_GRANULE,
@@ -26,25 +32,38 @@ from .partition import (
     DEFAULT_MAX_M,
     PartitionBatch,
     equal_shares,
+    gather_slices,
     partition_devices,
     repair_partition_jax,
     repair_time_shares_jax,
     sample_shares,
+    slice_masks,
+    slice_shares,
     validate_partition,
 )
-from .search import MultinetSearchConfig, MultinetSearchResult, joint_search
+from .search import (
+    JOINT_OBJECTIVES,
+    SLO_OBJECTIVES,
+    MultinetSearchConfig,
+    MultinetSearchResult,
+    joint_search,
+)
 
 __all__ = [
     "BUF_GRANULE",
+    "DEADLINE_SCALES",
     "DEFAULT_FLOORS",
     "DEFAULT_MAX_M",
+    "JOINT_OBJECTIVES",
     "JOINT_TILE",
     "JointDSEResult",
     "MultiNetTables",
     "MultinetSearchConfig",
     "MultinetSearchResult",
     "PartitionBatch",
+    "SLO_OBJECTIVES",
     "equal_shares",
+    "gather_slices",
     "joint_evaluate",
     "joint_explore",
     "joint_search",
@@ -53,5 +72,8 @@ __all__ = [
     "repair_partition_jax",
     "repair_time_shares_jax",
     "sample_shares",
+    "slice_masks",
+    "slice_shares",
+    "slo_attainment_dist",
     "validate_partition",
 ]

@@ -1,14 +1,21 @@
 """End-to-end multinet drivers: one ``joint_explore()`` call per arm.
 
-Four strategies at one evaluation budget (deployments evaluated):
+Five strategies at one evaluation budget (deployments evaluated):
 
 * ``"search"``      — joint DSE: per-model designs AND the spatial budget
-                      split evolve together (the headline arm);
+                      split evolve together (the headline spatial arm);
 * ``"equal_split"`` — the same search with the split frozen to 1/M — the
   ablation isolating what partition-awareness buys;
 * ``"temporal"``    — time-multiplexed baseline: full-board designs and
   round-robin time shares evolve, no spatial split;
+* ``"hybrid"``      — the general deployment space: designs, splits, time
+  shares AND the per-model spatial/shared assignment evolve together
+  (contains both pure modes; its initial population anchors them);
 * ``"random"``      — blind sampling of designs + Dirichlet splits.
+
+Every guided arm accepts ``objective="slo"`` to drive the front by graded
+SLO attainment under per-model deadline distributions instead of the
+default worst-latency/max-min-throughput trade-off.
 """
 from __future__ import annotations
 
@@ -30,6 +37,11 @@ from .search import (JOINT_OBJECTIVES, MultinetSearchConfig,
 
 @dataclass
 class JointDSEResult:
+    """One :func:`joint_explore` arm's outcome: every evaluated deployment
+    (designs + raw gene values in ``shares``), the archived system
+    metrics, and the Pareto ``front`` indices over the arm's oriented
+    ``objectives``."""
+
     designs: MultiDesignBatch
     metrics: dict[str, np.ndarray]
     seconds: float
@@ -49,12 +61,15 @@ class JointDSEResult:
         return orient(self.metrics, self.objectives)[self.front]
 
     def hypervolume(self, ref: np.ndarray) -> float:
+        """Dominated 2-D hypervolume of the front w.r.t. ``ref`` (a point
+        weakly dominated by every front point)."""
         return hypervolume_2d(self.front_points(), ref)
 
 
 def joint_explore(nets, dev, n: int = 4096, *, strategy: str = "search",
                   seed: int = 0, chunk: int = 512,
                   objectives: tuple[str, ...] = JOINT_OBJECTIVES,
+                  objective: str = "serving",
                   config: MultinetSearchConfig | None = None,
                   weights=None, slo_s=None) -> JointDSEResult:
     """Evaluate ``n`` deployments of ``nets`` on ``dev`` and return the
@@ -62,18 +77,21 @@ def joint_explore(nets, dev, n: int = 4096, *, strategy: str = "search",
 
     A ``config``, when given, is authoritative for the guided arms (only
     the budget comes from ``n``; strategy still selects mode/freeze).
+    ``objective="slo"`` (when ``config`` is None) swaps the front driver
+    to graded deadline attainment — see :class:`MultinetSearchConfig`.
     """
     if n < 1:
         raise ValueError(f"n must be >= 1, got {n}")
     m = len(nets)
-    if strategy in ("search", "equal_split", "temporal"):
+    if strategy in ("search", "equal_split", "temporal", "hybrid"):
         base = config.__dict__ if config is not None else {}
         over = dict(budget=n,
-                    mode="temporal" if strategy == "temporal" else "spatial",
+                    mode={"temporal": "temporal",
+                          "hybrid": "hybrid"}.get(strategy, "spatial"),
                     freeze_partition=strategy == "equal_split")
         if config is None:
             over.update(seed=seed, objectives=tuple(objectives),
-                        weights=weights, slo_s=slo_s)
+                        objective=objective, weights=weights, slo_s=slo_s)
         cfg = MultinetSearchConfig(**{**base, **over})
         res: MultinetSearchResult = joint_search(nets, dev, cfg)
         return JointDSEResult(

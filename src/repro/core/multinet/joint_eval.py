@@ -1,9 +1,10 @@
 """Joint cost model for M CNNs sharing one board — vectorized, one compile.
 
 A *deployment* row pairs M per-model multiple-CE designs with a resource
-split (spatial mode) or round-robin time shares (temporal mode).  The
-existing padded ``NetTables`` pytrees are stacked into an (M, ...)
-megabatch (``MultiNetTables``) and the single-model hot path
+split (spatial mode), round-robin time shares (temporal mode), or a
+spatial/shared assignment plus both (hybrid mode).  The existing padded
+``NetTables`` pytrees are stacked into an (M, ...) megabatch
+(``MultiNetTables``) and the single-model hot path
 (``batch_eval.eval_design_block``) is reused under ``vmap`` — once over
 the model axis with per-(row, model) partitioned devices, once over the
 rows of each ``lax.map`` design tile.  Because the model axis is padded to
@@ -11,19 +12,36 @@ rows of each ``lax.map`` design tile.  Because the model axis is padded to
 the batch to a tile multiple, ONE jit compile serves any model set × board
 × split — the single-model cache-miss-counter guarantee, extended.
 
+The three co-execution modes of :func:`joint_evaluate`:
+
+* ``"spatial"``  — M disjoint board slices, one accelerator each;
+* ``"temporal"`` — one full-board accelerator per model, weighted
+  round-robin with per-round weight-reload (+ ``reconfig_s``) charges;
+* ``"hybrid"``   — a per-row (B, M) *assignment* gives each model either a
+  dedicated spatial slice or membership in the row's single
+  time-multiplexed shared slice (weighted RR within the slice, weight
+  reload charged against the slice's bandwidth).  An all-spatial
+  assignment is bit-identical to ``"spatial"``, an all-shared assignment
+  to ``"temporal"``, and assignments are traced data — they never fork
+  compiles.
+
 System-level outputs per deployment row:
 
 * ``agg_throughput_ips``   — summed model throughputs;
-* ``worst_latency_s``      — max per-model latency (temporal: including
-                             the round-robin wait);
+* ``worst_latency_s``      — max per-model latency (temporal/hybrid:
+                             including the round-robin wait);
 * ``fairness``             — Jain's index over request-weight-normalized
                              throughputs;
 * ``slo_attainment``       — fraction of models meeting their latency SLO;
 * ``traffic_bytes_per_s``  — aggregate off-chip traffic at steady state;
 
 plus the per-model metric planes (``per_model_*``, each (B, M)) and the
-repaired split actually evaluated (``pes_split``/``buf_split``/
-``bw_split`` or ``time_share``).
+repaired deployment actually evaluated (``pes_split``/``buf_split``/
+``bw_split``, ``time_share``/``round_period_s``, and for hybrid the
+canonical ``assign`` plane).  :func:`slo_attainment_dist` refines the
+binary per-model SLO check into attainment under a per-model deadline
+*distribution* (the ``slo_s`` grid scaled by ``DEADLINE_SCALES``) — the
+objective the SLO-driven joint DSE climbs.
 """
 from __future__ import annotations
 
@@ -43,8 +61,9 @@ from ..batch_eval import (DeviceTables, DeviceSpec, NetTables,
 from ..dse.encoding import DesignBatch, MultiDesignBatch, pad_deployments
 from ..workload import Network
 from .partition import (DEFAULT_FLOORS, DEFAULT_MAX_M, PartitionBatch,
-                        partition_devices, repair_partition_jax,
-                        repair_time_shares_jax)
+                        gather_slices, partition_devices,
+                        repair_partition_jax, repair_time_shares_jax,
+                        slice_masks, slice_shares)
 
 NEG = -1.0e30
 
@@ -75,15 +94,37 @@ class MultiNetTables:
 
     @property
     def max_m(self) -> int:
+        """Padded model-axis length (the compile-shape constant)."""
         return self.model_valid.shape[0]
 
     @property
     def n_models(self) -> int:
+        """Number of real (unpadded) models (host-side use only)."""
         return int(np.asarray(self.model_valid).sum())
+
+    @property
+    def normalized_weights(self) -> np.ndarray:
+        """The normalized per-model request weights actually used by the
+        system metrics, as a host (n_models,) array — what benchmarks
+        should report alongside fairness/SLO numbers."""
+        return np.asarray(self.weights)[:self.n_models]
 
     def n_layers(self, m: int) -> int:
         """Concrete layer count of model m (host-side use only)."""
         return int(self.tables.L[m])
+
+
+def _per_model_vector(x, m: int, name: str) -> np.ndarray:
+    """Validate + broadcast a per-model parameter: a scalar broadcasts to
+    all ``m`` models, a length-m sequence passes through; anything else is
+    a shape error named after the parameter."""
+    a = np.asarray(x, np.float64)
+    if a.ndim == 0:
+        a = np.full(m, float(a), np.float64)
+    if a.shape != (m,):
+        raise ValueError(f"{name} must be a scalar or have one entry per "
+                         f"model (got shape {a.shape} for {m} models)")
+    return a
 
 
 def make_multi_tables(nets: list[Network], *, weights=None, slo_s=None,
@@ -95,6 +136,15 @@ def make_multi_tables(nets: list[Network], *, weights=None, slo_s=None,
     200-layer net bumps every model in the deployment to the next bucket
     rather than silently truncating or forking compiles).  The model axis
     pads by repeating the LAST net, matching ``dse.stack_designs``.
+
+    ``weights`` (per-model request rates) and ``slo_s`` (per-model latency
+    SLOs in seconds; ``inf`` = none) broadcast consistently: a scalar
+    applies to every model, a length-``len(nets)`` sequence is taken
+    verbatim.  Weights must be finite, non-negative and not all zero
+    (each condition gets its own error); they are normalized to sum to 1
+    and the normalized values are exposed as
+    :attr:`MultiNetTables.normalized_weights`.  SLOs must be positive
+    (``inf`` allowed, NaN rejected).
     """
     if not nets:
         raise ValueError("make_multi_tables needs at least one network")
@@ -111,16 +161,22 @@ def make_multi_tables(nets: list[Network], *, weights=None, slo_s=None,
     valid = np.zeros(max_m, np.float32)
     valid[:m] = 1.0
     w = np.ones(m, np.float64) if weights is None \
-        else np.asarray(weights, np.float64)
-    if len(w) != m or (w <= 0).any():
-        raise ValueError("weights must be positive, one per model")
+        else _per_model_vector(weights, m, "weights")
+    if not np.isfinite(w).all():
+        raise ValueError(f"weights must be finite, got {w.tolist()}")
+    if (w < 0).any():
+        raise ValueError(f"weights must be non-negative, got {w.tolist()}")
+    if w.sum() <= 0:
+        raise ValueError("weights must not be all zero — at least one "
+                         "model needs a positive request rate")
     wfull = np.zeros(max_m, np.float32)
     wfull[:m] = (w / w.sum()).astype(np.float32)
     sfull = np.full(max_m, np.inf, np.float32)
     if slo_s is not None:
-        s = np.asarray(slo_s, np.float64)
-        if len(s) != m:
-            raise ValueError("slo_s must have one entry per model")
+        s = _per_model_vector(slo_s, m, "slo_s")
+        if np.isnan(s).any() or (s <= 0).any():
+            raise ValueError(f"slo_s entries must be positive seconds "
+                             f"(inf = no SLO), got {s.tolist()}")
         sfull[:m] = s
     return MultiNetTables(tables=stacked, model_valid=jnp.asarray(valid),
                           weights=jnp.asarray(wfull),
@@ -143,12 +199,16 @@ def _system_metrics(per: dict[str, jnp.ndarray], mt: MultiNetTables
     agg_tp = (tp * valid).sum(-1)
     worst_lat = jnp.max(jnp.where(vmask, lat, NEG), axis=-1)
     # request-weight-normalized service rates: Jain's index as the reported
-    # fairness, the max-min rate as the (non-gameable) search objective
-    x = jnp.where(vmask, tp / jnp.maximum(mt.weights[None, :], 1e-30), 0.0)
+    # fairness, the max-min rate as the (non-gameable) search objective.
+    # Zero-weight (deployed but trafficless) models are excluded — they
+    # would otherwise overflow the normalized rate.
+    wpos = vmask & (mt.weights[None, :] > 0)
+    nw = jnp.maximum(wpos.sum(-1).astype(jnp.float32), 1.0)
+    x = jnp.where(wpos, tp / jnp.maximum(mt.weights[None, :], 1e-30), 0.0)
     fairness = jnp.square(x.sum(-1)) / jnp.maximum(
-        nv * jnp.square(x).sum(-1), 1e-30)
+        nw * jnp.square(x).sum(-1), 1e-30)
     # normalized so equal weights reduce to the plain min model throughput
-    min_tp = jnp.min(jnp.where(vmask, x, jnp.inf), axis=-1) / nv
+    min_tp = jnp.min(jnp.where(wpos, x, jnp.inf), axis=-1) / nw
     slo_ok = jnp.where(vmask, (lat <= mt.slo_s[None, :]).astype(jnp.float32),
                        0.0)
     slo_att = slo_ok.sum(-1) / nv
@@ -171,28 +231,19 @@ def _package(per, mt):
 
 
 # --------------------------------------------------------------------------
-# spatial mode: per-(row, model) partitioned devices
+# shared core: evaluate deployments on per-(row, model) devices
 # --------------------------------------------------------------------------
-def joint_spatial_traced(md: MultiDesignBatch, mt: MultiNetTables,
-                         dev: DeviceTables, pes_shares, buf_shares,
-                         bw_shares, *, backend: str = "ref",
-                         tile: int = JOINT_TILE, fm_tile_rows: int = 2,
-                         pes_hint_static: int | None = None,
-                         design_tile: int = 16,
-                         floors=DEFAULT_FLOORS) -> dict[str, jnp.ndarray]:
-    """The traced spatial joint path (call under jit).
-
-    Raw shares are repaired in-trace (every deployment row becomes a valid
-    split), the board is sliced into per-(row, model) DeviceTables, and
-    ``eval_design_block`` runs under vmap(model) ∘ vmap(row) inside
-    ``lax.map`` deployment tiles.  ``pes_hint_static`` uses the FULL
-    board's bucket — partition slices never exceed it, so pair pruning
-    stays sound for every split.
-    """
+def _eval_on_devices(md: MultiDesignBatch, mt: MultiNetTables,
+                     devs: DeviceTables, *, backend: str, tile: int,
+                     fm_tile_rows: int, pes_hint_static: int | None,
+                     design_tile: int) -> dict[str, jnp.ndarray]:
+    """The lax.map(vmap(row) ∘ vmap(model)) evaluation core shared by the
+    spatial and hybrid modes: every (row, model) design runs on its own
+    ``devs`` slice (leaves (B, M)); returns the per-model metric planes,
+    each (B, M).  ``pes_hint_static`` uses the FULL board's bucket —
+    partition slices never exceed it, so pair pruning stays sound for
+    every split."""
     B, max_m = md.batch, md.n_models
-    part = repair_partition_jax(pes_shares, buf_shares, bw_shares, dev,
-                                mt.model_valid, floors=floors)
-    devs = partition_devices(dev, part, mt.model_valid)   # leaves (B, M)
 
     pairs = pair_tables(mt.tables.candidates, pes_hint_static)
     fc_pair, coh_pair = jax.vmap(
@@ -228,7 +279,34 @@ def joint_spatial_traced(md: MultiDesignBatch, mt: MultiNetTables,
         tuple(shp(l) for l in (pad_dev.pes, pad_dev.on_chip_bytes,
                                pad_dev.bpc, pad_dev.bps, pad_dev.clock_hz,
                                pad_dev.wordbytes))))
-    per = {k: v.reshape(nt * tile, max_m)[:B] for k, v in out.items()}
+    return {k: v.reshape(nt * tile, max_m)[:B] for k, v in out.items()}
+
+
+# --------------------------------------------------------------------------
+# spatial mode: per-(row, model) partitioned devices
+# --------------------------------------------------------------------------
+def joint_spatial_traced(md: MultiDesignBatch, mt: MultiNetTables,
+                         dev: DeviceTables, pes_shares, buf_shares,
+                         bw_shares, *, backend: str = "ref",
+                         tile: int = JOINT_TILE, fm_tile_rows: int = 2,
+                         pes_hint_static: int | None = None,
+                         design_tile: int = 16,
+                         floors=DEFAULT_FLOORS) -> dict[str, jnp.ndarray]:
+    """The traced spatial joint path (call under jit).
+
+    Raw shares are repaired in-trace (every deployment row becomes a valid
+    split), the board is sliced into per-(row, model) DeviceTables, and
+    ``eval_design_block`` runs under vmap(model) ∘ vmap(row) inside
+    ``lax.map`` deployment tiles (see :func:`_eval_on_devices`).
+    """
+    B = md.batch
+    part = repair_partition_jax(pes_shares, buf_shares, bw_shares, dev,
+                                mt.model_valid, floors=floors)
+    devs = partition_devices(dev, part, mt.model_valid)   # leaves (B, M)
+    per = _eval_on_devices(md, mt, devs, backend=backend, tile=tile,
+                           fm_tile_rows=fm_tile_rows,
+                           pes_hint_static=pes_hint_static,
+                           design_tile=design_tile)
     res = _package(per, mt)
     res["pes_split"] = part.pes[:B]
     res["buf_split"] = part.buf[:B]
@@ -291,6 +369,78 @@ def joint_temporal_traced(md: MultiDesignBatch, mt: MultiNetTables,
 
 
 # --------------------------------------------------------------------------
+# hybrid mode: dedicated spatial slices + one time-multiplexed shared slice
+# --------------------------------------------------------------------------
+def joint_hybrid_traced(md: MultiDesignBatch, mt: MultiNetTables,
+                        dev: DeviceTables, assign, pes_shares, buf_shares,
+                        bw_shares, time_shares, *, backend: str = "ref",
+                        tile: int = JOINT_TILE, fm_tile_rows: int = 2,
+                        pes_hint_static: int | None = None,
+                        design_tile: int = 16, floors=DEFAULT_FLOORS,
+                        reconfig_s: float = 0.0) -> dict[str, jnp.ndarray]:
+    """Hybrid spatial+temporal deployments (call under jit).
+
+    ``assign`` (B, M) marks each model as either a dedicated spatial slice
+    owner (<= 0.5) or a member of the row's single time-multiplexed shared
+    slice (> 0.5).  The board is split over *slices* (dedicated models +
+    the shared slice, whose share pools its members' raw shares); every
+    model's design is then evaluated on its slice exactly as in the
+    spatial mode, and shared members are weighted-round-robin adjusted
+    within their slice: per round the incoming model's weights re-stream
+    over the slice's bandwidth (``sw_m = weight_bytes_m / slice_bps +
+    reconfig_s``), the shortest feasible round is ``T = max_members((lat_m
+    + sw_m) / w_m)``, member m sustains ``w_m·tp_m − sw_m·tp_m/T`` and
+    responds in ``lat_m + sw_m + (1 − w_m)·T`` — the temporal model's
+    arithmetic, applied per-slice.
+
+    Reductions (asserted bit-exact in ``tests/test_multinet.py``): an
+    all-spatial assignment equals ``joint_spatial_traced`` on the same
+    shares; an all-shared assignment equals ``joint_temporal_traced`` on
+    the same time shares (the lone slice takes the board verbatim).
+    The assignment is traced data: changing it never forks compiles.
+    """
+    B = md.batch
+    shared, slice_valid, slice_col = slice_masks(assign, mt.model_valid)
+    part = repair_partition_jax(
+        slice_shares(pes_shares, shared, slice_valid),
+        slice_shares(buf_shares, shared, slice_valid),
+        slice_shares(bw_shares, shared, slice_valid),
+        dev, slice_valid, floors=floors)
+    mpart = gather_slices(part, slice_col)                # per-model view
+    devs = partition_devices(dev, mpart, mt.model_valid)  # leaves (B, M)
+    per = _eval_on_devices(md, mt, devs, backend=backend, tile=tile,
+                           fm_tile_rows=fm_tile_rows,
+                           pes_hint_static=pes_hint_static,
+                           design_tile=design_tile)
+
+    # weighted round-robin within the shared slice (no-op for dedicated
+    # models: their lanes keep the raw metrics bit for bit)
+    tsh = repair_time_shares_jax(time_shares, shared, floor=floors[2])
+    safe_w = jnp.maximum(tsh, 1e-30)
+    lat_full = per["latency_s"]
+    w_bytes = (mt.tables.W * mt.tables.valid).sum(-1) * dev.wordbytes  # (M,)
+    sw = w_bytes[None, :] / devs.bps + reconfig_s         # (B, M)
+    T = jnp.max(jnp.where(shared, (lat_full + sw) / safe_w, NEG),
+                axis=-1)                                  # (B,)
+    tp_rr = per["throughput_ips"] * jnp.maximum(
+        tsh - sw / T[:, None], 0.0)
+    lat_rr = lat_full + sw + (1.0 - tsh) * T[:, None]
+    per["throughput_ips"] = jnp.where(shared, tp_rr, per["throughput_ips"])
+    per["latency_s"] = jnp.where(shared, lat_rr, lat_full)
+
+    res = _package(per, mt)
+    valid_f = jnp.broadcast_to((mt.model_valid > 0)[None, :],
+                               shared.shape).astype(jnp.float32)
+    res["pes_split"] = mpart.pes[:B]
+    res["buf_split"] = mpart.buf[:B]
+    res["bw_split"] = mpart.bw[:B]
+    res["time_share"] = jnp.where(shared, tsh, valid_f)
+    res["round_period_s"] = jnp.where(shared.any(-1), T, 0.0)
+    res["assign"] = shared.astype(jnp.float32)
+    return res
+
+
+# --------------------------------------------------------------------------
 # jitted public entry points
 # --------------------------------------------------------------------------
 @partial(jax.jit, static_argnames=("backend", "tile", "fm_tile_rows",
@@ -319,10 +469,25 @@ def _joint_temporal_jit(md, mt, dev, time_shares, *, backend, tile,
         reconfig_s=reconfig_s)
 
 
+@partial(jax.jit, static_argnames=("backend", "tile", "fm_tile_rows",
+                                   "pes_hint_static", "design_tile",
+                                   "floors", "reconfig_s"))
+def _joint_hybrid_jit(md, mt, dev, assign, pes_shares, buf_shares,
+                      bw_shares, time_shares, *, backend, tile,
+                      fm_tile_rows, pes_hint_static, design_tile, floors,
+                      reconfig_s):
+    return joint_hybrid_traced(
+        md, mt, dev, assign, pes_shares, buf_shares, bw_shares,
+        time_shares, backend=backend, tile=tile, fm_tile_rows=fm_tile_rows,
+        pes_hint_static=pes_hint_static, design_tile=design_tile,
+        floors=floors, reconfig_s=reconfig_s)
+
+
 def joint_evaluate(md: MultiDesignBatch, mt: MultiNetTables,
                    dev: DeviceSpec | DeviceTables, *, mode: str = "spatial",
                    pes_shares=None, buf_shares=None, bw_shares=None,
-                   time_shares=None, backend: str | None = None,
+                   time_shares=None, assign=None,
+                   backend: str | None = None,
                    tile: int = JOINT_TILE, fm_tile_rows: int = 2,
                    design_tile: int = 16, floors=DEFAULT_FLOORS,
                    reconfig_s: float = 0.0) -> dict[str, jnp.ndarray]:
@@ -330,8 +495,10 @@ def joint_evaluate(md: MultiDesignBatch, mt: MultiNetTables,
 
     ``mode="spatial"`` consumes raw (B, M) resource shares (repaired
     in-trace; defaults to an equal split), ``mode="temporal"`` raw
-    round-robin time shares.  One compiled program per mode serves every
-    model set (padded to ``DEFAULT_MAX_M``), board and split; only the
+    round-robin time shares, and ``mode="hybrid"`` an (B, M) ``assign``
+    plane (> 0.5 = shared-slice member; defaults to all-spatial) plus both
+    share families.  One compiled program per mode serves every model set
+    (padded to ``DEFAULT_MAX_M``), board, split and assignment; only the
     batch shape and static knobs key the jit cache.
     """
     backend = resolve_backend(backend)
@@ -360,4 +527,61 @@ def joint_evaluate(md: MultiDesignBatch, mt: MultiNetTables,
             fm_tile_rows=fm_tile_rows, pes_hint_static=hint,
             design_tile=design_tile, share_floor=float(floors[2]),
             reconfig_s=float(reconfig_s))
-    raise ValueError(f"unknown mode {mode!r}; known: spatial, temporal")
+    if mode == "hybrid":
+        assign = jnp.zeros((B, max_m), jnp.float32) if assign is None \
+            else jnp.asarray(assign)
+        pes_shares = ones if pes_shares is None else jnp.asarray(pes_shares)
+        buf_shares = ones if buf_shares is None else jnp.asarray(buf_shares)
+        bw_shares = ones if bw_shares is None else jnp.asarray(bw_shares)
+        time_shares = ones if time_shares is None \
+            else jnp.asarray(time_shares)
+        return _joint_hybrid_jit(
+            md, mt, devt, assign, pes_shares, buf_shares, bw_shares,
+            time_shares, backend=backend, tile=tile,
+            fm_tile_rows=fm_tile_rows, pes_hint_static=hint,
+            design_tile=design_tile, floors=tuple(floors),
+            reconfig_s=float(reconfig_s))
+    raise ValueError(f"unknown mode {mode!r}; known: spatial, temporal, "
+                     f"hybrid")
+
+
+# --------------------------------------------------------------------------
+# SLO attainment under per-model deadline distributions
+# --------------------------------------------------------------------------
+#: default deadline grid: each model's ``slo_s`` is the central deadline of
+#: a distribution of request deadlines sampled at these scale factors
+#: (f-CNNx-style per-model performance constraints, graded rather than
+#: binary so the search objective has slope near the SLO boundary).
+DEADLINE_SCALES = (0.6, 0.8, 1.0, 1.25, 1.6)
+
+
+def slo_attainment_dist(per_model_latency_s, mt: MultiNetTables, *,
+                        scales=DEADLINE_SCALES) -> np.ndarray:
+    """Host-side graded SLO attainment -> (B,) in [0, 1].
+
+    Each model's deadline is sampled from its ``slo_s`` scaled by the
+    ``scales`` grid (a per-model deadline distribution rather than a
+    single hard SLO); a deployment's attainment is the request-weighted
+    fraction of sampled deadlines its per-model latencies meet:
+
+    ``sum_m w_m * mean_s 1[lat_m <= scale_s * slo_m]``
+
+    with ``w`` the normalized request weights.  Models with ``slo_s=inf``
+    always attain; latencies come from any ``joint_evaluate`` output's
+    ``per_model_latency_s`` plane, so the metric composes with every
+    co-execution mode without touching the traced path (no recompiles).
+    """
+    lat = np.asarray(per_model_latency_s, np.float64)     # (B, M)
+    M = lat.shape[1]                    # full (B, max_m) planes or any
+    if M < mt.n_models:                 # prefix covering the real models
+        raise ValueError(f"latency plane covers {M} models; tables have "
+                         f"{mt.n_models}")
+    slo = np.asarray(mt.slo_s, np.float64)[:M]            # (M,)
+    w = (np.asarray(mt.weights, np.float64)
+         * np.asarray(mt.model_valid, np.float64))[:M]
+    wsum = w.sum()
+    w = w / wsum if wsum > 0 else w
+    sc = np.asarray(scales, np.float64)
+    deadlines = slo[None, :, None] * sc[None, None, :]    # (1, M, S)
+    met = lat[:, :, None] <= deadlines                    # (B, M, S)
+    return (met.mean(-1) * w[None, :]).sum(-1)

@@ -1,4 +1,4 @@
-"""Resource partitioning for multi-CNN co-scheduling — the two co-execution
+"""Resource partitioning for multi-CNN co-scheduling — the co-execution
 modes of a shared FPGA (Shen et al.'s resource-partitioning design space,
 arXiv:1607.00064, made analytic):
 
@@ -11,9 +11,19 @@ arXiv:1607.00064, made analytic):
 * **temporal** — one full-board accelerator per model, time-multiplexed by
   weighted round-robin; ``repair_time_shares_jax`` normalizes the slice
   weights the same way.
+* **hybrid** — the general deployment: each model either owns a dedicated
+  spatial slice or is a member of the row's single time-multiplexed
+  *shared slice* (partial reconfiguration within one region).  The
+  per-row (B, M) assignment is folded into slice-level masks and shares by
+  ``slice_masks`` / ``slice_shares``; the shared slice is represented by
+  its first member column (the *leader*), the spatial split repair runs
+  over slice columns, and ``gather_slices`` maps every model back to its
+  slice's resources.  An all-spatial assignment reduces bit-identically to
+  the spatial mode, an all-shared assignment to the temporal mode (the
+  single remaining slice takes the board verbatim).
 
-Host-side twins (`sample_shares`, `equal_shares`, `validate_partition`)
-feed the search and the property tests.
+Host-side twins (`sample_shares`, `equal_shares`, `validate_partition`,
+`dse.encoding.sample_assign`) feed the search and the property tests.
 """
 from __future__ import annotations
 
@@ -53,16 +63,20 @@ class PartitionBatch:
 
     @property
     def batch(self) -> int:
+        """Number of deployment rows."""
         return self.pes.shape[0]
 
     @property
     def n_models(self) -> int:
+        """Padded model-axis length of the split arrays."""
         return self.pes.shape[1]
 
     def take(self, idx) -> "PartitionBatch":
+        """Row subset (numpy/jnp fancy index)."""
         return PartitionBatch(self.pes[idx], self.buf[idx], self.bw[idx])
 
     def to_numpy(self):
+        """(pes, buf, bw) as host arrays."""
         return (np.asarray(self.pes), np.asarray(self.buf),
                 np.asarray(self.bw))
 
@@ -97,23 +111,36 @@ def _proportional_split(shares, total, valid, floor_frac):
     return jnp.where(single, jnp.broadcast_to(total, out.shape), out)
 
 
+def _as_mask(model_valid, shape):
+    """(M,) model validity or an explicit (B, M) per-row mask -> (B, M)
+    bool.  The 1-D form broadcasts one validity row over the batch (the
+    spatial/temporal modes); the 2-D form carries per-row slice structure
+    (the hybrid mode)."""
+    mv = jnp.asarray(model_valid)
+    if mv.ndim == 2:
+        return mv if mv.dtype == jnp.bool_ else mv > 0
+    return jnp.broadcast_to((mv > 0)[None, :], shape)
+
+
 def repair_partition_jax(pes_shares, buf_shares, bw_shares,
                          dev: DeviceTables, model_valid,
                          floors=DEFAULT_FLOORS) -> PartitionBatch:
     """Traced spatial-split repair: arbitrary positive (B, M) shares ->
     a valid :class:`PartitionBatch` for board ``dev``.
 
-    Guarantees, per row (over valid models):
+    Guarantees, per row (over valid columns):
     * ``pes`` are integers summing exactly to ``dev.pes``;
     * ``buf`` are 1-KiB multiples summing exactly to the board's BRAM
-      rounded down to the granule (single-model rows take the full budget);
+      rounded down to the granule (single-column rows take the full budget);
     * ``bw`` fractions sum to 1;
-    * every valid model receives at least its ``floors`` fraction (clamped
+    * every valid column receives at least its ``floors`` fraction (clamped
       to an equal split when M * floor > 1).
 
-    ``floors`` is a static (pes, buf, bw) fraction triple.
+    ``model_valid`` is the (M,) model mask or, for hybrid deployments, a
+    per-row (B, M) *slice* mask (see :func:`slice_masks`).  ``floors`` is a
+    static (pes, buf, bw) fraction triple.
     """
-    valid = jnp.broadcast_to((model_valid > 0)[None, :], pes_shares.shape)
+    valid = _as_mask(model_valid, pes_shares.shape)
     valid_f = valid.astype(jnp.float32)
     pes = _proportional_split(pes_shares, dev.pes, valid, floors[0])
     buf_g = _proportional_split(buf_shares, jnp.floor(dev.on_chip_bytes
@@ -128,10 +155,12 @@ def repair_partition_jax(pes_shares, buf_shares, bw_shares,
 
 def repair_time_shares_jax(raw, model_valid, floor: float = 0.05):
     """Traced share normalization: positive (B, M) raw weights -> fractions
-    summing to 1 over valid models, each at least ``floor`` (clamped to an
-    equal split when M * floor > 1).  Used for both bandwidth fractions
-    (spatial) and round-robin time slices (temporal)."""
-    valid = jnp.broadcast_to((model_valid > 0)[None, :], raw.shape)
+    summing to 1 over valid columns, each at least ``floor`` (clamped to an
+    equal split when M * floor > 1).  Used for bandwidth fractions
+    (spatial), round-robin time slices (temporal), and — with a per-row
+    (B, M) membership mask — the within-shared-slice time shares of hybrid
+    deployments.  Rows with an all-False mask return zeros."""
+    valid = _as_mask(model_valid, raw.shape)
     valid_f = valid.astype(jnp.float32)
     nv = jnp.maximum(valid_f.sum(-1, keepdims=True), 1.0)
     fl = jnp.minimum(floor, 1.0 / nv)
@@ -155,6 +184,62 @@ def partition_devices(dev: DeviceTables, part: PartitionBatch,
         bps=jnp.where(valid, part.bw * dev.bps, full(dev.bps)),
         clock_hz=full(dev.clock_hz),
         wordbytes=full(dev.wordbytes))
+
+
+# --------------------------------------------------------------------------
+# hybrid deployments: per-row spatial-slice / shared-slice structure
+# --------------------------------------------------------------------------
+def slice_masks(assign, model_valid):
+    """Traced slice structure of a hybrid deployment batch.
+
+    ``assign`` is the (B, M) deployment assignment (see
+    ``dse.encoding.sample_assign``): values > 0.5 mark membership in the
+    row's single time-multiplexed *shared slice*; every other valid model
+    owns a dedicated spatial slice.  Returns ``(shared, slice_valid,
+    slice_col)``:
+
+    * ``shared``      (B, M) bool — model is a shared-slice member;
+    * ``slice_valid`` (B, M) bool — column represents a slice in the
+      spatial split: every dedicated model plus the shared slice's
+      *leader* (its first member column);
+    * ``slice_col``   (B, M) i32  — the column model m draws its slice
+      resources from (itself when dedicated, the leader when shared).
+
+    An all-spatial row has ``slice_valid == model_valid`` and an identity
+    ``slice_col`` (the spatial mode, bit for bit); an all-shared row has a
+    single valid slice, which the split repair hands the board verbatim
+    (the temporal mode, bit for bit).
+    """
+    valid = _as_mask(model_valid, assign.shape)
+    shared = (assign > 0.5) & valid
+    is_leader = shared & (jnp.cumsum(shared.astype(jnp.int32), axis=-1) == 1)
+    slice_valid = (valid & ~shared) | is_leader
+    leader_col = jnp.argmax(is_leader, axis=-1)           # (B,)
+    cols = jnp.arange(assign.shape[1], dtype=jnp.int32)[None, :]
+    slice_col = jnp.where(shared, leader_col[:, None].astype(jnp.int32),
+                          cols)
+    return shared, slice_valid, slice_col
+
+
+def slice_shares(raw, shared, slice_valid):
+    """Fold model-level raw resource shares into slice-level shares: the
+    shared slice (its leader column) claims the sum of its members'
+    positive shares, dedicated columns keep their own, non-leader shared
+    columns zero.  With no shared members this returns ``raw`` unchanged —
+    the all-spatial reduction stays bit-identical."""
+    pos = jnp.where(raw > 0, raw, 0.0) * shared.astype(raw.dtype)
+    pooled = pos.sum(-1, keepdims=True)
+    return jnp.where(shared,
+                     jnp.where(slice_valid, pooled, jnp.zeros_like(raw)),
+                     raw)
+
+
+def gather_slices(part: PartitionBatch, slice_col) -> PartitionBatch:
+    """Map a slice-level :class:`PartitionBatch` back to per-model view:
+    model m's columns become its slice's resources (shared members all see
+    the full shared slice — they time-multiplex within it)."""
+    g = lambda a: jnp.take_along_axis(a, slice_col, axis=1)
+    return PartitionBatch(g(part.pes), g(part.buf), g(part.bw))
 
 
 # --------------------------------------------------------------------------

@@ -1,22 +1,40 @@
-"""Joint DSE over (per-model budget split × per-model CE arrangement).
+"""Joint DSE over (per-model budget split × per-model CE arrangement ×
+spatial/temporal deployment assignment).
 
 The multinet genome extends the single-model one: each deployment row is M
 ``DesignBatch`` planes (bred per model with the existing ``make_children``
 operators, so every segment/CE/pipeline mutation carries over) plus raw
 resource shares (spatial: DSP/BRAM/bandwidth; temporal: round-robin time
-slices).  Share variation adds two operators of its own:
+slices; hybrid: both) and — in hybrid mode — the per-model **assignment**
+gene (dedicated spatial slice vs membership in the shared time-multiplexed
+slice).  Share variation adds two operators of its own:
 
 * share mutation          — one model's share scaled by a lognormal factor;
 * transfer-of-budget      — crossover takes parent A's deployment and
   re-allocates budget model-wise from parent B, plus an explicit
   move-δ-from-model-i-to-j mutation.
 
-Raw shares are repaired *inside* the jitted joint evaluator
-(``repair_partition_jax``), so the breeding pipeline never has to keep
-splits feasible — mutation space stays unconstrained and ONE compile
-serves the whole search.  Selection keeps a :class:`ParetoArchive` over
-the oriented system objectives (worst-model latency vs aggregate
-throughput by default).
+Assignment variation adds three more (hybrid mode):
+
+* assignment flip         — one model's spatial/shared bit toggled;
+* slice merge / split     — a dedicated model folded INTO the shared slice,
+  or a member pulled OUT into its own slice (directed flips, so slice
+  structure changes even when flips would cancel);
+* assignment crossover    — child keeps parent A's assignment but adopts
+  parent B's choice on a random model subset (merging/splitting the
+  shared slice exactly where the parents disagree).
+
+Raw genes are repaired *inside* the jitted joint evaluator
+(``repair_partition_jax`` / ``slice_masks``), so the breeding pipeline
+never has to keep deployments feasible — mutation space stays
+unconstrained and ONE compile per mode serves the whole search.
+Selection keeps a :class:`ParetoArchive` over the oriented system
+objectives: the default ``objective="serving"`` front is (worst-model
+latency, max-min weighted throughput); ``objective="slo"`` drives the
+front by graded SLO attainment under per-model deadline distributions
+(``slo_attainment_dist``, paired with aggregate throughput) — the f-CNNx
+observation that multi-CNN mappings are only useful under per-model
+performance constraints, made a first-class search mode.
 
 The equal-split baseline arm is the SAME search with
 ``freeze_partition=True`` (shares pinned to 1/M): identical budget,
@@ -30,11 +48,13 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from ..dse.encoding import NS, DesignBatch, MultiDesignBatch, stack_designs
+from ..dse.encoding import NS, DesignBatch, MultiDesignBatch, \
+    sample_assign, stack_designs
 from ..dse.pareto import ParetoArchive
 from ..dse.samplers import sample_mixed
 from ..dse.search import SearchConfig, make_children, orient
-from .joint_eval import make_multi_tables, joint_evaluate
+from .joint_eval import (DEADLINE_SCALES, make_multi_tables, joint_evaluate,
+                         slo_attainment_dist)
 from .partition import DEFAULT_FLOORS, DEFAULT_MAX_M, equal_shares, \
     sample_shares
 
@@ -44,6 +64,11 @@ from .partition import DEFAULT_FLOORS, DEFAULT_MAX_M, equal_shares, \
 #: objective: it rewards starving the expensive model.
 JOINT_OBJECTIVES = ("worst_latency_s", "min_model_throughput_ips")
 
+#: objectives of ``objective="slo"``: graded deadline attainment (the
+#: driver) traded against aggregate throughput (so the front spans
+#: meet-the-SLOs vs serve-the-most instead of collapsing to one point).
+SLO_OBJECTIVES = ("slo_attainment_dist", "agg_throughput_ips")
+
 #: metric keys persisted for every evaluated deployment (system metrics
 #: plus the repaired splits, so fronts decode straight to deployments)
 _KEEP_SYS = ("agg_throughput_ips", "worst_latency_s",
@@ -52,15 +77,30 @@ _KEEP_SYS = ("agg_throughput_ips", "worst_latency_s",
              "per_model_latency_s", "per_model_throughput_ips",
              "per_model_access_bytes")
 _KEEP_MODE = {"spatial": ("pes_split", "buf_split", "bw_split"),
-              "temporal": ("time_share", "round_period_s")}
+              "temporal": ("time_share", "round_period_s"),
+              "hybrid": ("pes_split", "buf_split", "bw_split",
+                         "time_share", "round_period_s", "assign")}
 
 
 @dataclass
 class MultinetSearchConfig:
+    """Knobs of the joint deployment search (see module docstring).
+
+    ``mode`` picks the co-execution space (spatial splits, temporal
+    round-robin, or the hybrid assignment space containing both);
+    ``objective`` picks what drives the Pareto front: ``"serving"`` keeps
+    the ``objectives`` tuple as given (default: worst-model latency vs
+    max-min throughput), ``"slo"`` swaps an untouched default for
+    ``SLO_OBJECTIVES`` and requires per-model SLOs (``slo_s`` here or on
+    the supplied tables).  ``deadline_scales`` is the per-model deadline
+    distribution grid of the graded attainment metric."""
+
     pop_size: int = 512
     budget: int = 4096                # total deployment evaluations
     objectives: tuple[str, ...] = JOINT_OBJECTIVES
-    mode: str = "spatial"             # "spatial" | "temporal"
+    mode: str = "spatial"             # "spatial" | "temporal" | "hybrid"
+    objective: str = "serving"        # "serving" | "slo"
+    deadline_scales: tuple[float, ...] = DEADLINE_SCALES
     freeze_partition: bool = False    # pin shares to the equal split
     min_ces: int = 1                  # per-model CE bounds
     max_ces: int = 11
@@ -79,6 +119,15 @@ class MultinetSearchConfig:
     transfer_frac: float = 0.4
     transfer_delta: float = 0.5
     share_crossover_frac: float = 0.5
+    # assignment variation (hybrid mode).  The assignment gene is only M
+    # bits, so it evolves on a slower timescale than shares/designs —
+    # heavier churn here dilutes the per-assignment-class search depth and
+    # the hybrid arm stops covering the pure subspaces it contains.
+    assign_flip_frac: float = 0.08
+    merge_split_frac: float = 0.15
+    assign_crossover_frac: float = 0.25
+    p_shared_init: float = 0.35       # shared-membership rate of fresh rows
+    reconfig_s: float = 0.0           # per-round partial-reconfig charge
     #: trailing fraction of generations run memetically: children inherit a
     #: front parent's split (small jitter only), concentrating the design
     #: operators on the promising splits the explore phase surfaced
@@ -91,6 +140,8 @@ class MultinetSearchConfig:
     max_m: int = DEFAULT_MAX_M
 
     def design_cfg(self) -> SearchConfig:
+        """The per-model design-operator knobs, as the single-model
+        SearchConfig that ``dse.make_children`` consumes."""
         return SearchConfig(
             min_ces=self.min_ces, max_ces=self.max_ces,
             crossover_frac=self.crossover_frac, shift_frac=self.shift_frac,
@@ -101,6 +152,11 @@ class MultinetSearchConfig:
 
 @dataclass
 class MultinetSearchResult:
+    """Everything :func:`joint_search` evaluated, in evaluation order:
+    design planes, raw gene values (``shares`` also carries the
+    ``"assign"`` genome in hybrid mode), archived metrics, the oriented
+    objective points and the Pareto-front indices into all of them."""
+
     designs: MultiDesignBatch         # every evaluated deployment, in order
     shares: dict[str, np.ndarray]     # raw share genomes per resource
     metrics: dict[str, np.ndarray]    # system metrics + repaired splits
@@ -113,6 +169,7 @@ class MultinetSearchResult:
     history: list[dict] = field(default_factory=list)
 
     def front_points(self) -> np.ndarray:
+        """Oriented (lower-better) objective points of the front rows."""
         return self.points[self.front_idx]
 
 
@@ -169,27 +226,89 @@ def _breed_shares(rng, pool_shares, pa, pb, m, cfg) -> np.ndarray:
 
 
 # --------------------------------------------------------------------------
+# assignment operators (hybrid mode; (n, max_m) 0/1 genomes, in place)
+# --------------------------------------------------------------------------
+def _flip_assign(rng, assign, m, frac):
+    """Assignment-flip mutation: one random model's spatial/shared bit
+    toggled, per row w.p. ``frac``."""
+    n = len(assign)
+    do = rng.random(n) < frac
+    col = rng.integers(0, m, size=n)
+    rows = np.nonzero(do)[0]
+    assign[rows, col[rows]] = 1.0 - (assign[rows, col[rows]] > 0.5)
+
+
+def _merge_split_assign(rng, assign, m, frac):
+    """Slice merge/split mutation: per row w.p. ``frac``, either *merge* a
+    random dedicated model into the shared slice or *split* a random
+    member out into its own slice — directed flips, so the slice structure
+    changes even when a uniform flip would pick an empty side."""
+    if m < 2:
+        return
+    n = len(assign)
+    do = rng.random(n) < frac
+    merge = rng.random(n) < 0.5
+    memb = assign[:, :m] > 0.5
+    # pick a random column on the chosen side; rows whose chosen side is
+    # empty (nothing to merge/split) are skipped
+    side = np.where(merge[:, None], ~memb, memb)
+    keys = np.where(side, rng.random((n, m)), -1.0)
+    col = np.argmax(keys, axis=1)
+    ok = do & side.any(1)
+    rows = np.nonzero(ok)[0]
+    assign[rows, col[rows]] = merge[rows].astype(np.float32)
+
+
+def _crossover_assign(rng, a, b, m, frac):
+    """Slice-merge/split crossover: child keeps parent A's assignment but,
+    per row w.p. ``frac``, adopts parent B's spatial/shared choice on a
+    random nonempty model subset — the shared slice merges or splits
+    exactly where the parents disagreed."""
+    n, max_m = a.shape
+    take_b = rng.random((n, max_m)) < 0.5
+    take_b[:, m:] = False
+    none = ~take_b[:, :m].any(1)
+    take_b[none, rng.integers(0, m, size=int(none.sum()))] = True
+    do = (rng.random(n) < frac)[:, None]
+    return np.where(do & take_b, b, a)
+
+
+# --------------------------------------------------------------------------
 # the search loop
 # --------------------------------------------------------------------------
 def joint_search(nets, dev, config: MultinetSearchConfig | None = None,
                  mtables=None) -> MultinetSearchResult:
     """Run the joint loop: sample deployments -> joint evaluate -> archive
-    -> breed designs and budget splits together."""
+    -> breed designs, budget splits and (hybrid) assignments together."""
     cfg = config or MultinetSearchConfig()
     if cfg.budget < 1 or cfg.pop_size < 1:
         raise ValueError(f"budget and pop_size must be >= 1 "
                          f"(got {cfg.budget}, {cfg.pop_size})")
-    if cfg.mode not in ("spatial", "temporal"):
-        raise ValueError(f"unknown mode {cfg.mode!r}")
+    if cfg.mode not in ("spatial", "temporal", "hybrid"):
+        raise ValueError(f"unknown mode {cfg.mode!r}; known: spatial, "
+                         f"temporal, hybrid")
+    if cfg.objective not in ("serving", "slo"):
+        raise ValueError(f"unknown objective {cfg.objective!r}; known: "
+                         f"serving, slo")
     mt = mtables if mtables is not None else make_multi_tables(
         nets, weights=cfg.weights, slo_s=cfg.slo_s, max_m=cfg.max_m)
+    objectives = tuple(cfg.objectives)
+    slo_aware = bool(np.isfinite(np.asarray(mt.slo_s)).any())
+    if cfg.objective == "slo":
+        if not slo_aware:
+            raise ValueError("objective='slo' needs per-model SLOs: pass "
+                             "slo_s on the config or the tables")
+        if objectives == JOINT_OBJECTIVES:   # untouched default -> swap
+            objectives = SLO_OBJECTIVES
     m = len(nets)
     max_m = mt.max_m
     n_layers = [len(net) for net in nets]
-    n_obj = len(cfg.objectives)
+    n_obj = len(objectives)
     rng = np.random.default_rng(cfg.seed)
     dcfg = cfg.design_cfg()
-    resources = ("pes", "buf", "bw") if cfg.mode == "spatial" else ("time",)
+    resources = {"spatial": ("pes", "buf", "bw"), "temporal": ("time",),
+                 "hybrid": ("pes", "buf", "bw", "time")}[cfg.mode]
+    hybrid = cfg.mode == "hybrid"
 
     pop_n = min(cfg.pop_size, cfg.budget)
     gens = max(1, cfg.budget // pop_n)
@@ -199,13 +318,26 @@ def joint_search(nets, dev, config: MultinetSearchConfig | None = None,
 
     def fresh_shares(n):
         if cfg.freeze_partition:
-            return {r: equal_shares(n, max_m, m) for r in resources}
-        sh = {r: sample_shares(rng, n, max_m, m) for r in resources}
-        # anchor a few exact equal-split rows so the searched space always
-        # contains the baseline deployment
-        k = max(1, n // 16)
-        for r in resources:
-            sh[r][:k] = equal_shares(k, max_m, m)
+            sh = {r: equal_shares(n, max_m, m) for r in resources}
+        else:
+            sh = {r: sample_shares(rng, n, max_m, m) for r in resources}
+            # anchor a few exact equal-split rows so the searched space
+            # always contains the baseline deployment
+            k = max(1, n // 16)
+            for r in resources:
+                sh[r][:k] = equal_shares(k, max_m, m)
+        if hybrid:
+            if cfg.freeze_partition:
+                a = np.zeros((n, max_m), np.float32)
+            else:
+                a = sample_assign(rng, n, max_m, m,
+                                  p_shared=cfg.p_shared_init)
+                # anchor both pure modes so the hybrid front always
+                # contains (and can only improve on) each pure space
+                k = max(1, n // 8)
+                a[:k] = 0.0
+                a[k:2 * k, :m] = 1.0
+            sh["assign"] = a
         return sh
 
     def fresh_designs(n):
@@ -213,11 +345,12 @@ def joint_search(nets, dev, config: MultinetSearchConfig | None = None,
                              max_ces=cfg.max_ces) for L in n_layers]
 
     # hall-of-everything buffers (preallocated; written incrementally)
+    genes = tuple(resources) + (("assign",) if hybrid else ())
     hall_end = np.empty((total, max_m, NS), np.int32)
     hall_pipe = np.empty((total, max_m, NS), bool)
     hall_nce = np.empty((total, max_m, NS), np.int32)
     hall_inter = np.empty((total, max_m), bool)
-    hall_sh = {r: np.empty((total, max_m), np.float32) for r in resources}
+    hall_sh = {r: np.empty((total, max_m), np.float32) for r in genes}
     all_points = np.empty((total, n_obj))
     all_metrics: list[dict] = []
     archive = ParetoArchive(n_obj)
@@ -243,12 +376,27 @@ def joint_search(nets, dev, config: MultinetSearchConfig | None = None,
                                      buf_shares=subsh["buf"],
                                      bw_shares=subsh["bw"],
                                      floors=cfg.floors)
-            else:
+            elif cfg.mode == "temporal":
                 out = joint_evaluate(sub, mt, dev, mode="temporal",
                                      time_shares=subsh["time"],
-                                     floors=cfg.floors)
+                                     floors=cfg.floors,
+                                     reconfig_s=cfg.reconfig_s)
+            else:
+                out = joint_evaluate(sub, mt, dev, mode="hybrid",
+                                     assign=subsh["assign"],
+                                     pes_shares=subsh["pes"],
+                                     buf_shares=subsh["buf"],
+                                     bw_shares=subsh["bw"],
+                                     time_shares=subsh["time"],
+                                     floors=cfg.floors,
+                                     reconfig_s=cfg.reconfig_s)
             keep = _KEEP_SYS + _KEEP_MODE[cfg.mode]
-            outs.append({k: np.asarray(out[k])[:len(idx)] for k in keep})
+            got = {k: np.asarray(out[k])[:len(idx)] for k in keep}
+            if slo_aware:
+                got["slo_attainment_dist"] = slo_attainment_dist(
+                    got["per_model_latency_s"], mt,
+                    scales=cfg.deadline_scales)
+            outs.append(got)
         return {k: np.concatenate([o[k] for o in outs])
                 if len(outs) > 1 else outs[0][k] for k in outs[0]}
 
@@ -258,13 +406,13 @@ def joint_search(nets, dev, config: MultinetSearchConfig | None = None,
     t0 = time.time()
     for gen in range(gens):
         out = eval_gen(pop_md, pop_sh)
-        pts = orient(out, cfg.objectives)
+        pts = orient(out, objectives)
         ok = np.isfinite(pts).all(1)
         idx = np.arange(base, base + sizes[gen])
         base += sizes[gen]
         (hall_end[idx], hall_pipe[idx], hall_nce[idx],
          hall_inter[idx]) = pop_md.to_numpy()
-        for r in resources:
+        for r in genes:
             hall_sh[r][idx] = pop_sh[r]
         all_points[idx] = pts
         all_metrics.append(out)
@@ -282,7 +430,7 @@ def joint_search(nets, dev, config: MultinetSearchConfig | None = None,
         n_elite = max(1, int(sizes[gen] * cfg.elite_frac))
         elite = idx[np.argsort(score, kind="stable")[:n_elite]]
         pool = np.unique(np.concatenate([archive.payload, elite]))
-        pool_sh = {r: hall_sh[r][pool] for r in resources}
+        pool_sh = {r: hall_sh[r][pool] for r in genes}
 
         n_next = sizes[gen + 1]
         n_imm = int(n_next * cfg.immigrant_frac)
@@ -295,26 +443,40 @@ def joint_search(nets, dev, config: MultinetSearchConfig | None = None,
         exploit = gen + 1 >= gens - int((gens - 1) * cfg.exploit_frac)
         if cfg.freeze_partition:
             kid_sh = {r: equal_shares(n_child, max_m, m) for r in resources}
+            if hybrid:
+                kid_sh["assign"] = np.zeros((n_child, max_m), np.float32)
         else:
             pa = rng.integers(0, len(pool), size=n_child)
             pb = rng.integers(0, len(pool), size=n_child)
             if exploit:
-                # memetic tail: inherit parent A's split near-verbatim so
-                # design breeding refines the surfaced splits
+                # memetic tail: inherit parent A's split (and assignment)
+                # near-verbatim so design breeding refines the deployments
+                # the explore phase surfaced
                 kid_sh = {}
                 for r in resources:
                     sh_r = pool_sh[r][pa].copy()
                     _mutate_shares(rng, sh_r, m, 0.3,
                                    0.2 * cfg.share_sigma)
                     kid_sh[r] = sh_r
+                if hybrid:
+                    a = pool_sh["assign"][pa].copy()
+                    _flip_assign(rng, a, m, 0.2 * cfg.assign_flip_frac)
+                    kid_sh["assign"] = a
             else:
                 kid_sh = {r: _breed_shares(rng, pool_sh[r], pa, pb, m, cfg)
                           for r in resources}
+                if hybrid:
+                    a = _crossover_assign(rng, pool_sh["assign"][pa].copy(),
+                                          pool_sh["assign"][pb], m,
+                                          cfg.assign_crossover_frac)
+                    _merge_split_assign(rng, a, m, cfg.merge_split_frac)
+                    _flip_assign(rng, a, m, cfg.assign_flip_frac)
+                    kid_sh["assign"] = a
         if n_imm:
             imm = fresh_designs(n_imm)
             if exploit and not cfg.freeze_partition:
                 pi = rng.integers(0, len(pool), size=n_imm)
-                imm_sh = {r: pool_sh[r][pi].copy() for r in resources}
+                imm_sh = {r: pool_sh[r][pi].copy() for r in genes}
             else:
                 imm_sh = fresh_shares(n_imm)
             kids = [DesignBatch.from_numpy(
@@ -328,12 +490,12 @@ def joint_search(nets, dev, config: MultinetSearchConfig | None = None,
                                 np.asarray(i.inter_pipe)]))
                 for k, i in zip(kids, imm)]
             kid_sh = {r: np.concatenate([kid_sh[r], imm_sh[r]])
-                      for r in resources}
+                      for r in genes}
         pop_md = stack_designs(kids, max_m)
         pop_sh = kid_sh
 
         history.append(dict(gen=gen, evals=base, archive=len(archive),
-                            best=dict(zip(cfg.objectives,
+                            best=dict(zip(objectives,
                                           archive.points.min(0).tolist()))
                             if len(archive) else {}))
 
@@ -343,11 +505,11 @@ def joint_search(nets, dev, config: MultinetSearchConfig | None = None,
                if len(all_metrics) > 1 else all_metrics[0][k]
                for k in all_metrics[0]}
     history.append(dict(gen=gens - 1, evals=total, archive=len(archive),
-                        best=dict(zip(cfg.objectives,
+                        best=dict(zip(objectives,
                                       archive.points.min(0).tolist()))
                         if len(archive) else {}))
     return MultinetSearchResult(
         designs=cat_md, shares=hall_sh, metrics=metrics, points=all_points,
         front_idx=np.sort(archive.payload.copy()),
-        objectives=tuple(cfg.objectives), mode=cfg.mode, n_evals=total,
+        objectives=objectives, mode=cfg.mode, n_evals=total,
         seconds=seconds, history=history)

@@ -1,6 +1,7 @@
 """The multinet co-scheduling subsystem: M=1 reduction to the single-model
-evaluator, partition-repair guarantees, the extended one-compile claim, and
-joint DSE dominating the equal-split baseline."""
+evaluator, partition-repair guarantees, the extended one-compile claim,
+hybrid deployments reducing bit-identically to both pure modes, the
+SLO-driven search, and joint DSE dominating the equal-split baseline."""
 from __future__ import annotations
 
 import numpy as np
@@ -9,7 +10,7 @@ import pytest
 from repro.cnn.registry import CNN_NAMES, get_cnn
 from repro.core.batch_eval import (bucket_max_L, evaluate_batch, make_tables,
                                    make_device_tables, shared_max_L)
-from repro.core.dse import stack_designs
+from repro.core.dse import sample_assign, stack_designs
 from repro.core.dse.pareto import hypervolume_2d
 from repro.core.dse.samplers import sample_mixed
 from repro.core.dse.search import orient
@@ -17,7 +18,7 @@ from repro.core.multinet import (DEFAULT_MAX_M, MultinetSearchConfig,
                                  PartitionBatch, equal_shares, joint_evaluate,
                                  joint_explore, make_multi_tables,
                                  repair_partition_jax, sample_shares,
-                                 validate_partition)
+                                 slo_attainment_dist, validate_partition)
 from repro.fpga.archs import ARCH_NAMES, make_arch
 from repro.fpga.boards import BOARD_NAMES, get_board
 
@@ -153,6 +154,240 @@ def test_temporal_metrics_account_for_sharing_and_switching():
         assert (tp <= np.asarray(full[i]["throughput_ips"])
                 * shares[:, i] + 1e-6).all()
         assert (lat > np.asarray(full[i]["latency_s"])).all()
+
+
+# ------------------------------------------------- hybrid mode reductions
+def _hybrid_fixture(seed=0, B=12):
+    rng = np.random.default_rng(seed)
+    nets = [get_cnn("resnet50"), get_cnn("mobilenetv2")]
+    dev = get_board("zc706")
+    mt = make_multi_tables(nets, slo_s=[0.05, 0.01])
+    md = stack_designs([sample_mixed(rng, len(n), B) for n in nets],
+                       DEFAULT_MAX_M)
+    sh = [sample_shares(rng, B, DEFAULT_MAX_M, 2) for _ in range(3)]
+    tsh = sample_shares(rng, B, DEFAULT_MAX_M, 2)
+    return nets, dev, mt, md, sh, tsh
+
+
+def test_hybrid_all_spatial_bit_identical_to_spatial_mode():
+    """A hybrid deployment whose models all own dedicated slices is the
+    spatial mode, bit for bit — every metric, split and per-model plane."""
+    nets, dev, mt, md, sh, tsh = _hybrid_fixture()
+    B = md.batch
+    out_s = joint_evaluate(md, mt, dev, pes_shares=sh[0], buf_shares=sh[1],
+                           bw_shares=sh[2])
+    out_h = joint_evaluate(md, mt, dev, mode="hybrid",
+                           assign=np.zeros((B, DEFAULT_MAX_M), np.float32),
+                           pes_shares=sh[0], buf_shares=sh[1],
+                           bw_shares=sh[2], time_shares=tsh)
+    for k in out_s:
+        np.testing.assert_array_equal(np.asarray(out_s[k]),
+                                      np.asarray(out_h[k]), err_msg=k)
+    assert (np.asarray(out_h["assign"]) == 0).all()
+    assert (np.asarray(out_h["round_period_s"]) == 0).all()
+
+
+def test_hybrid_all_shared_bit_identical_to_temporal_mode():
+    """A hybrid deployment whose models all share the time-multiplexed
+    slice is the temporal mode, bit for bit: the lone slice takes the
+    board verbatim and the per-slice RR reduces to the global RR —
+    including a nonzero partial-reconfiguration charge."""
+    nets, dev, mt, md, sh, tsh = _hybrid_fixture(seed=2)
+    B, m = md.batch, len(nets)
+    assign = np.zeros((B, DEFAULT_MAX_M), np.float32)
+    assign[:, :m] = 1.0
+    out_t = joint_evaluate(md, mt, dev, mode="temporal", time_shares=tsh,
+                           reconfig_s=0.004)
+    out_h = joint_evaluate(md, mt, dev, mode="hybrid", assign=assign,
+                           pes_shares=sh[0], buf_shares=sh[1],
+                           bw_shares=sh[2], time_shares=tsh,
+                           reconfig_s=0.004)
+    for k in out_t:
+        a, b = np.asarray(out_t[k]), np.asarray(out_h[k])
+        if a.ndim == 2:     # per-model planes: padded columns are
+            a, b = a[:, :m], b[:, :m]   # documented to differ
+        np.testing.assert_array_equal(a, b, err_msg=k)
+    # the shared slice IS the whole board
+    assert (np.asarray(out_h["pes_split"])[:, :m]
+            == np.float32(dev.pes)).all()
+
+
+def test_hybrid_m1_reduces_to_single_model_and_temporal():
+    """An M=1 hybrid deployment: a dedicated model reproduces the
+    single-model evaluator bit for bit; a shared-alone model reproduces
+    the M=1 temporal mode (it still pays its per-round weight reload)."""
+    net = get_cnn("xception")
+    dev = get_board("vcu108")
+    specs = [make_arch(a, net, n) for a in ARCH_NAMES for n in (2, 9)]
+    from repro.core.dse.encoding import encode_specs
+    db = encode_specs(specs, len(net))
+    B = db.batch
+    single = evaluate_batch(db, make_tables(net), dev, backend="ref")
+    mt = make_multi_tables([net])
+    md = stack_designs([db], DEFAULT_MAX_M)
+    out = joint_evaluate(md, mt, dev, mode="hybrid",
+                         assign=np.zeros((B, DEFAULT_MAX_M), np.float32))
+    for k in ("latency_s", "throughput_ips", "buffer_bytes",
+              "access_bytes", "utilization", "n_ces"):
+        np.testing.assert_array_equal(
+            np.asarray(single[k]), np.asarray(out[f"per_model_{k}"])[:, 0],
+            err_msg=k)
+    assign1 = np.zeros((B, DEFAULT_MAX_M), np.float32)
+    assign1[:, 0] = 1.0
+    tsh = np.ones((B, DEFAULT_MAX_M), np.float32)
+    out_t = joint_evaluate(md, mt, dev, mode="temporal", time_shares=tsh)
+    out_h = joint_evaluate(md, mt, dev, mode="hybrid", assign=assign1,
+                           time_shares=tsh)
+    np.testing.assert_array_equal(
+        np.asarray(out_t["per_model_latency_s"])[:, 0],
+        np.asarray(out_h["per_model_latency_s"])[:, 0])
+    np.testing.assert_array_equal(np.asarray(out_t["round_period_s"]),
+                                  np.asarray(out_h["round_period_s"]))
+
+
+def test_hybrid_mixed_assignment_charges_only_shared_models():
+    """In a mixed deployment the dedicated model's metrics equal the pure
+    spatial evaluation on the same raw shares (a lone shared member pools
+    exactly its own share, so the slice split coincides), while the
+    shared member pays its per-round weight reload: strictly higher
+    latency and strictly lower throughput on the same slice."""
+    nets, dev, mt, md, sh, tsh = _hybrid_fixture(seed=5)
+    B = md.batch
+    assign = np.zeros((B, DEFAULT_MAX_M), np.float32)
+    assign[:, 1] = 1.0                  # mobilenetv2 shared, resnet50 not
+    out = joint_evaluate(md, mt, dev, mode="hybrid", assign=assign,
+                         pes_shares=sh[0], buf_shares=sh[1],
+                         bw_shares=sh[2], time_shares=tsh)
+    out_s = joint_evaluate(md, mt, dev, pes_shares=sh[0],
+                           buf_shares=sh[1], bw_shares=sh[2])
+    np.testing.assert_array_equal(np.asarray(out["pes_split"]),
+                                  np.asarray(out_s["pes_split"]))
+    lat_h = np.asarray(out["per_model_latency_s"])
+    lat_s = np.asarray(out_s["per_model_latency_s"])
+    np.testing.assert_array_equal(lat_h[:, 0], lat_s[:, 0])
+    assert (lat_h[:, 1] > lat_s[:, 1]).all()
+    tp_h = np.asarray(out["per_model_throughput_ips"])
+    tp_s = np.asarray(out_s["per_model_throughput_ips"])
+    np.testing.assert_array_equal(tp_h[:, 0], tp_s[:, 0])
+    assert (tp_h[:, 1] < tp_s[:, 1]).all()
+
+
+def test_joint_hybrid_single_compile_across_assignments():
+    """The one-compile claim for hybrid deployments: assignments are
+    traced data — all-spatial, all-shared and mixed assignments at M ∈
+    {1, 2, 3} on four boards run through ONE compiled program."""
+    import jax
+
+    from repro.core.multinet import joint_eval as je
+
+    jax.clear_caches()
+    assert je._joint_hybrid_jit._cache_size() == 0
+    rng = np.random.default_rng(17)
+    combos = [(("mobilenetv2",), "zc706", "spatial"),
+              (("resnet50", "mobilenetv2"), "vcu110", "shared"),
+              (("resnet50", "mobilenetv2", "densenet121"), "zcu102",
+               "mixed"),
+              (("vgg16", "resnet101"), "vcu108", "mixed")]
+    B = 32
+    for names, board, kind in combos:
+        nets = [get_cnn(n) for n in names]
+        m = len(nets)
+        mt = make_multi_tables(nets)
+        md = stack_designs([sample_mixed(rng, len(n), B) for n in nets],
+                           DEFAULT_MAX_M)
+        sh = [sample_shares(rng, B, DEFAULT_MAX_M, m) for _ in range(4)]
+        assign = np.zeros((B, DEFAULT_MAX_M), np.float32)
+        if kind == "shared":
+            assign[:, :m] = 1.0
+        elif kind == "mixed":
+            assign = sample_assign(rng, B, DEFAULT_MAX_M, m)
+        out = joint_evaluate(md, mt, get_board(board), mode="hybrid",
+                             assign=assign, pes_shares=sh[0],
+                             buf_shares=sh[1], bw_shares=sh[2],
+                             time_shares=sh[3])
+        assert np.isfinite(np.asarray(out["worst_latency_s"])).all()
+    assert je._joint_hybrid_jit._cache_size() == 1
+
+
+# --------------------------------------------- SLO deadline distributions
+def test_slo_attainment_dist_grading():
+    """The graded metric: 1 with no SLOs, 0 when every deadline misses,
+    monotone in latency, and request-weighted across models."""
+    nets = [get_cnn("resnet50"), get_cnn("mobilenetv2")]
+    mt_free = make_multi_tables(nets)                  # slo = inf
+    lat = np.array([[0.5, 0.5], [1e9, 1e9]], np.float32)
+    np.testing.assert_allclose(slo_attainment_dist(lat, mt_free), 1.0)
+    mt = make_multi_tables(nets, slo_s=[0.010, 0.010],
+                           weights=[3.0, 1.0])
+    att = slo_attainment_dist(
+        np.array([[1e9, 1e9],      # nothing met
+                  [1e-6, 1e9],     # model 0 fully met (weight 3/4)
+                  [1e-6, 1e-6],    # everything met
+                  [0.009, 1e9]],   # model 0 partially met
+                 np.float32), mt)
+    assert att[0] == 0.0 and att[2] == 1.0
+    np.testing.assert_allclose(att[1], 0.75)
+    assert 0.0 < att[3] < 0.75
+    # tighter latency never lowers attainment
+    lat_grid = np.linspace(1e-4, 0.05, 32, dtype=np.float32)
+    a = slo_attainment_dist(np.stack([lat_grid, lat_grid], 1), mt)
+    assert (np.diff(a) <= 1e-12).all()
+
+
+def test_make_multi_tables_validation_and_broadcast():
+    nets = [get_cnn("resnet50"), get_cnn("mobilenetv2")]
+    with pytest.raises(ValueError, match="non-negative"):
+        make_multi_tables(nets, weights=[1.0, -2.0])
+    with pytest.raises(ValueError, match="all zero"):
+        make_multi_tables(nets, weights=[0.0, 0.0])
+    with pytest.raises(ValueError, match="finite"):
+        make_multi_tables(nets, weights=[np.inf, 1.0])
+    with pytest.raises(ValueError, match="weights"):
+        make_multi_tables(nets, weights=[1.0, 1.0, 1.0])
+    with pytest.raises(ValueError, match="slo_s"):
+        make_multi_tables(nets, slo_s=[0.1])
+    with pytest.raises(ValueError, match="positive"):
+        make_multi_tables(nets, slo_s=[-0.1, 0.1])
+    # scalars broadcast; normalized weights are exposed for reporting
+    mt = make_multi_tables(nets, weights=5.0, slo_s=0.25)
+    np.testing.assert_allclose(mt.normalized_weights, [0.5, 0.5])
+    assert np.asarray(mt.slo_s)[:2].tolist() == [0.25, 0.25]
+    mt2 = make_multi_tables(nets, weights=[1.0, 3.0])
+    np.testing.assert_allclose(mt2.normalized_weights, [0.25, 0.75])
+    np.testing.assert_allclose(np.asarray(mt2.weights).sum(), 1.0,
+                               rtol=1e-6)
+    # a zero-weight (trafficless) model is allowed and excluded from the
+    # weighted-rate metrics rather than blowing them up
+    mt3 = make_multi_tables(nets, weights=[1.0, 0.0])
+    rng = np.random.default_rng(0)
+    md = stack_designs([sample_mixed(rng, len(n), 4) for n in nets],
+                       DEFAULT_MAX_M)
+    out = joint_evaluate(md, mt3, get_board("zc706"))
+    assert np.isfinite(np.asarray(out["fairness"])).all()
+    assert np.isfinite(np.asarray(out["min_model_throughput_ips"])).all()
+
+
+def test_hybrid_slo_search_smoke():
+    """objective='slo' on the hybrid space: resolves to the SLO
+    objectives, stores the assignment genome, and archives the graded
+    attainment metric for every deployment."""
+    nets = [get_cnn("resnet50"), get_cnn("mobilenetv2")]
+    dev = get_board("zc706")
+    cfg = MultinetSearchConfig(pop_size=64, seed=11, objective="slo",
+                               slo_s=(0.08, 0.02))
+    res = joint_explore(nets, dev, 128, strategy="hybrid", config=cfg)
+    assert res.objectives == ("slo_attainment_dist", "agg_throughput_ips")
+    assert res.metrics["slo_attainment_dist"].shape == (128,)
+    assert ((0.0 <= res.metrics["slo_attainment_dist"])
+            & (res.metrics["slo_attainment_dist"] <= 1.0)).all()
+    assert res.shares["assign"].shape == (128, DEFAULT_MAX_M)
+    assert res.metrics["assign"].shape == (128, DEFAULT_MAX_M)
+    assert len(res.front) >= 1
+    # objective='slo' without SLOs anywhere is a config error
+    with pytest.raises(ValueError, match="slo"):
+        joint_explore(nets, dev, 64, strategy="hybrid",
+                      config=MultinetSearchConfig(pop_size=64,
+                                                  objective="slo"))
 
 
 # ------------------------------------------------------------- joint DSE
