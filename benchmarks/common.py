@@ -9,6 +9,15 @@ from contextlib import contextmanager
 ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
 
 
+def get_session():
+    """The harness-wide :class:`repro.api.Session`: every benchmark
+    evaluates through it, so tables and compiled programs are shared
+    across the whole ``benchmarks.run`` sweep (and the persistent compile
+    cache is enabled once, via the session's resolved EvalConfig)."""
+    from repro.api import default_session
+    return default_session()
+
+
 def save(name: str, payload: dict) -> str:
     os.makedirs(ART, exist_ok=True)
     path = os.path.join(ART, f"{name}.json")

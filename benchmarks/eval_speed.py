@@ -14,13 +14,11 @@ import jax
 import numpy as np
 
 from repro.cnn.registry import get_cnn
-from repro.core.batch_eval import (encode_specs, evaluate_batch,
-                                   make_tables, padded_rows)
-from repro.core.evaluator import evaluate_design
+from repro.core.batch_eval import encode_specs, padded_rows
 from repro.fpga.archs import make_arch
 from repro.fpga.boards import get_board
 
-from .common import fmt_table, save
+from .common import fmt_table, get_session, save
 
 PAPER_US = 6300.0
 BATCH_SIZES = (30, 240, 1920, 4096)
@@ -28,28 +26,28 @@ BATCH_SIZES = (30, 240, 1920, 4096)
 
 def run(verbose: bool = True) -> dict:
     net, dev = get_cnn("xception"), get_board("vcu110")
+    ses = get_session()
     specs = [make_arch(a, net, n)
              for a in ("segmented", "segmented_rr", "hybrid")
              for n in range(2, 12)]
 
     t0 = time.time()
     for s in specs:
-        evaluate_design(s, net, dev)
+        ses.evaluate(s, net, dev)
     scalar_us = (time.time() - t0) / len(specs) * 1e6
 
-    tables = make_tables(net)
     rows = [["scalar (reference)", f"{scalar_us:.0f}", "-",
              f"{PAPER_US/scalar_us:.1f}x"]]
     out = {"scalar_us": scalar_us, "paper_us": PAPER_US}
     for B in BATCH_SIZES:
         cyc = itertools.islice(itertools.cycle(specs), B)
         batch = encode_specs(list(cyc), len(net))
-        r = evaluate_batch(batch, tables, dev)
+        r = ses.evaluate(batch, net, dev)
         jax.block_until_ready(r["latency_s"])
         t0 = time.time()
         reps = 3
         for _ in range(reps):
-            r = evaluate_batch(batch, tables, dev)
+            r = ses.evaluate(batch, net, dev)
             jax.block_until_ready(r["latency_s"])
         # small batches pad to a tile multiple — report the executed rows
         # next to the user-facing per-design cost so neither misleads

@@ -10,20 +10,20 @@ Checks (paper's reading of the figures):
 from __future__ import annotations
 
 from repro.cnn.registry import get_cnn
-from repro.core.evaluator import evaluate_design
 from repro.fpga.archs import ARCH_NAMES, make_arch
 from repro.fpga.boards import get_board
 
-from .common import save
+from .common import get_session, save
 
 
 def _sweep(cnn: str, board: str) -> dict:
     net, dev = get_cnn(cnn), get_board(board)
+    ses = get_session()
     pts = {}
     for arch in ARCH_NAMES:
         pts[arch] = []
         for n in range(2, 12):
-            m = evaluate_design(make_arch(arch, net, n), net, dev)
+            m = ses.evaluate(make_arch(arch, net, n), net, dev)
             pts[arch].append(dict(n=n, throughput=m.throughput_ips,
                                   accesses=m.access_bytes,
                                   buffers=float(m.buffer_bytes)))

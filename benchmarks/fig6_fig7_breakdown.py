@@ -14,23 +14,21 @@ from __future__ import annotations
 import numpy as np
 
 from repro.cnn.registry import get_cnn
-from repro.core.batch_eval import evaluate_specs
-from repro.core.evaluator import evaluate_design
 from repro.fpga.archs import make_arch
 from repro.fpga.boards import get_board
 
-from .common import save
+from .common import get_session, save
 
 ARCHS = ("segmented_rr", "segmented", "hybrid")
 N_RANGE = range(2, 12)
 
 
 def _best_by_throughput(net, dev):
-    """Best-throughput CE count per architecture — ONE batched
-    ``evaluate_specs`` call over the full (arch × n) candidate grid
-    instead of 30 re-traced scalar evaluations."""
+    """Best-throughput CE count per architecture — ONE batched session
+    call over the full (arch × n) candidate grid instead of 30 re-traced
+    scalar evaluations."""
     specs = [make_arch(a, net, n) for a in ARCHS for n in N_RANGE]
-    out = evaluate_specs(specs, net, dev)
+    out = get_session().evaluate(specs, net, dev)
     tp = out["throughput_ips"].reshape(len(ARCHS), len(N_RANGE))
     best = {}
     for i, a in enumerate(ARCHS):
@@ -46,7 +44,8 @@ def run(verbose: bool = True) -> dict:
     best = _best_by_throughput(net, dev)
     # the per-segment / per-layer breakdown needs the scalar evaluator's
     # detail records — run it for the two winning instances only
-    detail = {a: evaluate_design(make_arch(a, net, best[a]["n"]), net, dev)
+    ses = get_session()
+    detail = {a: ses.evaluate(make_arch(a, net, best[a]["n"]), net, dev)
               for a in ("segmented_rr", "segmented")}
 
     # ---- Fig 6: segment compute vs memory time ----

@@ -29,7 +29,6 @@ from repro.core.dse import (
     best_scalar_index,
     decode_design,
     dominating_indices,
-    explore,
     orient,
     pareto,
     sample_custom,
@@ -37,12 +36,11 @@ from repro.core.dse import (
     sample_mixed,
     sample_mixed_loop,
 )
-from repro.core.evaluator import evaluate_design
 from repro.core.notation import format_spec
 from repro.fpga.archs import make_arch
 from repro.fpga.boards import get_board
 
-from .common import save
+from .common import get_session, save
 
 N_SAMPLE = 100_000
 OBJ = ("latency_s", "buffer_bytes")
@@ -84,10 +82,11 @@ def _search_vs_random(net, dev, n: int, *, family: str,
                       rnd=None) -> dict:
     """Equal-budget comparison; reference picks come from the random run
     (pass ``rnd`` to reuse an already-computed random sweep)."""
+    ses = get_session()
     if rnd is None:
-        rnd = explore(net, dev, n=n, family=family, seed=seed_rnd)
-    srch = explore(net, dev, n=n, family=family, strategy="search",
-                   seed=seed_srch)
+        rnd = ses.explore(net, n, dev, family=family, seed=seed_rnd)
+    srch = ses.explore(net, n, dev, family=family, strategy="search",
+                       seed=seed_srch)
     rp = orient(rnd.metrics, OBJ)
     sp = orient(srch.metrics, OBJ)
     refs = {
@@ -115,12 +114,13 @@ def _search_vs_random(net, dev, n: int, *, family: str,
 
 def run(verbose: bool = True, n_sample: int = N_SAMPLE) -> dict:
     net, dev = get_cnn("xception"), get_board("vcu110")
+    ses = get_session()
 
     # ---- Fig 9: bottlenecks of the two promising template instances ----
-    seg_cands = [(evaluate_design(make_arch("segmented", net, n), net, dev), n)
+    seg_cands = [(ses.evaluate(make_arch("segmented", net, n), net, dev), n)
                  for n in range(2, 12)]
     m_seg, n_seg = max(seg_cands, key=lambda t: t[0].throughput_ips)
-    hyb_cands = [(evaluate_design(make_arch("hybrid", net, n), net, dev), n)
+    hyb_cands = [(ses.evaluate(make_arch("hybrid", net, n), net, dev), n)
                  for n in range(2, 12)]
     m_hyb, n_hyb = min(hyb_cands, key=lambda t: t[0].buffer_bytes)
 
@@ -139,7 +139,7 @@ def run(verbose: bool = True, n_sample: int = N_SAMPLE) -> dict:
     # ---- Fig 10: 100k-design DSE (half custom family, half the mixed
     # superset — mirrors "explore architectures that mitigate these
     # bottlenecks") ----
-    res = explore(net, dev, n=n_sample, family="both", seed=0)
+    res = ses.explore(net, n_sample, dev, family="both", seed=0)
     tp = res.metrics["throughput_ips"]
     buf = res.metrics["buffer_bytes"]
 
@@ -157,7 +157,7 @@ def run(verbose: bool = True, n_sample: int = N_SAMPLE) -> dict:
 
     # do custom designs Pareto-dominate every template instance?
     temps = [(f"{a}[{n}]",
-              evaluate_design(make_arch(a, net, n), net, dev))
+              ses.evaluate(make_arch(a, net, n), net, dev))
              for a in ("segmented", "segmented_rr", "hybrid")
              for n in range(2, 12)]
     dominated = sum(

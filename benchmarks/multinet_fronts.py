@@ -24,10 +24,10 @@ import numpy as np
 
 from repro.cnn.registry import get_cnn
 from repro.core.dse.pareto import hypervolume_2d, knee_point
-from repro.core.multinet import MultinetSearchConfig, joint_explore
+from repro.core.multinet import MultinetSearchConfig
 from repro.fpga.boards import get_board
 
-from .common import fmt_table, save
+from .common import fmt_table, get_session, save
 
 STUDIES = (
     ("resnet50+mobilenetv2", ("resnet50", "mobilenetv2"), "zc706"),
@@ -53,7 +53,8 @@ def run(verbose: bool = True, quick: bool = False) -> dict:
         nets = [get_cnn(n) for n in names]
         dev = get_board(board)
         cfg = MultinetSearchConfig(pop_size=pop, seed=3)
-        arms = {a: joint_explore(nets, dev, budget, strategy=a, config=cfg)
+        ses = get_session()
+        arms = {a: ses.deploy(nets, budget, dev, strategy=a, config=cfg)
                 for a in ARMS}
         fronts = {a: r.front_points() for a, r in arms.items()}
         # reference point strictly outside every front: pad each axis

@@ -28,11 +28,10 @@ import numpy as np
 
 from repro.cnn.registry import get_cnn
 from repro.core.dse.pareto import hypervolume_2d
-from repro.core.multinet import (MultinetSearchConfig, joint_explore,
-                                 make_multi_tables)
+from repro.core.multinet import MultinetSearchConfig
 from repro.fpga.boards import get_board
 
-from .common import fmt_table, save
+from .common import fmt_table, get_session, save
 
 MODELS = ("resnet50", "mobilenetv2", "densenet121")
 BOARD = "zc706"
@@ -51,14 +50,15 @@ def run(verbose: bool = True, quick: bool = False) -> dict:
     pop = QUICK_POP if quick else FULL_POP
     nets = [get_cnn(n) for n in MODELS]
     dev = get_board(BOARD)
-    mt = make_multi_tables(nets, weights=WEIGHTS, slo_s=SLO_S)
+    ses = get_session()
+    mt = ses.multi_tables(nets, weights=WEIGHTS, slo_s=SLO_S)
 
     arms = {}
     for arm in ARMS:
         cfg = MultinetSearchConfig(pop_size=pop, seed=3, objective="slo",
                                    slo_s=SLO_S, weights=WEIGHTS)
-        arms[arm] = joint_explore(nets, dev, budget, strategy=arm,
-                                  config=cfg)
+        arms[arm] = ses.deploy(nets, budget, dev, strategy=arm,
+                               config=cfg)
     fronts = {a: r.front_points() for a, r in arms.items()}
     # oriented col 0 is -slo_attainment_dist: front-best attainment
     best_slo = {a: float(-fronts[a][:, 0].min()) for a in ARMS}

@@ -196,6 +196,42 @@ def run(verbose: bool = True, quick: bool = False,
                   f"{hsteady / (mb * 3) * 1e6:.1f}", str(mb),
                   f"{max(first_s - hsteady, 0.0):.2f}", "-"])
 
+    # ---- session-cached re-evaluation: the Session front door at steady
+    # state — memoized tables + shared compiles, so re-serving the same
+    # net/board costs pure evaluation (table-build amortization made
+    # visible in the trajectory)
+    from repro.api import Session
+
+    ses = Session(dev)
+    sB = QUICK_SIZES[-1] if quick else 4096
+    sdb = sample_mixed(rng, len(net), sB)
+    r = ses.evaluate(sdb, net)                     # warmup (maybe compiles)
+    jax.block_until_ready(r["latency_s"])
+    sc0 = ses.compile_stats()["total"]
+    t0 = time.time()
+    r = ses.evaluate(sdb, net)
+    jax.block_until_ready(r["latency_s"])
+    first_s = time.time() - t0
+    reps = 1 if quick else 3
+    t0 = time.time()
+    for _ in range(reps):
+        r = ses.evaluate(sdb, net)
+        jax.block_until_ready(r["latency_s"])
+    ssteady = (time.time() - t0) / reps
+    scompiles = ses.compile_stats()["total"] - sc0
+    points["session_cached"] = {
+        "B": sB,
+        "us_per_design": ssteady / sB * 1e6,
+        "steady_s": ssteady,
+        "first_s_after_warmup": first_s,
+        "compile_count_after_warmup": scompiles,
+        "net_table_builds": ses.stats.net_table_builds,
+        "net_table_hits": ses.stats.net_table_hits,
+    }
+    table.append([f"session B={sB}", f"{ssteady / sB * 1e6:.1f}",
+                  f"{ssteady / sB * 1e6:.1f}", str(sB),
+                  f"{max(first_s - ssteady, 0.0):.2f}", "-"])
+
     payload = {
         "benchmark": "evaluate_batch hot path (xception x vcu110)",
         "backend": backend,
@@ -213,6 +249,7 @@ def run(verbose: bool = True, quick: bool = False,
                 if "4096" in points else True),
             "multinet_single_compile": mcompiles == 1,
             "hybrid_single_compile_across_assignments": hcompiles == 1,
+            "session_reeval_no_new_compiles": scompiles == 0,
         },
     }
     if verbose:

@@ -12,11 +12,10 @@ Builder heuristics are re-implemented from the paper's prose (DESIGN.md §7).
 from __future__ import annotations
 
 from repro.cnn.registry import get_cnn
-from repro.core.batch_eval import evaluate_specs
 from repro.fpga.archs import make_arch
 from repro.fpga.boards import get_board
 
-from .common import fmt_table, save
+from .common import fmt_table, get_session, save
 
 N_CES = 10  # representative instance (see module docstring)
 ARCHS = ("segmented_rr", "segmented", "hybrid")
@@ -25,10 +24,10 @@ ARCHS = ("segmented_rr", "segmented", "hybrid")
 def run(verbose: bool = True) -> dict:
     net = get_cnn("resnet50")
     dev = get_board("zcu102")
-    # one batched call over the three architectures (replaces the three
-    # re-traced scalar evaluations; shares the zoo-wide compile)
-    out = evaluate_specs([make_arch(a, net, N_CES) for a in ARCHS],
-                         net, dev)
+    # one batched session call over the three architectures (shares the
+    # zoo-wide tables and compile with every other benchmark)
+    out = get_session().evaluate([make_arch(a, net, N_CES) for a in ARCHS],
+                                 net, dev)
     res = {arch: dict(latency=float(out["latency_s"][i]),
                       buffers=float(out["buffer_bytes"][i]),
                       accesses=float(out["access_bytes"][i]))

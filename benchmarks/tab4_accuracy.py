@@ -19,18 +19,17 @@ from __future__ import annotations
 import numpy as np
 
 from repro.cnn.registry import CNN_NAMES, get_cnn
-from repro.core.batch_eval import evaluate_specs
-from repro.core.evaluator import evaluate_design
 from repro.fpga.archs import ARCH_NAMES, make_arch
 from repro.fpga.boards import get_board
 
-from .common import fmt_table, save
+from .common import fmt_table, get_session, save
 
 METRICS = ("latency_s", "throughput_ips", "buffer_bytes", "access_bytes")
 
 
 def run(verbose: bool = True) -> dict:
     dev = get_board("vcu108")
+    ses = get_session()
     acc: dict[str, list[float]] = {m: [] for m in METRICS}
     best_match = {m: 0 for m in METRICS}
     n_cases = 0
@@ -38,8 +37,8 @@ def run(verbose: bool = True) -> dict:
         net = get_cnn(cnn)
         specs = [make_arch(a, net, n)
                  for a in ARCH_NAMES for n in range(2, 12)]
-        scalar = [evaluate_design(s, net, dev) for s in specs]
-        batch = evaluate_specs(specs, net, dev)
+        scalar = [ses.evaluate(s, net, dev) for s in specs]
+        batch = ses.evaluate(specs, net, dev)
         svals = {
             "latency_s": np.array([m.latency_s for m in scalar]),
             "throughput_ips": np.array([m.throughput_ips for m in scalar]),

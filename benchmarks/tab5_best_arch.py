@@ -20,12 +20,11 @@ from __future__ import annotations
 import numpy as np
 
 from repro.cnn.registry import CNN_NAMES, get_cnn
-from repro.core.dse import dominating_indices, explore, orient
-from repro.core.evaluator import evaluate_design
+from repro.core.dse import dominating_indices, orient
 from repro.fpga.archs import ARCH_NAMES, make_arch
 from repro.fpga.boards import BOARD_NAMES, DEFAULT_BOARD, get_board
 
-from .common import fmt_table, save
+from .common import fmt_table, get_session, save
 
 METRICS = ("latency", "throughput", "accesses", "buffers")
 TIE = 1.10
@@ -45,15 +44,17 @@ def _search_vs_templates(dse_budget: int,
     random sampling and guided search.  ``template_evals`` carries the
     default-board metrics run() already computed (no re-evaluation)."""
     dev = get_board()
+    ses = get_session()
     out: dict[str, dict] = {}
     for cnn in CNN_NAMES:
         net = get_cnn(cnn)
         temps = template_evals[cnn]
         tpts = np.array([[m.latency_s, float(m.buffer_bytes)]
                          for m in temps])
-        rnd = explore(net, dev, n=dse_budget // 2, family="custom", seed=7)
-        srch = explore(net, dev, n=dse_budget // 2, strategy="search",
-                       seed=3)
+        rnd = ses.explore(net, dse_budget // 2, dev, family="custom",
+                          seed=7)
+        srch = ses.explore(net, dse_budget // 2, dev, strategy="search",
+                           seed=3)
         sp = orient(srch.metrics, ("latency_s", "buffer_bytes"))
         rp = orient(rnd.metrics, ("latency_s", "buffer_bytes"))
         dom_search = sum(bool(len(dominating_indices(sp, t)))
@@ -70,6 +71,7 @@ def _search_vs_templates(dse_budget: int,
 
 
 def run(verbose: bool = True, dse_budget: int = DSE_BUDGET) -> dict:
+    ses = get_session()
     winners: dict[str, dict[str, list]] = {}
     default_board_evals: dict[str, list] = {}
     for board in BOARD_NAMES:
@@ -79,7 +81,7 @@ def run(verbose: bool = True, dse_budget: int = DSE_BUDGET) -> dict:
             evals = {}
             for arch in ARCH_NAMES:
                 for n in range(2, 12):
-                    evals[(arch, n)] = evaluate_design(
+                    evals[(arch, n)] = ses.evaluate(
                         make_arch(arch, net, n), net, dev)
             if board == DEFAULT_BOARD:  # reused by _search_vs_templates
                 default_board_evals[cnn] = list(evals.values())

@@ -8,9 +8,9 @@ import argparse
 
 import numpy as np
 
+from repro.api import Session
 from repro.cnn.registry import get_cnn
-from repro.core.dse import decode_design, dominating_indices, explore, orient
-from repro.core.evaluator import evaluate_design
+from repro.core.dse import decode_design, dominating_indices, orient
 from repro.core.notation import format_spec
 from repro.fpga.archs import make_arch
 from repro.fpga.boards import get_board
@@ -21,19 +21,20 @@ ap.add_argument("--n", type=int, default=20_000,
 args = ap.parse_args()
 
 net, dev = get_cnn("xception"), get_board("vcu110")
+ses = Session(dev)                 # tables + compiles shared by every call
 OBJ = ("throughput_ips", "buffer_bytes")
 
 # templates to beat
-best_seg = max((evaluate_design(make_arch("segmented", net, n), net, dev)
+best_seg = max((ses.evaluate(make_arch("segmented", net, n), net)
                 for n in range(2, 12)), key=lambda m: m.throughput_ips)
 print(f"template best: segmented tp {best_seg.throughput_ips:.1f}/s, "
       f"buffers {best_seg.buffer_bytes/2**20:.2f} MiB")
 
-rnd = explore(net, dev, n=args.n, family="mixed", seed=0, objectives=OBJ)
+rnd = ses.explore(net, args.n, family="mixed", seed=0, objectives=OBJ)
 print(f"random: {rnd.n_evals} designs in {rnd.seconds:.1f}s "
       f"({rnd.per_design_us:.0f} µs/design — paper: 6300 µs)")
-srch = explore(net, dev, n=args.n, family="mixed", strategy="search",
-               seed=1, objectives=OBJ)
+srch = ses.explore(net, args.n, family="mixed", strategy="search",
+                   seed=1, objectives=OBJ)
 print(f"search: {srch.n_evals} designs in {srch.seconds:.1f}s "
       f"({srch.per_design_us:.0f} µs/design incl. search overhead)")
 

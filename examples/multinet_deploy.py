@@ -22,10 +22,11 @@ import argparse
 
 import numpy as np
 
+from repro.api import Session
 from repro.cnn.registry import get_cnn
 from repro.core.dse import decode_design
 from repro.core.dse.pareto import knee_point
-from repro.core.multinet import MultinetSearchConfig, joint_explore
+from repro.core.multinet import MultinetSearchConfig
 from repro.core.notation import format_spec
 from repro.fpga.boards import get_board
 
@@ -37,11 +38,13 @@ args = ap.parse_args()
 names = ("resnet50", "mobilenetv2")
 nets = [get_cnn(n) for n in names]
 dev = get_board("zc706")
+ses = Session(dev)     # one session: every arm reuses the same megabatch
+                       # tables and the one compiled joint program
 cfg = MultinetSearchConfig(pop_size=min(256, args.n), seed=0)
 
 arms = {}
 for arm in ("equal_split", "temporal", "search"):
-    res = joint_explore(nets, dev, args.n, strategy=arm, config=cfg)
+    res = ses.deploy(nets, args.n, strategy=arm, config=cfg)
     arms[arm] = res
     pts = res.front_points()
     best = pts[np.argmin(pts[:, 0])]
@@ -85,7 +88,7 @@ cfg = MultinetSearchConfig(pop_size=min(256, args.n), seed=0,
                            objective="slo", slo_s=slo_s, weights=weights)
 slo_arms = {}
 for arm in ("search", "temporal", "hybrid"):
-    res = joint_explore(nets3, dev, args.n, strategy=arm, config=cfg)
+    res = ses.deploy(nets3, args.n, strategy=arm, config=cfg)
     slo_arms[arm] = res
     best = res.metrics["slo_attainment_dist"].max()
     label = {"search": "pure spatial", "temporal": "pure temporal",

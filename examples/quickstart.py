@@ -1,16 +1,19 @@
 """Quickstart: express, build, and evaluate multiple-CE accelerators with
-MCCM — the paper's §III-B notation end to end.
+MCCM through the one front door — ``repro.api.Session`` — using the
+paper's §III-B notation end to end.
 
     PYTHONPATH=src python examples/quickstart.py
 """
+from repro.api import Session
 from repro.cnn.registry import get_cnn
-from repro.core.evaluator import evaluate_design
 from repro.core.notation import format_spec, parse
 from repro.fpga.archs import make_arch
 from repro.fpga.boards import get_board
 
 net = get_cnn("resnet50")           # paper Table III workload
 dev = get_board("zcu102")           # paper Table II board
+ses = Session(dev)                  # one session per process: owns the
+                                    # tables + compiled-program caches
 
 print(f"CNN: {net.name} ({len(net)} conv layers, "
       f"{net.total_weights/1e6:.1f}M weights); board: {dev.name} "
@@ -28,12 +31,12 @@ designs = {
 print(f"{'design':55s} {'latency':>9s} {'thpt':>7s} {'buffer':>9s} "
       f"{'access':>9s}")
 for name, spec in designs.items():
-    m = evaluate_design(spec, net, dev)
+    m = ses.evaluate(spec, net)     # scalar: full Metrics, exact reference
     print(f"{name:55s} {m.latency_s*1e3:7.1f}ms {m.throughput_ips:6.1f}/s "
           f"{m.buffer_bytes/2**20:7.2f}MiB {m.access_bytes/1e6:7.1f}MB")
 
 # -- 2. fine-grained bottleneck view (paper use case 2) ----------------------
-m = evaluate_design(make_arch("segmented", net, 4), net, dev)
+m = ses.evaluate(make_arch("segmented", net, 4), net)
 print("\nper-segment breakdown (Segmented, 4 CEs):")
 for s in m.per_segment:
     kind = "MEM-bound" if s.mem_s > s.compute_s else "compute-bound"
@@ -41,8 +44,15 @@ for s in m.per_segment:
           f"  util {s.utilization:5.1%}  {kind}")
 
 # -- 3. any custom arrangement in one line -----------------------------------
-custom = parse("{L1-L10:CE1-CE5, L11-L30:CE6, L31-Last:CE7}", len(net))
-m = evaluate_design(custom, net, dev)
-print(f"\ncustom {format_spec(custom, len(net))}:")
+custom = "{L1-L10:CE1-CE5, L11-L30:CE6, L31-Last:CE7}"
+m = ses.evaluate(custom, net)       # notation strings parse in place
+print(f"\ncustom {format_spec(parse(custom, len(net)), len(net))}:")
 print(f"  latency {m.latency_s*1e3:.1f} ms, throughput "
       f"{m.throughput_ips:.1f}/s, buffers {m.buffer_bytes/2**20:.2f} MiB")
+
+# -- 4. the same session batches: one jitted call over many designs ----------
+batch = ses.evaluate(list(designs.values()) + [parse(custom, len(net))], net)
+print(f"\nbatched re-evaluation of all {len(batch['latency_s'])} designs "
+      f"(shared tables + one compiled program):")
+print("  latencies:",
+      " ".join(f"{x*1e3:.1f}ms" for x in batch["latency_s"]))

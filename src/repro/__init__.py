@@ -1,0 +1,34 @@
+"""MCCM reproduction — analytical cost model for multiple-CE CNN
+accelerators, vectorized in JAX.
+
+The supported entry point is the session front door::
+
+    from repro.api import Session
+
+(also re-exported lazily here: ``repro.Session``).  Subsystems live under
+``repro.core`` (model, batch evaluator, DSE, multinet), ``repro.kernels``
+(fused parallelism-search kernel), ``repro.cnn`` / ``repro.fpga`` (the
+workload and board zoos).  See README.md and docs/api.md.
+"""
+from __future__ import annotations
+
+# Everything re-exports lazily (PEP 562): `import repro` stays free of the
+# jax import cost until a session (or the core package) is actually used.
+_LAZY = {
+    "EvalConfig": ".core.session",
+    "Session": ".core.session",
+    "SessionStats": ".core.session",
+    "default_session": ".core.session",
+}
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        value = getattr(importlib.import_module(_LAZY[name], __name__), name)
+        globals()[name] = value        # cache for subsequent lookups
+        return value
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+__all__ = ["EvalConfig", "Session", "SessionStats", "default_session"]

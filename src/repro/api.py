@@ -1,0 +1,22 @@
+"""``repro.api`` — the one front door to the MCCM stack.
+
+    from repro.api import Session
+
+    ses = Session(get_board("zc706"))
+    m = ses.evaluate("{L1-Last:CE1-CE4}", net)       # scalar Metrics
+    out = ses.evaluate([spec_a, spec_b], net)        # batched metric arrays
+    dse = ses.explore(net, n=100_000, strategy="search")
+    dep = ses.deploy([net_a, net_b], n=4096)
+    fut = ses.submit(specs, net)                     # queued, megabatched
+
+One :class:`Session` owns the memoized ``NetTables``/``DeviceTables`` and
+the resolved :class:`EvalConfig`, so every call shares the same compiled
+programs.  Lifecycle, configuration reference and the migration table from
+the deprecated free functions live in ``docs/api.md``.
+"""
+from __future__ import annotations
+
+from .core.session import (EvalConfig, Session, SessionStats,
+                           default_session)
+
+__all__ = ["EvalConfig", "Session", "SessionStats", "default_session"]

@@ -19,11 +19,13 @@ import jax
 CACHE_ENV = "REPRO_JAX_CACHE_DIR"
 
 
-def enable_persistent_compilation_cache() -> str | None:
-    """Enable jax's on-disk compilation cache when ``REPRO_JAX_CACHE_DIR``
-    is set.  Returns the cache dir (or None when disabled).  Idempotent —
+def enable_persistent_compilation_cache(cache_dir: str | None = None
+                                        ) -> str | None:
+    """Enable jax's on-disk compilation cache: an explicit ``cache_dir``
+    wins (what ``EvalConfig.cache_dir`` passes), else ``REPRO_JAX_CACHE_DIR``
+    is read.  Returns the cache dir (or None when disabled).  Idempotent —
     safe to call from every entry point."""
-    cache_dir = os.environ.get(CACHE_ENV)
+    cache_dir = cache_dir or os.environ.get(CACHE_ENV)
     if not cache_dir:
         return None
     jax.config.update("jax_compilation_cache_dir", cache_dir)

@@ -28,6 +28,8 @@ _LAZY = {name: ".dse" for name in (
 _LAZY.update({name: ".batch_eval" for name in (
     "evaluate_batch", "evaluate_specs", "evaluate_specs_multi",
     "make_tables")})
+_LAZY.update({name: ".session" for name in (
+    "EvalConfig", "Session", "SessionStats", "default_session")})
 
 
 def __getattr__(name):
@@ -50,6 +52,9 @@ __all__ = [
     "DSEResult",
     "DesignBatch",
     "DeviceSpec",
+    "EvalConfig",
+    "Session",
+    "SessionStats",
     "LayerResult",
     "Metrics",
     "Network",
@@ -62,6 +67,7 @@ __all__ = [
     "build",
     "build_design",
     "decode_design",
+    "default_session",
     "encode_specs",
     "evaluate",
     "evaluate_batch",

@@ -1,0 +1,20 @@
+"""DeprecationWarning helper for the legacy free-function entry points.
+
+The scattered entry points (``evaluate_design``, ``evaluate_specs``,
+``evaluate_specs_multi``, ``explore``, ``joint_explore``) are kept as thin
+shims over the same implementations the :class:`repro.api.Session` front
+door uses, so migrating is a mechanical rename — results are
+bit-identical (asserted in ``tests/test_session.py``).
+"""
+from __future__ import annotations
+
+import warnings
+
+
+def warn_deprecated(old: str, new: str, *, stacklevel: int = 3) -> None:
+    """Emit the standard migration warning for a legacy entry point."""
+    warnings.warn(
+        f"{old} is deprecated; use {new} (see docs/api.md for the "
+        f"migration table). The shim delegates to the same implementation, "
+        f"so results are bit-identical.",
+        DeprecationWarning, stacklevel=stacklevel)

@@ -763,19 +763,25 @@ def _bucket(b: int, tile: int) -> int:
     return n
 
 
-def evaluate_specs(specs: list[AcceleratorSpec], net: Network,
-                   dev: DeviceSpec, chunk: int = 2048, *,
-                   tables: NetTables | None = None,
-                   backend: str | None = None,
-                   tile: int = DEFAULT_TILE,
-                   pad_to: int | None = None) -> dict[str, np.ndarray]:
-    """Convenience wrapper: specs -> stacked metric arrays (chunked).
+def _evaluate_specs(specs: list[AcceleratorSpec], net: Network,
+                    dev: DeviceSpec, chunk: int = 2048, *,
+                    tables: NetTables | None = None,
+                    backend: str | None = None,
+                    tile: int = DEFAULT_TILE,
+                    pad_to: int | None = None,
+                    fm_tile_rows: int = 2,
+                    design_tile: int = 16) -> dict[str, np.ndarray]:
+    """Implementation behind ``Session.evaluate`` (spec lists) and the
+    deprecated ``evaluate_specs`` shim: specs -> stacked metric arrays
+    (chunked).
 
     Every chunk — including the tail — is padded to a static shape, so a
     100k-design sweep compiles exactly once (and shares that compile with
     every other CNN × board sweep at the same chunk size).  ``pad_to``
-    overrides the bucket (``evaluate_specs_multi`` uses it to share one
+    overrides the bucket (``_evaluate_specs_multi`` uses it to share one
     shape across differently-sized jobs)."""
+    if not specs:
+        raise ValueError("no specs to evaluate (empty design list)")
     tables = make_tables(net) if tables is None else tables
     n_layers = len(net)
     outs: list[dict] = []
@@ -785,16 +791,36 @@ def evaluate_specs(specs: list[AcceleratorSpec], net: Network,
     for i in range(0, n, chunk):
         sub = specs[i:i + chunk]
         batch = _pad_rows(encode_specs(sub, n_layers), pad_to)
-        out = evaluate_batch(batch, tables, dev, backend=backend, tile=tile)
+        out = evaluate_batch(batch, tables, dev, fm_tile_rows,
+                             backend=backend, tile=tile,
+                             design_tile=design_tile)
         outs.append({k: np.asarray(v)[:len(sub)] for k, v in out.items()})
     return {k: np.concatenate([o[k] for o in outs]) for k in outs[0]}
 
 
-def evaluate_specs_multi(jobs, chunk: int = 2048, *,
-                         backend: str | None = None,
-                         tile: int = DEFAULT_TILE) -> list[dict]:
-    """Cross-(CNN × board) megabatch: ``jobs`` is a sequence of
-    ``(specs, net, dev)`` triples; returns one metric dict per job.
+def evaluate_specs(specs: list[AcceleratorSpec], net: Network,
+                   dev: DeviceSpec, chunk: int = 2048, *,
+                   tables: NetTables | None = None,
+                   backend: str | None = None,
+                   tile: int = DEFAULT_TILE,
+                   pad_to: int | None = None) -> dict[str, np.ndarray]:
+    from ._deprecation import warn_deprecated
+    warn_deprecated("evaluate_specs", "repro.api.Session.evaluate")
+    return _evaluate_specs(specs, net, dev, chunk, tables=tables,
+                           backend=backend, tile=tile, pad_to=pad_to)
+
+
+def _evaluate_specs_multi(jobs, chunk: int = 2048, *,
+                          backend: str | None = None,
+                          tile: int = DEFAULT_TILE,
+                          tables=None, fm_tile_rows: int = 2,
+                          design_tile: int = 16) -> list[dict]:
+    """Implementation behind ``Session.submit``'s drain loop and the
+    deprecated ``evaluate_specs_multi`` shim: cross-(CNN × board)
+    megabatch.  ``jobs`` is a sequence of ``(specs, net, dev)`` triples;
+    returns one metric dict per job.  ``tables``, when given, is one
+    prebuilt ``NetTables`` per job (the Session passes its memoized
+    tables here).
 
     Because NetTables / DeviceTables are traced pytrees padded to shared
     shapes, and every job's chunks are padded to one shared bucket, the
@@ -803,8 +829,19 @@ def evaluate_specs_multi(jobs, chunk: int = 2048, *,
     sizes = [min(max(len(specs), 1), chunk) for specs, _, _ in jobs]
     pad_to = max((_bucket(s, tile) for s in sizes), default=tile)
     results = []
-    for specs, net, dev in jobs:
-        results.append(evaluate_specs(specs, net, dev, chunk,
-                                      backend=backend, tile=tile,
-                                      pad_to=pad_to))
+    for i, (specs, net, dev) in enumerate(jobs):
+        results.append(_evaluate_specs(
+            specs, net, dev, chunk,
+            tables=None if tables is None else tables[i],
+            backend=backend, tile=tile, pad_to=pad_to,
+            fm_tile_rows=fm_tile_rows, design_tile=design_tile))
     return results
+
+
+def evaluate_specs_multi(jobs, chunk: int = 2048, *,
+                         backend: str | None = None,
+                         tile: int = DEFAULT_TILE) -> list[dict]:
+    from ._deprecation import warn_deprecated
+    warn_deprecated("evaluate_specs_multi",
+                    "repro.api.Session.submit (or Session.evaluate per job)")
+    return _evaluate_specs_multi(jobs, chunk, backend=backend, tile=tile)

@@ -38,13 +38,15 @@ class DSEResult:
         return orient(self.metrics, self.objectives)[self.front]
 
 
-def explore(net, dev, n: int = 100_000, *,
-            family: str = "custom", seed: int = 0, chunk: int = 4096,
-            strategy: str = "random",
-            objectives: tuple[str, ...] = DEFAULT_OBJECTIVES,
-            config: SearchConfig | None = None,
-            tables=None) -> DSEResult:
-    """Evaluate ``n`` designs and return the sample plus its Pareto front.
+def _explore(net, dev, n: int = 100_000, *,
+             family: str = "custom", seed: int = 0, chunk: int = 4096,
+             strategy: str = "random",
+             objectives: tuple[str, ...] = DEFAULT_OBJECTIVES,
+             config: SearchConfig | None = None,
+             tables=None, backend: str | None = None) -> DSEResult:
+    """Implementation behind ``Session.explore`` and the deprecated
+    ``explore`` shim: evaluate ``n`` designs and return the sample plus
+    its Pareto front.
 
     strategy="random": sample ``family`` ("custom" | "mixed" | "both") and
     evaluate, exactly the paper's use case;  strategy="search": run the
@@ -57,6 +59,8 @@ def explore(net, dev, n: int = 100_000, *,
     A ``config``, when given, is authoritative for the search (only the
     budget comes from ``n``); the ``seed``/``objectives``/``family``
     keywords configure the search only when no config is passed.
+    Caller-provided ``tables`` are used verbatim (never rebuilt); an
+    explicit ``backend`` overrides the env-resolved kernel backend.
     """
     if n < 1:
         raise ValueError(f"n must be >= 1, got {n}")
@@ -68,7 +72,8 @@ def explore(net, dev, n: int = 100_000, *,
                                objectives=tuple(objectives),
                                init_family=family)
         objectives = cfg.objectives
-        res: SearchResult = search(net, dev, cfg, tables=tables)
+        res: SearchResult = search(net, dev, cfg, tables=tables,
+                                   backend=backend)
         return DSEResult(
             batch=res.batch, metrics=res.metrics, seconds=res.seconds,
             per_design_us=res.seconds / max(res.n_evals, 1) * 1e6,
@@ -107,7 +112,8 @@ def explore(net, dev, n: int = 100_000, *,
         batch = sampler(rng, n_layers, b)
         # pad the tail chunk to the full chunk size: a 100k-design sweep
         # compiles exactly once (padded rows are sliced off below)
-        out = evaluate_batch(_pad_rows(batch, min(chunk, n)), tables, dev)
+        out = evaluate_batch(_pad_rows(batch, min(chunk, n)), tables, dev,
+                             backend=backend)
         jax.block_until_ready(out["latency_s"])
         outs.append({k: np.asarray(v)[:b] for k, v in out.items()})
         batches.append(batch)
@@ -119,6 +125,21 @@ def explore(net, dev, n: int = 100_000, *,
     return DSEResult(batch=merged, metrics=metrics, seconds=dt,
                      per_design_us=dt / n * 1e6, strategy="random",
                      n_evals=n, objectives=tuple(objectives), front=front)
+
+
+def explore(net, dev, n: int = 100_000, *,
+            family: str = "custom", seed: int = 0, chunk: int = 4096,
+            strategy: str = "random",
+            objectives: tuple[str, ...] = DEFAULT_OBJECTIVES,
+            config: SearchConfig | None = None,
+            tables=None, backend: str | None = None) -> DSEResult:
+    """Deprecated shim over :func:`_explore` — use
+    :meth:`repro.api.Session.explore` (bit-identical results)."""
+    from .._deprecation import warn_deprecated
+    warn_deprecated("explore", "repro.api.Session.explore")
+    return _explore(net, dev, n, family=family, seed=seed, chunk=chunk,
+                    strategy=strategy, objectives=objectives, config=config,
+                    tables=tables, backend=backend)
 
 
 def best_scalar_index(metrics: dict[str, np.ndarray],

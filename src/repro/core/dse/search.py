@@ -349,8 +349,11 @@ def _initial_pop(rng, n_layers, cfg, n):
 
 
 def search(net, dev, config: SearchConfig | None = None,
-           tables=None) -> SearchResult:
-    """Run the guided loop: sample -> evaluate -> archive -> breed."""
+           tables=None, backend: str | None = None) -> SearchResult:
+    """Run the guided loop: sample -> evaluate -> archive -> breed.
+
+    Caller-provided ``tables`` are used verbatim; an explicit ``backend``
+    overrides the env-resolved kernel backend (what the Session passes)."""
     import jax
     import jax.numpy as jnp
 
@@ -375,7 +378,7 @@ def search(net, dev, config: SearchConfig | None = None,
 
     devt = make_device_tables(dev)
     hint = pes_hint(dev.pes)
-    backend = resolve_backend(None)
+    backend = resolve_backend(backend)
     step = _jitted_step(donate=jax.default_backend() != "cpu")
     statics = dict(objectives=tuple(cfg.objectives), min_ces=cfg.min_ces,
                    max_ces=cfg.max_ces, backend=backend, tile=DEFAULT_TILE,

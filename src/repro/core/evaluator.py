@@ -2,14 +2,36 @@
 
 This is the exact (reference) evaluation path; ``batch_eval`` mirrors it in
 vectorised JAX for design-space exploration.
+
+``evaluate_design`` is kept as a deprecated shim — the supported entry
+point is :meth:`repro.api.Session.evaluate`, which delegates to the same
+implementation (``_evaluate_design``) bit for bit.
 """
 from __future__ import annotations
 
+from ._deprecation import warn_deprecated
 from .accelerator import ConcreteAccelerator, Metrics, evaluate
 from .builder import BuilderOptions, build
 from .device import DeviceSpec
 from .notation import AcceleratorSpec, parse
 from .workload import Network
+
+
+def _evaluate_design(
+    design: str | AcceleratorSpec,
+    net: Network,
+    dev: DeviceSpec,
+    opts: BuilderOptions | None = None,
+    inter_segment_pipelining: bool = True,
+) -> Metrics:
+    """Implementation behind ``Session.evaluate`` (scalar) and the
+    deprecated ``evaluate_design`` shim."""
+    if isinstance(design, str):
+        spec = parse(design, len(net), inter_segment_pipelining=inter_segment_pipelining)
+    else:
+        spec = design
+    acc = build(spec, net, dev, opts)
+    return evaluate(acc)
 
 
 def evaluate_design(
@@ -19,12 +41,9 @@ def evaluate_design(
     opts: BuilderOptions | None = None,
     inter_segment_pipelining: bool = True,
 ) -> Metrics:
-    if isinstance(design, str):
-        spec = parse(design, len(net), inter_segment_pipelining=inter_segment_pipelining)
-    else:
-        spec = design
-    acc = build(spec, net, dev, opts)
-    return evaluate(acc)
+    warn_deprecated("evaluate_design", "repro.api.Session.evaluate")
+    return _evaluate_design(design, net, dev, opts,
+                            inter_segment_pipelining=inter_segment_pipelining)
 
 
 def build_design(
@@ -32,9 +51,12 @@ def build_design(
     net: Network,
     dev: DeviceSpec,
     opts: BuilderOptions | None = None,
+    inter_segment_pipelining: bool = True,
 ) -> ConcreteAccelerator:
+    # forwards inter_segment_pipelining exactly as _evaluate_design does,
+    # so a built accelerator always agrees with its evaluated metrics
     if isinstance(design, str):
-        spec = parse(design, len(net))
+        spec = parse(design, len(net), inter_segment_pipelining=inter_segment_pipelining)
     else:
         spec = design
     return build(spec, net, dev, opts)

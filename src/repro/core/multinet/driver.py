@@ -66,19 +66,26 @@ class JointDSEResult:
         return hypervolume_2d(self.front_points(), ref)
 
 
-def joint_explore(nets, dev, n: int = 4096, *, strategy: str = "search",
-                  seed: int = 0, chunk: int = 512,
-                  objectives: tuple[str, ...] = JOINT_OBJECTIVES,
-                  objective: str = "serving",
-                  config: MultinetSearchConfig | None = None,
-                  weights=None, slo_s=None) -> JointDSEResult:
-    """Evaluate ``n`` deployments of ``nets`` on ``dev`` and return the
-    sample plus its Pareto front over the system objectives.
+def _joint_explore(nets, dev, n: int = 4096, *, strategy: str = "search",
+                   seed: int = 0, chunk: int = 512,
+                   objectives: tuple[str, ...] = JOINT_OBJECTIVES,
+                   objective: str = "serving",
+                   config: MultinetSearchConfig | None = None,
+                   weights=None, slo_s=None, mtables=None,
+                   backend: str | None = None) -> JointDSEResult:
+    """Implementation behind ``Session.deploy`` and the deprecated
+    ``joint_explore`` shim: evaluate ``n`` deployments of ``nets`` on
+    ``dev`` and return the sample plus its Pareto front over the system
+    objectives.
 
     A ``config``, when given, is authoritative for the guided arms (only
     the budget comes from ``n``; strategy still selects mode/freeze).
     ``objective="slo"`` (when ``config`` is None) swaps the front driver
     to graded deadline attainment — see :class:`MultinetSearchConfig`.
+    Caller-provided ``mtables`` (a prebuilt :class:`MultiNetTables`) are
+    used verbatim by EVERY strategy — random included — instead of
+    rebuilding them; an explicit ``backend`` overrides the env-resolved
+    kernel backend.
     """
     if n < 1:
         raise ValueError(f"n must be >= 1, got {n}")
@@ -93,7 +100,9 @@ def joint_explore(nets, dev, n: int = 4096, *, strategy: str = "search",
             over.update(seed=seed, objectives=tuple(objectives),
                         objective=objective, weights=weights, slo_s=slo_s)
         cfg = MultinetSearchConfig(**{**base, **over})
-        res: MultinetSearchResult = joint_search(nets, dev, cfg)
+        res: MultinetSearchResult = joint_search(nets, dev, cfg,
+                                                 mtables=mtables,
+                                                 backend=backend)
         return JointDSEResult(
             designs=res.designs, metrics=res.metrics, seconds=res.seconds,
             per_eval_us=res.seconds / max(res.n_evals, 1) * 1e6,
@@ -104,7 +113,8 @@ def joint_explore(nets, dev, n: int = 4096, *, strategy: str = "search",
         raise ValueError(f"unknown strategy {strategy!r}")
 
     rng = np.random.default_rng(seed)
-    mt = make_multi_tables(nets, weights=weights, slo_s=slo_s)
+    mt = mtables if mtables is not None else make_multi_tables(
+        nets, weights=weights, slo_s=slo_s)
     max_m = mt.max_m
     keep = _KEEP_SYS + _KEEP_MODE["spatial"]
     outs, mds = [], []
@@ -124,7 +134,8 @@ def joint_explore(nets, dev, n: int = 4096, *, strategy: str = "search",
             md = md.take(pad)
             sh = [s[pad] for s in sh]
         out = joint_evaluate(md, mt, dev, pes_shares=sh[0],
-                             buf_shares=sh[1], bw_shares=sh[2])
+                             buf_shares=sh[1], bw_shares=sh[2],
+                             backend=backend)
         outs.append({k: np.asarray(out[k])[:b] for k in keep})
         mds.append(md.take(np.arange(b)))
         done += b
@@ -142,3 +153,21 @@ def joint_explore(nets, dev, n: int = 4096, *, strategy: str = "search",
                           objectives=tuple(objectives), front=front,
                           shares={r: np.concatenate(v)
                                   for r, v in shares.items()})
+
+
+def joint_explore(nets, dev, n: int = 4096, *, strategy: str = "search",
+                  seed: int = 0, chunk: int = 512,
+                  objectives: tuple[str, ...] = JOINT_OBJECTIVES,
+                  objective: str = "serving",
+                  config: MultinetSearchConfig | None = None,
+                  weights=None, slo_s=None, mtables=None,
+                  backend: str | None = None) -> JointDSEResult:
+    """Deprecated shim over :func:`_joint_explore` — use
+    :meth:`repro.api.Session.deploy` (bit-identical results)."""
+    from .._deprecation import warn_deprecated
+    warn_deprecated("joint_explore", "repro.api.Session.deploy")
+    return _joint_explore(nets, dev, n, strategy=strategy, seed=seed,
+                          chunk=chunk, objectives=objectives,
+                          objective=objective, config=config,
+                          weights=weights, slo_s=slo_s, mtables=mtables,
+                          backend=backend)

@@ -277,9 +277,13 @@ def _crossover_assign(rng, a, b, m, frac):
 # the search loop
 # --------------------------------------------------------------------------
 def joint_search(nets, dev, config: MultinetSearchConfig | None = None,
-                 mtables=None) -> MultinetSearchResult:
+                 mtables=None, backend: str | None = None
+                 ) -> MultinetSearchResult:
     """Run the joint loop: sample deployments -> joint evaluate -> archive
-    -> breed designs, budget splits and (hybrid) assignments together."""
+    -> breed designs, budget splits and (hybrid) assignments together.
+
+    Caller-provided ``mtables`` are used verbatim; an explicit ``backend``
+    overrides the env-resolved kernel backend (what the Session passes)."""
     cfg = config or MultinetSearchConfig()
     if cfg.budget < 1 or cfg.pop_size < 1:
         raise ValueError(f"budget and pop_size must be >= 1 "
@@ -375,10 +379,12 @@ def joint_search(nets, dev, config: MultinetSearchConfig | None = None,
                                      pes_shares=subsh["pes"],
                                      buf_shares=subsh["buf"],
                                      bw_shares=subsh["bw"],
+                                     backend=backend,
                                      floors=cfg.floors)
             elif cfg.mode == "temporal":
                 out = joint_evaluate(sub, mt, dev, mode="temporal",
                                      time_shares=subsh["time"],
+                                     backend=backend,
                                      floors=cfg.floors,
                                      reconfig_s=cfg.reconfig_s)
             else:
@@ -388,6 +394,7 @@ def joint_search(nets, dev, config: MultinetSearchConfig | None = None,
                                      buf_shares=subsh["buf"],
                                      bw_shares=subsh["bw"],
                                      time_shares=subsh["time"],
+                                     backend=backend,
                                      floors=cfg.floors,
                                      reconfig_s=cfg.reconfig_s)
             keep = _KEEP_SYS + _KEEP_MODE[cfg.mode]

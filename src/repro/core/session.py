@@ -1,0 +1,521 @@
+"""The front door: one :class:`Session` serves scalar, batch, DSE and
+multinet evaluation behind shared compiled programs.
+
+MCCM's speed claim is per-call — microseconds per design once compiled.
+What erodes it in practice is everything *around* the call: every entry
+point (``evaluate_design``, ``evaluate_specs``, ``explore``,
+``joint_explore``) rebuilding ``NetTables``/``DeviceTables`` unless the
+caller threads ``tables=`` by hand, and each reading its own
+``backend``/``tile``/``chunk`` kwargs and ``REPRO_*`` env vars.  A Session
+is constructed once per process and owns all of it:
+
+* **memoized tables** — ``NetTables`` keyed by ``(net, bucketed max_L)``,
+  ``DeviceTables`` keyed by board, ``MultiNetTables`` keyed by the model
+  set + weights/SLOs, so the one-compile-serves-all property of
+  ``batch_eval``/``joint_eval`` is automatic instead of opt-in;
+* **one config** — :class:`EvalConfig` resolves the kernel backend and the
+  persistent-compile-cache dir ONCE at session creation; every downstream
+  call inherits it (no scattered env reads);
+* **one surface** — :meth:`Session.evaluate` (scalar spec, spec list or
+  ``DesignBatch``, dispatching on input), :meth:`Session.explore` (DSE),
+  :meth:`Session.deploy` (multinet), and :meth:`Session.submit` → Future
+  with a background drain loop that megabatches queued requests through
+  one compiled program (the serve-many-users path).
+
+The legacy free functions remain as deprecated shims over the same
+implementations — bit-identical results (``tests/test_session.py``), one
+``DeprecationWarning``.  Migration table: ``docs/api.md``.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import Future
+from dataclasses import dataclass, fields, replace
+
+import numpy as np
+
+from ..compat import enable_persistent_compilation_cache
+from ..kernels.mccm_eval import resolve_backend
+from .batch_eval import (DEFAULT_TILE, DeviceTables, NetTables,
+                         _evaluate_specs, _evaluate_specs_multi,
+                         bucket_max_L, evaluate_batch, make_device_tables,
+                         make_tables)
+from .device import DeviceSpec
+from .dse.driver import DEFAULT_OBJECTIVES
+from .dse.encoding import DesignBatch
+from .evaluator import _evaluate_design, build_design
+from .notation import AcceleratorSpec, parse
+from .workload import Network
+
+
+# --------------------------------------------------------------------------
+# configuration, resolved once
+# --------------------------------------------------------------------------
+@dataclass(frozen=True)
+class EvalConfig:
+    """Every evaluation knob in one place, resolved at session creation.
+
+    ``backend=None`` reads ``REPRO_MCCM_BACKEND`` (falling back to auto:
+    pallas on TPU, ref elsewhere) and pins the result; ``cache_dir=None``
+    reads ``REPRO_JAX_CACHE_DIR``.  Both env vars are consulted exactly
+    once — at :class:`Session` construction — instead of per call.
+    """
+
+    #: parallelism-search kernel backend ("ref" | "pallas" |
+    #: "pallas_interpret"); None resolves the env var / auto default
+    backend: str | None = None
+    #: design-tile width of the lax.map hot loop
+    tile: int = DEFAULT_TILE
+    #: feature-map tile rows of Eq. 4's double buffers.  Applies to the
+    #: evaluate()/submit() paths; the explore()/deploy() search loops pin
+    #: the engine default (2) so their compiled programs stay shared
+    fm_tile_rows: int = 2
+    #: VMEM design-tile width inside the fused kernel (same scope as
+    #: ``fm_tile_rows``)
+    design_tile: int = 16
+    #: spec-list chunking of evaluate()/submit() (shapes pad per chunk)
+    chunk: int = 2048
+    #: model-axis padding of deploy()'s MultiNetTables; None = the
+    #: multinet default (DEFAULT_MAX_M)
+    max_m: int | None = None
+    #: persistent jit-cache directory; None resolves REPRO_JAX_CACHE_DIR
+    cache_dir: str | None = None
+    #: submit() megabatching window: how long the drain loop lingers after
+    #: the first queued request before evaluating, so concurrent callers
+    #: land in one compiled dispatch
+    linger_s: float = 0.002
+
+    def resolved(self) -> "EvalConfig":
+        """Pin the env-dependent fields (backend, cache_dir) to concrete
+        values — called once by :class:`Session`."""
+        import os
+
+        from ..compat import CACHE_ENV
+        return replace(
+            self,
+            backend=resolve_backend(self.backend),
+            cache_dir=self.cache_dir or os.environ.get(CACHE_ENV) or None)
+
+
+@dataclass
+class SessionStats:
+    """Host-side counters of what a session reused vs rebuilt."""
+
+    net_table_builds: int = 0
+    net_table_hits: int = 0
+    device_table_builds: int = 0
+    device_table_hits: int = 0
+    multi_table_builds: int = 0
+    multi_table_hits: int = 0
+    scalar_evals: int = 0
+    batch_designs: int = 0
+    explore_calls: int = 0
+    deploy_calls: int = 0
+    submits: int = 0
+    megabatches: int = 0
+    megabatch_requests: int = 0
+
+    def as_dict(self) -> dict[str, int]:
+        return {f.name: getattr(self, f.name) for f in fields(self)}
+
+
+class _Request:
+    """One queued :meth:`Session.submit` unit of work."""
+
+    __slots__ = ("specs", "net", "dev", "future", "scalar")
+
+    def __init__(self, specs, net, dev, future, scalar):
+        self.specs = specs
+        self.net = net
+        self.dev = dev
+        self.future = future
+        self.scalar = scalar
+
+
+# --------------------------------------------------------------------------
+# the session
+# --------------------------------------------------------------------------
+class Session:
+    """One front door for every MCCM evaluation mode.
+
+    Construct once per process (optionally with a default board) and call
+    :meth:`evaluate`, :meth:`explore`, :meth:`deploy` or :meth:`submit`;
+    tables and compiled programs are shared across all of them.
+
+    >>> ses = Session(get_board("zc706"))
+    >>> ses.evaluate("{L1-Last:CE1-CE4}", net)            # scalar Metrics
+    >>> ses.evaluate([spec_a, spec_b], net)               # metric arrays
+    >>> ses.explore(net, n=100_000, strategy="search")    # DSE front
+    >>> ses.deploy([net_a, net_b], n=4096)                # multinet front
+    >>> ses.submit(specs, net).result()                   # queued/megabatched
+    """
+
+    def __init__(self, dev: DeviceSpec | None = None, *,
+                 config: EvalConfig | None = None, **overrides):
+        base = config if config is not None else EvalConfig()
+        if overrides:
+            base = replace(base, **overrides)
+        self.config = base.resolved()
+        if self.config.cache_dir:
+            enable_persistent_compilation_cache(self.config.cache_dir)
+        self.default_device = dev
+        self.stats = SessionStats()
+        # memoization has its own lock (held across check+build+count, so
+        # the drain thread and callers can't race a duplicate build); the
+        # condition variable below is the submit queue's only
+        self._table_lock = threading.Lock()
+        self._net_tables: dict[tuple, NetTables] = {}
+        self._dev_tables: dict[DeviceSpec, DeviceTables] = {}
+        self._multi_tables: dict[tuple, object] = {}
+        self._cv = threading.Condition()
+        self._pending: list[_Request] = []
+        self._worker: threading.Thread | None = None
+        self._closed = False
+
+    # ---- lifecycle -------------------------------------------------------
+    def __enter__(self) -> "Session":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def close(self) -> None:
+        """Flush the submit queue and stop the background drain loop.
+        Idempotent; the session's caches stay usable afterwards, only
+        :meth:`submit` is refused."""
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+        if self._worker is not None:
+            self._worker.join(timeout=60.0)
+            self._worker = None
+        self.drain()
+
+    # ---- memoized tables -------------------------------------------------
+    @staticmethod
+    def _net_key(net: Network) -> tuple:
+        # content fingerprint, not identity: two builds of the same zoo
+        # entry share tables, while same-named custom nets don't collide.
+        # The per-layer tuple is order-sensitive — layer order is
+        # load-bearing for segmentation, so permuted nets must not alias.
+        layers = hash(tuple((l.macs, l.weights_size, l.ifm_size,
+                             l.ofm_size, l.residual) for l in net))
+        return (net.name, len(net), net.total_macs, layers)
+
+    def _device(self, dev: DeviceSpec | None) -> DeviceSpec:
+        dev = dev if dev is not None else self.default_device
+        if dev is None:
+            raise ValueError("no device: pass dev= or construct the "
+                             "Session with a default board")
+        return dev
+
+    def tables(self, net: Network, max_L: int | None = None) -> NetTables:
+        """Memoized ``NetTables`` for ``net``, keyed by (net, bucketed
+        max_L) — every evaluate/explore call on the same net reuses one
+        traced pytree, so they also share one compiled program."""
+        if isinstance(net, NetTables):
+            return net
+        L = len(net)
+        bucket = bucket_max_L(L) if max_L is None \
+            else (max_L if L <= max_L else bucket_max_L(L, base=max_L))
+        key = self._net_key(net) + (bucket,)
+        with self._table_lock:
+            hit = self._net_tables.get(key)
+            if hit is not None:
+                self.stats.net_table_hits += 1
+                return hit
+            built = make_tables(net, max_L=bucket)
+            self._net_tables[key] = built
+            self.stats.net_table_builds += 1
+            return built
+
+    def device_tables(self, dev: DeviceSpec | None = None) -> DeviceTables:
+        """Memoized ``DeviceTables`` for a board."""
+        dev = self._device(dev)
+        with self._table_lock:
+            hit = self._dev_tables.get(dev)
+            if hit is not None:
+                self.stats.device_table_hits += 1
+                return hit
+            built = make_device_tables(dev)
+            self._dev_tables[dev] = built
+            self.stats.device_table_builds += 1
+            return built
+
+    def multi_tables(self, nets, *, weights=None, slo_s=None,
+                     max_m: int | None = None):
+        """Memoized ``MultiNetTables`` for a model set (+ request weights
+        and per-model SLOs) — what :meth:`deploy` evaluates against.  An
+        explicit ``max_m`` wins over the config (deploy passes the search
+        config's, matching the legacy joint_search semantics)."""
+        from .multinet.joint_eval import make_multi_tables
+        from .multinet.partition import DEFAULT_MAX_M
+
+        if max_m is None:
+            max_m = self.config.max_m or DEFAULT_MAX_M
+        wkey = None if weights is None else tuple(
+            float(w) for w in np.atleast_1d(np.asarray(weights, np.float64)))
+        skey = None if slo_s is None else tuple(
+            float(s) for s in np.atleast_1d(np.asarray(slo_s, np.float64)))
+        key = (tuple(self._net_key(n) for n in nets), wkey, skey, max_m)
+        with self._table_lock:
+            hit = self._multi_tables.get(key)
+            if hit is not None:
+                self.stats.multi_table_hits += 1
+                return hit
+            built = make_multi_tables(list(nets), weights=weights,
+                                      slo_s=slo_s, max_m=max_m)
+            self._multi_tables[key] = built
+            self.stats.multi_table_builds += 1
+            return built
+
+    # ---- evaluation ------------------------------------------------------
+    def _parse(self, design, net: Network,
+               inter_segment_pipelining: bool) -> AcceleratorSpec:
+        if isinstance(design, str):
+            return parse(design, len(net),
+                         inter_segment_pipelining=inter_segment_pipelining)
+        return design
+
+    def evaluate(self, designs, net: Network, dev: DeviceSpec | None = None,
+                 *, inter_segment_pipelining: bool = True):
+        """Evaluate design(s) of ``net`` on ``dev``, dispatching on input:
+
+        * a single spec / notation string -> the scalar reference path,
+          returning a full :class:`Metrics` (with per-segment detail) —
+          bit-identical to the deprecated ``evaluate_design``;
+        * a list/tuple of specs or strings -> the chunked batch path,
+          returning ``{metric: np.ndarray}`` — bit-identical to the
+          deprecated ``evaluate_specs``;
+        * a ``DesignBatch`` -> the jitted hot path verbatim, returning
+          ``{metric: jnp.ndarray}`` (arrays stay on device).
+
+        ``inter_segment_pipelining`` applies to notation strings only
+        (specs already carry the flag).
+        """
+        dev = self._device(dev)
+        if isinstance(designs, (str, AcceleratorSpec)):
+            self.stats.scalar_evals += 1
+            return _evaluate_design(
+                designs, net, dev,
+                inter_segment_pipelining=inter_segment_pipelining)
+        cfg = self.config
+        if isinstance(designs, DesignBatch):
+            self.stats.batch_designs += designs.batch
+            return evaluate_batch(
+                designs, self.tables(net), self.device_tables(dev),
+                fm_tile_rows=cfg.fm_tile_rows, backend=cfg.backend,
+                tile=cfg.tile, design_tile=cfg.design_tile)
+        specs = [self._parse(d, net, inter_segment_pipelining)
+                 for d in designs]
+        if not specs:
+            raise ValueError("no designs to evaluate (empty list)")
+        self.stats.batch_designs += len(specs)
+        return _evaluate_specs(specs, net, self.device_tables(dev),
+                               cfg.chunk, tables=self.tables(net),
+                               backend=cfg.backend, tile=cfg.tile,
+                               fm_tile_rows=cfg.fm_tile_rows,
+                               design_tile=cfg.design_tile)
+
+    def build(self, design, net: Network, dev: DeviceSpec | None = None,
+              *, opts=None, inter_segment_pipelining: bool = True):
+        """Build the :class:`ConcreteAccelerator` for a design (the object
+        ``evaluate`` scores — same parse flags, so they always agree)."""
+        return build_design(design, net, self._device(dev), opts,
+                            inter_segment_pipelining=inter_segment_pipelining)
+
+    # ---- DSE -------------------------------------------------------------
+    def explore(self, net: Network, n: int = 100_000,
+                dev: DeviceSpec | None = None, *, strategy: str = "random",
+                family: str = "custom", seed: int = 0, chunk: int = 4096,
+                objectives: tuple[str, ...] = DEFAULT_OBJECTIVES,
+                config=None):
+        """Single-model DSE (random sweep or guided search) through the
+        session's cached tables — bit-identical to the deprecated
+        ``explore`` free function at equal arguments."""
+        from .dse.driver import _explore
+
+        self.stats.explore_calls += 1
+        return _explore(net, self._device(dev), n, family=family, seed=seed,
+                        chunk=chunk, strategy=strategy,
+                        objectives=objectives, config=config,
+                        tables=self.tables(net),
+                        backend=self.config.backend)
+
+    def deploy(self, nets, n: int = 4096, dev: DeviceSpec | None = None, *,
+               strategy: str = "search", seed: int = 0, chunk: int = 512,
+               objectives: tuple[str, ...] | None = None,
+               objective: str = "serving", config=None, weights=None,
+               slo_s=None):
+        """Multi-CNN co-scheduling DSE (spatial / temporal / hybrid arms)
+        through the session's cached ``MultiNetTables`` — bit-identical to
+        the deprecated ``joint_explore`` at equal arguments."""
+        from .multinet.driver import _joint_explore
+        from .multinet.search import JOINT_OBJECTIVES
+
+        # the tables must carry the same weights/SLOs/max_m the search
+        # will use, whether they arrive via config or via the keywords
+        w = config.weights if config is not None else weights
+        s = config.slo_s if config is not None else slo_s
+        mm = config.max_m if config is not None else None
+        mt = self.multi_tables(nets, weights=w, slo_s=s, max_m=mm)
+        self.stats.deploy_calls += 1
+        return _joint_explore(
+            list(nets), self._device(dev), n, strategy=strategy, seed=seed,
+            chunk=chunk,
+            objectives=JOINT_OBJECTIVES if objectives is None
+            else objectives,
+            objective=objective, config=config, weights=weights,
+            slo_s=slo_s, mtables=mt, backend=self.config.backend)
+
+    # ---- queued requests (the serve-many-users path) ---------------------
+    def submit(self, designs, net: Network,
+               dev: DeviceSpec | None = None, *,
+               inter_segment_pipelining: bool = True) -> Future:
+        """Queue an evaluation request; returns a ``Future``.
+
+        A background drain loop collects everything queued within the
+        config's ``linger_s`` window and megabatches it through ONE
+        compiled program (``_evaluate_specs_multi`` semantics: all jobs
+        pad to a shared shape, so mixed CNNs × boards still reuse the same
+        compile).  The future resolves to ``{metric: np.ndarray}`` over
+        the submitted specs; a single spec/string resolves to
+        ``{metric: float}``.
+        """
+        scalar = isinstance(designs, (str, AcceleratorSpec))
+        raw = [designs] if scalar else list(designs)
+        specs = [self._parse(d, net, inter_segment_pipelining) for d in raw]
+        if not specs:
+            # reject here: an empty job inside a megabatch would fail the
+            # whole batch's futures, not just this one
+            raise ValueError("no designs to submit (empty list)")
+        req = _Request(specs, net, self._device(dev), Future(), scalar)
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("Session is closed")
+            self._pending.append(req)
+            if self._worker is None:
+                self._worker = threading.Thread(
+                    target=self._drain_loop, name="repro-session-drain",
+                    daemon=True)
+                self._worker.start()
+            self._cv.notify_all()
+        self.stats.submits += 1
+        return req.future
+
+    def drain(self) -> int:
+        """Synchronously megabatch everything currently queued (also what
+        the background loop runs); returns the number of requests served."""
+        with self._cv:
+            reqs, self._pending = self._pending, []
+        if reqs:
+            self._run_megabatch(reqs)
+        return len(reqs)
+
+    def _drain_loop(self) -> None:
+        while True:
+            with self._cv:
+                while not self._pending and not self._closed:
+                    self._cv.wait()
+                if self._closed and not self._pending:
+                    return
+            # linger so concurrent submitters land in the same megabatch
+            time.sleep(self.config.linger_s)
+            self.drain()
+
+    def _deliver(self, r: _Request, out: dict) -> None:
+        if not r.future.set_running_or_notify_cancel():
+            return
+        if r.scalar:
+            out = {k: float(v[0]) for k, v in out.items()}
+        r.future.set_result(out)
+
+    def _eval_one(self, r: _Request) -> dict:
+        cfg = self.config
+        return _evaluate_specs(r.specs, r.net, self.device_tables(r.dev),
+                               cfg.chunk, tables=self.tables(r.net),
+                               backend=cfg.backend, tile=cfg.tile,
+                               fm_tile_rows=cfg.fm_tile_rows,
+                               design_tile=cfg.design_tile)
+
+    def _run_megabatch(self, reqs: list[_Request]) -> None:
+        cfg = self.config
+        try:
+            # memoized tables for BOTH axes: nets and boards
+            jobs = [(r.specs, r.net, self.device_tables(r.dev))
+                    for r in reqs]
+            tabs = [self.tables(r.net) for r in reqs]
+            results = _evaluate_specs_multi(jobs, cfg.chunk,
+                                            backend=cfg.backend,
+                                            tile=cfg.tile, tables=tabs,
+                                            fm_tile_rows=cfg.fm_tile_rows,
+                                            design_tile=cfg.design_tile)
+        except BaseException:  # noqa: BLE001 — isolate the bad job(s)
+            # one malformed request must not poison its co-queued peers:
+            # retry per request so each future gets ITS OWN result/error
+            for r in reqs:
+                try:
+                    out = self._eval_one(r)
+                except BaseException as e:  # noqa: BLE001
+                    if r.future.set_running_or_notify_cancel():
+                        r.future.set_exception(e)
+                else:
+                    self._deliver(r, out)
+                    self.stats.megabatch_requests += 1
+            return
+        self.stats.megabatches += 1
+        self.stats.megabatch_requests += len(reqs)
+        for r, out in zip(reqs, results):
+            self._deliver(r, out)
+
+    # ---- observability ---------------------------------------------------
+    def compile_stats(self) -> dict[str, int]:
+        """Compiled-program counts of every jitted entry point the session
+        drives.  ``total`` is the compile-miss counter the cache-reuse
+        tests assert on: warm calls must not move it."""
+        import importlib
+
+        from . import batch_eval
+
+        # the package re-exports a `search` FUNCTION, shadowing the
+        # submodule attribute — resolve the module explicitly
+        dse_search = importlib.import_module(".dse.search", __package__)
+        counts = {
+            "evaluate_batch": batch_eval._evaluate_jit._cache_size(),
+            "dse_step": sum(f._cache_size()
+                            for f in dse_search._STEP_CACHE.values()),
+        }
+        try:
+            from .multinet import joint_eval as je
+            counts["joint_spatial"] = je._joint_spatial_jit._cache_size()
+            counts["joint_temporal"] = je._joint_temporal_jit._cache_size()
+            counts["joint_hybrid"] = je._joint_hybrid_jit._cache_size()
+        except ImportError:  # pragma: no cover — multinet always ships
+            pass
+        counts["total"] = sum(counts.values())
+        return counts
+
+
+# --------------------------------------------------------------------------
+# the process-wide default session
+# --------------------------------------------------------------------------
+_DEFAULT_LOCK = threading.Lock()
+_DEFAULT: Session | None = None
+
+
+def default_session(**overrides) -> Session:
+    """The process-wide shared session (what benchmarks and examples use).
+
+    Created on first call; ``overrides`` (EvalConfig fields or ``dev=``)
+    apply only then — asking for different settings once it exists is an
+    error, construct a private :class:`Session` instead."""
+    global _DEFAULT
+    with _DEFAULT_LOCK:
+        if _DEFAULT is None:
+            _DEFAULT = Session(**overrides)
+        elif overrides:
+            raise ValueError(
+                "the default session already exists; construct "
+                "Session(...) directly for different settings")
+        return _DEFAULT

@@ -14,8 +14,9 @@ import sys
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 #: markdown files whose links are checked (all must exist)
-DOC_FILES = ("README.md", "docs/index.md", "docs/architecture.md",
-             "docs/perf.md", "docs/dse.md", "docs/multinet.md")
+DOC_FILES = ("README.md", "docs/index.md", "docs/api.md",
+             "docs/architecture.md", "docs/perf.md", "docs/dse.md",
+             "docs/multinet.md")
 
 _LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 #: `path`-style mentions of repo files in the docs' tables/prose

@@ -1,0 +1,327 @@
+"""The Session front door: shared table/compile caches across scalar,
+batch, DSE and multinet calls; deprecated shims stay bit-identical."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.api import EvalConfig, Session
+from repro.cnn.registry import get_cnn
+from repro.core.dse import sample_mixed
+from repro.core.dse.search import SearchConfig
+from repro.core.multinet import MultinetSearchConfig
+from repro.fpga.archs import ARCH_NAMES, make_arch
+from repro.fpga.boards import get_board
+
+NET = "mobilenetv2"
+BOARD = "zc706"
+
+
+def _specs(net, n_ces=4):
+    return [make_arch(a, net, n_ces) for a in ARCH_NAMES]
+
+
+# --------------------------------------------------------------------------
+# the flagship: evaluate -> explore -> deploy share compiled programs
+# --------------------------------------------------------------------------
+def test_session_shares_compiles_across_all_entry_points():
+    """After one warmup round, a second evaluate -> explore (random +
+    search) -> deploy round on the same net/board adds ZERO compiles and
+    ZERO table builds — the one-compile-serves-all property, automatic."""
+    net, net2 = get_cnn(NET), get_cnn("resnet50")
+    dev = get_board(BOARD)
+    ses = Session(dev)
+
+    def round_trip(seed):
+        ses.evaluate("{L1-Last:CE1-CE4}", net)            # scalar
+        ses.evaluate(_specs(net), net)                    # batched specs
+        ses.explore(net, n=256, chunk=256, seed=seed)     # random sweep
+        ses.explore(net, n=256, strategy="search", seed=seed,
+                    config=SearchConfig(pop_size=128, seed=seed))
+        ses.deploy([net, net2], n=64, seed=seed,
+                   config=MultinetSearchConfig(pop_size=32, seed=seed))
+
+    round_trip(0)                                         # warmup
+    compiles = ses.compile_stats()
+    builds = (ses.stats.net_table_builds, ses.stats.device_table_builds,
+              ses.stats.multi_table_builds)
+    round_trip(1)                                         # warm round
+    assert ses.compile_stats() == compiles, \
+        "warm Session calls must not mint new compiled programs"
+    assert (ses.stats.net_table_builds, ses.stats.device_table_builds,
+            ses.stats.multi_table_builds) == builds, \
+        "warm Session calls must not rebuild tables"
+    assert ses.stats.net_table_hits > 0
+    assert ses.stats.multi_table_hits > 0
+
+
+def test_session_tables_memoized_by_bucket():
+    net = get_cnn(NET)
+    ses = Session(get_board(BOARD))
+    t1 = ses.tables(net)
+    t2 = ses.tables(net)
+    assert t1 is t2
+    assert ses.stats.net_table_builds == 1
+    assert ses.stats.net_table_hits == 1
+    # a different explicit bucket is a different (memoized) entry
+    t3 = ses.tables(net, max_L=192)
+    assert t3 is not t1 and t3.max_L == 192
+    assert ses.tables(net, max_L=192) is t3
+
+
+# --------------------------------------------------------------------------
+# deprecated shims: warn once, return bit-identical results
+# --------------------------------------------------------------------------
+def test_evaluate_design_shim_warns_and_matches():
+    from repro.core.evaluator import evaluate_design
+
+    net, dev = get_cnn(NET), get_board(BOARD)
+    ses = Session(dev)
+    spec = "{L1-L20:CE1, L21-Last:CE2}"
+    with pytest.warns(DeprecationWarning, match="Session.evaluate"):
+        legacy = evaluate_design(spec, net, dev)
+    m = ses.evaluate(spec, net)
+    assert (m.latency_s, m.throughput_ips, m.buffer_bytes,
+            m.access_bytes) == (legacy.latency_s, legacy.throughput_ips,
+                                legacy.buffer_bytes, legacy.access_bytes)
+
+
+def test_evaluate_specs_shims_warn_and_match_bitwise():
+    from repro.core.batch_eval import evaluate_specs, evaluate_specs_multi
+
+    net, dev = get_cnn(NET), get_board(BOARD)
+    ses = Session(dev)
+    specs = _specs(net)
+    with pytest.warns(DeprecationWarning, match="Session.evaluate"):
+        legacy = evaluate_specs(specs, net, dev)
+    got = ses.evaluate(specs, net)
+    for k in legacy:
+        np.testing.assert_array_equal(got[k], legacy[k], err_msg=k)
+
+    jobs = [(specs, net, dev), (_specs(net, 6), net, dev)]
+    with pytest.warns(DeprecationWarning, match="Session.submit"):
+        legacy_multi = evaluate_specs_multi(jobs)
+    futs = [ses.submit(s, n, d) for s, n, d in jobs]
+    for fut, want in zip(futs, legacy_multi):
+        out = fut.result(timeout=300)
+        for k in want:
+            np.testing.assert_array_equal(out[k], want[k], err_msg=k)
+    ses.close()
+
+
+def test_explore_shim_warns_and_matches_bitwise():
+    from repro.core.dse import explore
+
+    net, dev = get_cnn(NET), get_board(BOARD)
+    ses = Session(dev)
+    with pytest.warns(DeprecationWarning, match="Session.explore"):
+        legacy = explore(net, dev, n=128, chunk=128, seed=5)
+    got = ses.explore(net, n=128, chunk=128, seed=5)
+    for k in legacy.metrics:
+        np.testing.assert_array_equal(got.metrics[k], legacy.metrics[k],
+                                      err_msg=k)
+    np.testing.assert_array_equal(got.front, legacy.front)
+
+
+def test_joint_explore_shim_warns_and_matches_bitwise():
+    from repro.core.multinet import joint_explore
+
+    nets = [get_cnn(NET), get_cnn("resnet50")]
+    dev = get_board(BOARD)
+    ses = Session(dev)
+    with pytest.warns(DeprecationWarning, match="Session.deploy"):
+        legacy = joint_explore(nets, dev, 32, strategy="random", seed=2,
+                               chunk=32)
+    got = ses.deploy(nets, 32, strategy="random", seed=2, chunk=32)
+    for k in legacy.metrics:
+        np.testing.assert_array_equal(got.metrics[k], legacy.metrics[k],
+                                      err_msg=k)
+
+
+# --------------------------------------------------------------------------
+# satellite regressions
+# --------------------------------------------------------------------------
+def test_build_design_forwards_inter_segment_pipelining():
+    """A built accelerator must agree with the evaluated metrics for the
+    same arguments (build_design used to drop the flag on parse)."""
+    from repro.core.accelerator import evaluate
+    from repro.core.evaluator import _evaluate_design, build_design
+
+    net, dev = get_cnn(NET), get_board(BOARD)
+    design = "{L1-L20:CE1, L21-Last:CE2}"
+    for isp in (True, False):
+        acc = build_design(design, net, dev,
+                           inter_segment_pipelining=isp)
+        assert acc.spec.inter_segment_pipelining is isp
+        want = _evaluate_design(design, net, dev,
+                                inter_segment_pipelining=isp)
+        assert evaluate(acc).throughput_ips == want.throughput_ips
+    # the flag is load-bearing for this 2-segment design
+    on = _evaluate_design(design, net, dev, inter_segment_pipelining=True)
+    off = _evaluate_design(design, net, dev, inter_segment_pipelining=False)
+    assert on.throughput_ips != off.throughput_ips
+
+
+def test_explore_random_respects_caller_tables(monkeypatch):
+    """explore(strategy='random') must use a caller-provided tables=
+    verbatim instead of calling make_tables again."""
+    import repro.core.batch_eval as be
+    from repro.core.dse.driver import _explore
+
+    net, dev = get_cnn(NET), get_board(BOARD)
+    tables = be.make_tables(net)
+    calls = {"n": 0}
+    real = be.make_tables
+
+    def counting(*a, **k):
+        calls["n"] += 1
+        return real(*a, **k)
+
+    monkeypatch.setattr(be, "make_tables", counting)
+    res = _explore(net, dev, 64, chunk=64, tables=tables)
+    assert res.n_evals == 64
+    assert calls["n"] == 0, "explore rebuilt tables despite tables="
+
+
+def test_joint_explore_random_respects_caller_mtables(monkeypatch):
+    """joint_explore's random arm (the audit target) must honor mtables=."""
+    import repro.core.multinet.driver as md
+    from repro.core.multinet.driver import _joint_explore
+    from repro.core.multinet.joint_eval import make_multi_tables
+
+    nets = [get_cnn(NET), get_cnn("resnet50")]
+    dev = get_board(BOARD)
+    mt = make_multi_tables(nets)
+    calls = {"n": 0}
+
+    def counting(*a, **k):
+        calls["n"] += 1
+        return make_multi_tables(*a, **k)
+
+    monkeypatch.setattr(md, "make_multi_tables", counting)
+    res = _joint_explore(nets, dev, 32, strategy="random", chunk=32,
+                         mtables=mt)
+    assert res.n_evals == 32
+    assert calls["n"] == 0, "joint_explore rebuilt tables despite mtables="
+
+
+# --------------------------------------------------------------------------
+# config + submit machinery
+# --------------------------------------------------------------------------
+def test_eval_config_resolved_once(monkeypatch):
+    monkeypatch.setenv("REPRO_MCCM_BACKEND", "pallas_interpret")
+    ses = Session(get_board(BOARD))
+    assert ses.config.backend == "pallas_interpret"
+    # explicit config wins over the env var
+    assert Session(get_board(BOARD),
+                   backend="ref").config.backend == "ref"
+    monkeypatch.delenv("REPRO_MCCM_BACKEND")
+    assert Session(get_board(BOARD)).config.backend in ("ref", "pallas")
+    with pytest.raises(ValueError):
+        EvalConfig(backend="nope").resolved()
+
+
+def test_session_requires_a_device():
+    ses = Session()
+    with pytest.raises(ValueError, match="no device"):
+        ses.evaluate("{L1-Last:CE1-CE4}", get_cnn(NET))
+    # per-call dev works without a default
+    m = ses.evaluate("{L1-Last:CE1-CE4}", get_cnn(NET), get_board(BOARD))
+    assert m.latency_s > 0
+
+
+def test_empty_design_lists_rejected_cleanly():
+    net, dev = get_cnn(NET), get_board(BOARD)
+    ses = Session(dev)
+    with pytest.raises(ValueError, match="empty"):
+        ses.evaluate([], net)
+    with pytest.raises(ValueError, match="empty"):
+        ses.submit([], net)
+
+
+def test_config_knobs_consistent_across_batch_paths():
+    """fm_tile_rows is honored by BOTH batch entry forms — the spec-list
+    path and the DesignBatch path return the same metrics for the same
+    design under a non-default config."""
+    net, dev = get_cnn(NET), get_board(BOARD)
+    ses = Session(dev, fm_tile_rows=4)
+    specs = _specs(net)
+    from repro.core.batch_eval import encode_specs
+
+    via_list = ses.evaluate(specs, net)
+    via_db = ses.evaluate(encode_specs(specs, len(net)), net)
+    for k in via_list:
+        np.testing.assert_array_equal(np.asarray(via_list[k]),
+                                      np.asarray(via_db[k]), err_msg=k)
+
+
+def test_submit_isolates_failing_jobs():
+    """One malformed request must fail ITS future only — co-queued valid
+    requests still resolve (the megabatch falls back to per-job eval)."""
+    from repro.core.notation import parse
+
+    net, dev = get_cnn(NET), get_board(BOARD)
+    ses = Session(dev, linger_s=0.2)      # wide window: both jobs batch
+    # 13 segments exceeds NS=12 — passes submit, fails at encode time
+    bad = parse("{" + ", ".join(f"L{i + 1}:CE{i + 1}" for i in range(13))
+                + f", L14-Last:CE14}}", len(net))
+    good = _specs(net)
+    f_bad = ses.submit([bad], net)
+    f_good = ses.submit(good, net)
+    out = f_good.result(timeout=300)
+    want = ses.evaluate(good, net)
+    for k in want:
+        np.testing.assert_array_equal(out[k], want[k], err_msg=k)
+    with pytest.raises(ValueError, match="segments"):
+        f_bad.result(timeout=300)
+    ses.close()
+
+
+def test_deploy_honors_config_max_m():
+    """config.max_m reaches the session's MultiNetTables (5 models need
+    max_m=5; the session default of 4 must not override it)."""
+    nets = [get_cnn(n) for n in ("mobilenetv2", "resnet50", "densenet121",
+                                 "xception", "vgg16")]
+    ses = Session(get_board("vcu110"))
+    with pytest.raises(ValueError, match="max_m"):
+        ses.deploy(nets, 8, strategy="random", seed=0, chunk=8)
+    cfg = MultinetSearchConfig(pop_size=8, seed=0, max_m=5)
+    res = ses.deploy(nets, 8, strategy="random", seed=0, chunk=8,
+                     config=cfg)
+    assert res.n_evals == 8 and res.n_models == 5
+    assert np.isfinite(res.metrics["worst_latency_s"]).all()
+
+
+def test_submit_megabatches_and_scalar_result():
+    net, dev = get_cnn(NET), get_board(BOARD)
+    ses = Session(dev)
+    specs = _specs(net)
+    want = ses.evaluate(specs, net)
+    futs = [ses.submit(specs, net) for _ in range(3)]
+    futs.append(ses.submit("{L1-Last:CE1-CE4}", net))
+    outs = [f.result(timeout=300) for f in futs]
+    for out in outs[:3]:
+        for k in want:
+            np.testing.assert_array_equal(out[k], want[k], err_msg=k)
+    scalar = outs[-1]
+    assert isinstance(scalar["latency_s"], float)
+    ref = ses.evaluate(["{L1-Last:CE1-CE4}"], net)
+    assert scalar["latency_s"] == float(ref["latency_s"][0])
+    assert ses.stats.megabatch_requests == 4
+    ses.close()
+    with pytest.raises(RuntimeError):
+        ses.submit(specs, net)
+
+
+def test_session_designbatch_path_matches_evaluate_batch():
+    from repro.core.batch_eval import evaluate_batch, make_tables
+
+    net, dev = get_cnn(NET), get_board(BOARD)
+    ses = Session(dev)
+    rng = np.random.default_rng(9)
+    db = sample_mixed(rng, len(net), 48)
+    want = evaluate_batch(db, make_tables(net), dev)
+    got = ses.evaluate(db, net)
+    for k in want:
+        np.testing.assert_array_equal(np.asarray(got[k]),
+                                      np.asarray(want[k]), err_msg=k)
