@@ -658,10 +658,14 @@ def _pad_rows(design: DesignBatch, n: int) -> DesignBatch:
                        rep(design.seg_nce), rep(design.inter_pipe))
 
 
-def padded_rows(B: int, tile: int = DEFAULT_TILE) -> int:
-    """Rows actually executed for a B-design call (B padded to a tile
-    multiple) — the single source of the tiling policy for benchmarks."""
-    return -(-B // tile) * tile
+def padded_rows(B: int, tile: int = DEFAULT_TILE, ndevices: int = 1) -> int:
+    """Rows actually executed for a B-design call (B padded to a multiple
+    of ``ndevices x tile``) — the single source of the tiling policy for
+    benchmarks and the mesh layer.  Rounding to the *device-count*
+    multiple keeps every shard an identical whole number of tiles, so a
+    B not divisible by the device count never reshards or recompiles."""
+    unit = tile * max(int(ndevices), 1)
+    return -(-B // unit) * unit
 
 
 def eval_design_block(design: DesignBatch, tables: NetTables,
@@ -732,12 +736,16 @@ def _evaluate_jit(design, tables, dev, *, backend, tile, fm_tile_rows,
 def evaluate_batch(design: DesignBatch, tables: NetTables,
                    dev: DeviceSpec | DeviceTables, fm_tile_rows: int = 2,
                    *, backend: str | None = None, tile: int = DEFAULT_TILE,
-                   design_tile: int = 16) -> dict[str, jnp.ndarray]:
+                   design_tile: int = 16, mesh=None) -> dict[str, jnp.ndarray]:
     """DesignBatch -> metric arrays, one jitted dispatch.
 
     One compiled program serves every CNN (tables are traced, padded to a
     shared ``max_L``) and every board (traced scalars); only the batch
     shape and the static knobs key the jit cache.
+
+    ``mesh`` (a ``core.shard.EvalMesh``, duck-typed to avoid an import
+    cycle) shards the design axis across its devices; a None or
+    single-device mesh takes this unchanged single-device path.
     """
     backend = resolve_backend(backend)
     if isinstance(dev, DeviceSpec):
@@ -746,6 +754,11 @@ def evaluate_batch(design: DesignBatch, tables: NetTables,
     else:
         devt = dev
         hint = pes_hint(float(dev.pes))
+    if mesh is not None and getattr(mesh, "is_sharded", False):
+        return mesh.evaluate_padded(
+            design, tables, devt, backend=backend, tile=tile,
+            fm_tile_rows=fm_tile_rows, pes_hint_static=hint,
+            design_tile=design_tile)
     return _evaluate_jit(design, tables, devt, backend=backend, tile=tile,
                          fm_tile_rows=fm_tile_rows, pes_hint_static=hint,
                          design_tile=design_tile)
@@ -754,10 +767,11 @@ def evaluate_batch(design: DesignBatch, tables: NetTables,
 # --------------------------------------------------------------------------
 # spec-list convenience wrappers (recompile-free chunking)
 # --------------------------------------------------------------------------
-def _bucket(b: int, tile: int) -> int:
-    """Smallest power-of-two multiple of ``tile`` holding ``b`` designs —
-    bounds the number of distinct compiled shapes to the ladder size."""
-    n = tile
+def _bucket(b: int, tile: int, ndevices: int = 1) -> int:
+    """Smallest power-of-two multiple of ``ndevices x tile`` holding ``b``
+    designs — bounds the number of distinct compiled shapes to the ladder
+    size, and keeps every bucket evenly shardable across the mesh."""
+    n = tile * max(int(ndevices), 1)
     while n < b:
         n *= 2
     return n
@@ -770,7 +784,7 @@ def _evaluate_specs(specs: list[AcceleratorSpec], net: Network,
                     tile: int = DEFAULT_TILE,
                     pad_to: int | None = None,
                     fm_tile_rows: int = 2,
-                    design_tile: int = 16) -> dict[str, np.ndarray]:
+                    design_tile: int = 16, mesh=None) -> dict[str, np.ndarray]:
     """Implementation behind ``Session.evaluate`` (spec lists) and the
     deprecated ``evaluate_specs`` shim: specs -> stacked metric arrays
     (chunked).
@@ -779,21 +793,24 @@ def _evaluate_specs(specs: list[AcceleratorSpec], net: Network,
     100k-design sweep compiles exactly once (and shares that compile with
     every other CNN × board sweep at the same chunk size).  ``pad_to``
     overrides the bucket (``_evaluate_specs_multi`` uses it to share one
-    shape across differently-sized jobs)."""
+    shape across differently-sized jobs).  Under a sharded ``mesh`` the
+    bucket rounds to a multiple of ``ndevices x tile`` so no B triggers a
+    resharding recompile."""
     if not specs:
         raise ValueError("no specs to evaluate (empty design list)")
     tables = make_tables(net) if tables is None else tables
+    nd = mesh.ndevices if mesh is not None and mesh.is_sharded else 1
     n_layers = len(net)
     outs: list[dict] = []
     n = len(specs)
     if pad_to is None:
-        pad_to = chunk if n > chunk else _bucket(max(n, 1), tile)
+        pad_to = chunk if n > chunk else _bucket(max(n, 1), tile, nd)
     for i in range(0, n, chunk):
         sub = specs[i:i + chunk]
         batch = _pad_rows(encode_specs(sub, n_layers), pad_to)
         out = evaluate_batch(batch, tables, dev, fm_tile_rows,
                              backend=backend, tile=tile,
-                             design_tile=design_tile)
+                             design_tile=design_tile, mesh=mesh)
         outs.append({k: np.asarray(v)[:len(sub)] for k, v in out.items()})
     return {k: np.concatenate([o[k] for o in outs]) for k in outs[0]}
 
@@ -814,7 +831,7 @@ def _evaluate_specs_multi(jobs, chunk: int = 2048, *,
                           backend: str | None = None,
                           tile: int = DEFAULT_TILE,
                           tables=None, fm_tile_rows: int = 2,
-                          design_tile: int = 16) -> list[dict]:
+                          design_tile: int = 16, mesh=None) -> list[dict]:
     """Implementation behind ``Session.submit``'s drain loop and the
     deprecated ``evaluate_specs_multi`` shim: cross-(CNN × board)
     megabatch.  ``jobs`` is a sequence of ``(specs, net, dev)`` triples;
@@ -826,15 +843,16 @@ def _evaluate_specs_multi(jobs, chunk: int = 2048, *,
     shapes, and every job's chunks are padded to one shared bucket, the
     whole sweep runs through a single compiled program — the per-job work
     differs only in array *values*."""
+    nd = mesh.ndevices if mesh is not None and mesh.is_sharded else 1
     sizes = [min(max(len(specs), 1), chunk) for specs, _, _ in jobs]
-    pad_to = max((_bucket(s, tile) for s in sizes), default=tile)
+    pad_to = max((_bucket(s, tile, nd) for s in sizes), default=tile * nd)
     results = []
     for i, (specs, net, dev) in enumerate(jobs):
         results.append(_evaluate_specs(
             specs, net, dev, chunk,
             tables=None if tables is None else tables[i],
             backend=backend, tile=tile, pad_to=pad_to,
-            fm_tile_rows=fm_tile_rows, design_tile=design_tile))
+            fm_tile_rows=fm_tile_rows, design_tile=design_tile, mesh=mesh))
     return results
 
 

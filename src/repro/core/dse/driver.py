@@ -43,10 +43,13 @@ def _explore(net, dev, n: int = 100_000, *,
              strategy: str = "random",
              objectives: tuple[str, ...] = DEFAULT_OBJECTIVES,
              config: SearchConfig | None = None,
-             tables=None, backend: str | None = None) -> DSEResult:
+             tables=None, backend: str | None = None,
+             mesh=None) -> DSEResult:
     """Implementation behind ``Session.explore`` and the deprecated
     ``explore`` shim: evaluate ``n`` designs and return the sample plus
-    its Pareto front.
+    its Pareto front.  ``mesh`` (a ``core.shard.EvalMesh``) shards the
+    random sweep's design axis and turns the search into the island
+    model; None keeps the single-device paths bit-identical.
 
     strategy="random": sample ``family`` ("custom" | "mixed" | "both") and
     evaluate, exactly the paper's use case;  strategy="search": run the
@@ -73,7 +76,7 @@ def _explore(net, dev, n: int = 100_000, *,
                                init_family=family)
         objectives = cfg.objectives
         res: SearchResult = search(net, dev, cfg, tables=tables,
-                                   backend=backend)
+                                   backend=backend, mesh=mesh)
         return DSEResult(
             batch=res.batch, metrics=res.metrics, seconds=res.seconds,
             per_design_us=res.seconds / max(res.n_evals, 1) * 1e6,
@@ -113,7 +116,7 @@ def _explore(net, dev, n: int = 100_000, *,
         # pad the tail chunk to the full chunk size: a 100k-design sweep
         # compiles exactly once (padded rows are sliced off below)
         out = evaluate_batch(_pad_rows(batch, min(chunk, n)), tables, dev,
-                             backend=backend)
+                             backend=backend, mesh=mesh)
         jax.block_until_ready(out["latency_s"])
         outs.append({k: np.asarray(v)[:b] for k, v in out.items()})
         batches.append(batch)

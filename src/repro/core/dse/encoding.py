@@ -165,15 +165,25 @@ def sample_assign(rng: np.random.Generator, n: int, max_m: int,
     return out
 
 
+def pad_plane(a, n: int):
+    """Edge-pad one (B, ...) array to ``n`` rows by repeating the last row
+    — how the share/assign planes ride along when their deployments are
+    padded (``pad_deployments``) for tiling or mesh sharding."""
+    pad = n - a.shape[0]
+    if pad <= 0:
+        return a
+    return jnp.concatenate([a, jnp.repeat(a[-1:], pad, 0)], 0)
+
+
 def pad_deployments(md: MultiDesignBatch, n: int) -> MultiDesignBatch:
     """Edge-pad a MultiDesignBatch to ``n`` rows (the model-axis analogue
     of ``batch_eval._pad_rows``; padded rows are evaluated and sliced off)."""
-    pad = n - md.batch
-    if pad <= 0:
+    if n <= md.batch:
         return md
-    rep = lambda a: jnp.concatenate([a, jnp.repeat(a[-1:], pad, 0)], 0)
-    return MultiDesignBatch(rep(md.seg_end), rep(md.seg_pipe),
-                            rep(md.seg_nce), rep(md.inter_pipe))
+    return MultiDesignBatch(pad_plane(md.seg_end, n),
+                            pad_plane(md.seg_pipe, n),
+                            pad_plane(md.seg_nce, n),
+                            pad_plane(md.inter_pipe, n))
 
 
 def encode_specs(specs: list[AcceleratorSpec], n_layers: int) -> DesignBatch:

@@ -83,6 +83,12 @@ class SearchConfig:
     elite_frac: float = 0.25          # scalarized top-slice joining parents
     init_family: str = "both"         # sampler for init/immigrants:
                                       # "custom" | "mixed" | "both"
+    # ---- island model (multi-device search; see docs/dse.md) ----------
+    n_islands: int | None = None      # None: one island per mesh device
+                                      # (1 without a mesh — classic loop)
+    migration_interval: int = 4       # generations between elite exchanges
+    migration_elites: int = 8         # per-island elites broadcast at each
+                                      # migration (0 disables migration)
 
 
 @dataclass
@@ -95,6 +101,8 @@ class SearchResult:
     n_evals: int
     seconds: float
     history: list[dict] = field(default_factory=list)
+    island_fronts: list = field(default_factory=list)  # per-island front
+                                      # indices into batch ([] single-pop)
 
 
 # --------------------------------------------------------------------------
@@ -326,6 +334,20 @@ def _jitted_step(donate: bool):
     return _STEP_CACHE[donate]
 
 
+def _island_step_body(seg_end, seg_pipe, seg_nce, inter, tables, devt, w,
+                      lo, hi, *, objectives, min_ces, max_ces, backend,
+                      tile, hint):
+    """Per-shard body of the sharded island step: each mesh device holds
+    ONE island's pop_n rows plus that island's (1, n_obj) weight and
+    normalization planes — the math is exactly the single-device
+    generation step, run once per island with no cross-island traffic."""
+    darrs, metrics, pts, ok, score, lo2, hi2 = _search_step_impl(
+        seg_end, seg_pipe, seg_nce, inter, tables, devt, w[0], lo[0], hi[0],
+        objectives=objectives, min_ces=min_ces, max_ces=max_ces,
+        backend=backend, tile=tile, hint=hint)
+    return darrs, metrics, pts, ok, score, lo2[None], hi2[None]
+
+
 # --------------------------------------------------------------------------
 # the search loop
 # --------------------------------------------------------------------------
@@ -349,11 +371,17 @@ def _initial_pop(rng, n_layers, cfg, n):
 
 
 def search(net, dev, config: SearchConfig | None = None,
-           tables=None, backend: str | None = None) -> SearchResult:
+           tables=None, backend: str | None = None,
+           mesh=None) -> SearchResult:
     """Run the guided loop: sample -> evaluate -> archive -> breed.
 
     Caller-provided ``tables`` are used verbatim; an explicit ``backend``
-    overrides the env-resolved kernel backend (what the Session passes)."""
+    overrides the env-resolved kernel backend (what the Session passes).
+
+    ``mesh`` (a ``core.shard.EvalMesh``) turns the loop into an island
+    model — one sub-population per device — via ``cfg.n_islands`` (None
+    resolves to the mesh device count).  With one island the classic
+    single-population loop below runs unchanged."""
     import jax
     import jax.numpy as jnp
 
@@ -373,6 +401,18 @@ def search(net, dev, config: SearchConfig | None = None,
             and len(cfg.weights) != n_obj:
         raise ValueError("weights must match objectives")
     tables = tables if tables is not None else make_tables(net)
+
+    n_islands = cfg.n_islands
+    if n_islands is None:
+        n_islands = mesh.ndevices \
+            if mesh is not None and getattr(mesh, "is_sharded", False) else 1
+    if n_islands < 1:
+        raise ValueError(f"n_islands must be >= 1, got {n_islands}")
+    n_islands = min(n_islands, cfg.budget)
+    if n_islands > 1:
+        return _island_search(dev, cfg, tables,
+                              resolve_backend(backend), mesh, n_islands)
+
     n_layers = tables.n_layers
     rng = np.random.default_rng(cfg.seed)
 
@@ -498,4 +538,237 @@ def search(net, dev, config: SearchConfig | None = None,
         n_evals=total,
         seconds=seconds,
         history=history,
+    )
+
+
+# --------------------------------------------------------------------------
+# the island model (multi-device search)
+# --------------------------------------------------------------------------
+def _migration_pick(archive: ParetoArchive, k: int) -> np.ndarray:
+    """Up to ``k`` elites from one island's front, spread along the first
+    objective (deterministic — no RNG, so migration never perturbs the
+    per-island random streams)."""
+    pay = archive.payload
+    if len(pay) <= k:
+        return pay.copy()
+    order = np.argsort(archive.points[:, 0], kind="stable")
+    sel = np.round(np.linspace(0, len(order) - 1, k)).astype(int)
+    return pay[order[sel]]
+
+
+def _island_search(dev, cfg: SearchConfig, tables, backend: str, mesh,
+                   n_islands: int) -> SearchResult:
+    """The island model: ``n_islands`` sub-populations, each evolving
+    under the same jitted generation step, with periodic migration of
+    Pareto elites between islands and a final merged-front reduction.
+
+    When ``mesh`` is sharded with exactly ``n_islands`` devices, every
+    generation is ONE sharded device call — island i's pop_n rows live on
+    device i, with per-island weight/normalization planes sharded
+    alongside and NetTables/DeviceTables replicated.  Otherwise (no mesh,
+    or an island count overriding the device count) the islands take
+    turns through the existing single-device step — same semantics,
+    serial execution.  Breeding stays host-side per island
+    (``make_children``), each island on its own ``[seed, island]`` RNG
+    stream, so results are deterministic given (seed, island count)."""
+    import jax
+    import jax.numpy as jnp
+
+    from ..batch_eval import (DEFAULT_TILE, _pad_rows, make_device_tables,
+                              pes_hint)
+
+    n_obj = len(cfg.objectives)
+    n_layers = tables.n_layers
+    devt = make_device_tables(dev)
+    hint = pes_hint(dev.pes)
+    statics = dict(objectives=tuple(cfg.objectives), min_ces=cfg.min_ces,
+                   max_ces=cfg.max_ces, backend=backend, tile=DEFAULT_TILE,
+                   hint=hint)
+    I = n_islands
+
+    # per-generation island sizes: pop_n each, the final generation
+    # absorbing the remainder so evaluations equal the budget EXACTLY;
+    # every device call is padded to I x pop_n rows (one compile).
+    pop_n = min(cfg.pop_size, max(cfg.budget // I, 1))
+    per_gen = pop_n * I
+    gens = max(1, cfg.budget // per_gen)
+    sizes = np.full((gens, I), pop_n, np.int64)
+    rem = cfg.budget - gens * per_gen
+    sizes[-1] += rem // I
+    sizes[-1, :rem % I] += 1
+    total = cfg.budget
+
+    sharded = (mesh is not None and getattr(mesh, "is_sharded", False)
+               and mesh.ndevices == I)
+    if sharded:
+        raw = mesh.shard_jit("dse_island_step", _island_step_body,
+                             replicated=(4, 5), static_kwargs=statics)
+
+        def step_all(stacked, w_arr, lo, hi):
+            return raw(stacked.seg_end, stacked.seg_pipe, stacked.seg_nce,
+                       stacked.inter_pipe, tables, devt,
+                       jnp.asarray(w_arr, jnp.float32), lo, hi)
+    else:
+        raw = _jitted_step(donate=jax.default_backend() != "cpu")
+
+        def step_all(stacked, w_arr, lo, hi):
+            parts, los, his = [], [], []
+            for i in range(I):
+                sl = slice(i * pop_n, (i + 1) * pop_n)
+                out = raw(stacked.seg_end[sl], stacked.seg_pipe[sl],
+                          stacked.seg_nce[sl], stacked.inter_pipe[sl],
+                          tables, devt,
+                          jnp.asarray(w_arr[i], jnp.float32),
+                          lo[i], hi[i], **statics)
+                parts.append(out[:5])
+                los.append(out[5])
+                his.append(out[6])
+            darrs = tuple(jnp.concatenate([p[0][j] for p in parts])
+                          for j in range(4))
+            metrics = {k: jnp.concatenate([p[1][k] for p in parts])
+                       for k in parts[0][1]}
+            cat = lambda j: jnp.concatenate([p[j] for p in parts])
+            return (darrs, metrics, cat(2), cat(3), cat(4),
+                    jnp.stack(los), jnp.stack(his))
+
+    hall_end = np.empty((total, NS), np.int32)
+    hall_pipe = np.empty((total, NS), bool)
+    hall_nce = np.empty((total, NS), np.int32)
+    hall_inter = np.empty((total,), bool)
+    all_points = np.empty((total, n_obj))
+    hall_ok = np.zeros((total,), bool)
+    all_metrics: list[dict] = []
+
+    merged = ParetoArchive(n_obj)
+    islands = [ParetoArchive(n_obj) for _ in range(I)]
+    rngs = [np.random.default_rng([cfg.seed, i]) for i in range(I)]
+    lo = jnp.full((I, n_obj), jnp.inf, jnp.float32)
+    hi = jnp.full((I, n_obj), -jnp.inf, jnp.float32)
+    history: list[dict] = []
+
+    pops = [_initial_pop(rngs[i], n_layers, cfg, int(sizes[0, i]))
+            for i in range(I)]
+    base = 0
+    t0 = time.time()
+    for gen in range(gens):
+        ws = []
+        for i in range(I):
+            if cfg.mode == "scalarized":
+                w = np.asarray(cfg.weights if cfg.weights is not None
+                               else np.ones(n_obj))
+            else:
+                w = rngs[i].random(n_obj) + 0.1   # per-island direction
+            ws.append(w / w.sum())
+        w_arr = np.asarray(ws, np.float32)
+
+        # sub-rounds: only the final (oversized) generation needs k > 1
+        k = -(-int(sizes[gen].max()) // pop_n)
+        gen_idx = [[] for _ in range(I)]
+        gen_score = [[] for _ in range(I)]
+        for j in range(k):
+            subs, keeps = [], []
+            for i in range(I):
+                s = j * pop_n
+                e = min(int(sizes[gen, i]), s + pop_n)
+                keep = max(e - s, 0)
+                rows = np.arange(s, e) if keep else np.arange(1)
+                subs.append(_pad_rows(pops[i].take(rows), pop_n))
+                keeps.append(keep)
+            stacked = concat_batches(subs)
+            darrs, metrics, pts, ok, score, lo, hi = step_all(
+                stacked, w_arr, lo, hi)
+            darrs_h = [np.asarray(a) for a in darrs]
+            pts_h = np.asarray(pts, np.float64)
+            ok_h = np.asarray(ok)
+            score_h = np.asarray(score, np.float64)
+            for i in range(I):
+                keep = keeps[i]
+                if keep == 0:
+                    continue
+                sl = slice(i * pop_n, i * pop_n + keep)
+                idx = np.arange(base, base + keep)
+                base += keep
+                hall_end[idx], hall_pipe[idx] = darrs_h[0][sl], darrs_h[1][sl]
+                hall_nce[idx], hall_inter[idx] = darrs_h[2][sl], darrs_h[3][sl]
+                all_points[idx] = pts_h[sl]
+                hall_ok[idx] = ok_h[sl]
+                all_metrics.append({kk: vv[sl] for kk, vv in metrics.items()})
+                gen_idx[i].append(idx)
+                gen_score[i].append(score_h[sl])
+                okm = ok_h[sl]
+                islands[i].update(pts_h[sl][okm], idx[okm])
+                merged.update(pts_h[sl][okm], idx[okm])
+
+        if gen == gens - 1:
+            break
+
+        # ---- migration: all-gather each island's elite slice ----------
+        migrate = (cfg.migration_elites > 0 and cfg.migration_interval > 0
+                   and (gen + 1) % cfg.migration_interval == 0)
+        migrants = np.empty(0, np.int64)
+        if migrate:
+            picks = [_migration_pick(islands[i], cfg.migration_elites)
+                     for i in range(I)]
+            migrants = np.unique(np.concatenate(picks)) \
+                if picks else migrants
+
+        # ---- per-island breeding: front + elite slice (+ migrants) ----
+        for i in range(I):
+            idx_i = np.concatenate(gen_idx[i])
+            score_i = np.concatenate(gen_score[i])
+            n_elite = max(1, int(len(idx_i) * cfg.elite_frac))
+            elite = idx_i[np.argsort(score_i, kind="stable")[:n_elite]]
+            pool = [islands[i].payload, elite]
+            if migrate:
+                pool.append(migrants)
+            pool = np.unique(np.concatenate(pool))
+            parents = DesignBatch.from_numpy(
+                hall_end[pool], hall_pipe[pool], hall_nce[pool],
+                hall_inter[pool])
+            nxt = int(sizes[gen + 1, i])
+            n_imm = int(nxt * cfg.immigrant_frac)
+            children = make_children(rngs[i], parents, n_layers, cfg,
+                                     nxt - n_imm)
+            imm = _initial_pop(rngs[i], n_layers, cfg, n_imm) \
+                if n_imm else None
+            pops[i] = concat_batches([children, imm]) \
+                if imm is not None else children
+
+        history.append(dict(gen=gen, evals=base, archive=len(merged),
+                            islands=[len(a) for a in islands],
+                            migrants=int(len(migrants)),
+                            best=dict(zip(cfg.objectives,
+                                          merged.points.min(0).tolist()))
+                            if len(merged) else {}))
+
+    seconds = time.time() - t0
+    metrics = {k: np.concatenate([np.asarray(m[k]) for m in all_metrics])
+               for k in all_metrics[0]}
+    lo_h = np.asarray(lo, np.float64).min(0)
+    hi_h = np.asarray(hi, np.float64).max(0)
+    w = np.asarray(cfg.weights) if cfg.weights is not None \
+        else np.ones(n_obj)
+    w = w / w.sum()
+    final_scores = np.where(
+        hall_ok,
+        ((all_points - lo_h) / np.maximum(hi_h - lo_h, 1e-30)) @ w, np.inf)
+    best_scalar_idx = int(np.argmin(final_scores))
+    history.append(dict(gen=gens - 1, evals=total, archive=len(merged),
+                        islands=[len(a) for a in islands],
+                        migrants=0,
+                        best=dict(zip(cfg.objectives,
+                                      merged.points.min(0).tolist()))
+                        if len(merged) else {},
+                        best_scalar_idx=best_scalar_idx))
+    return SearchResult(
+        batch=DesignBatch.from_numpy(hall_end, hall_pipe, hall_nce,
+                                     hall_inter),
+        metrics=metrics,
+        points=all_points,
+        front_idx=np.sort(merged.payload.copy()),
+        objectives=cfg.objectives,
+        n_evals=total,
+        seconds=seconds,
+        history=history,
+        island_fronts=[np.sort(a.payload.copy()) for a in islands],
     )

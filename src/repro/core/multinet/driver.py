@@ -72,7 +72,7 @@ def _joint_explore(nets, dev, n: int = 4096, *, strategy: str = "search",
                    objective: str = "serving",
                    config: MultinetSearchConfig | None = None,
                    weights=None, slo_s=None, mtables=None,
-                   backend: str | None = None) -> JointDSEResult:
+                   backend: str | None = None, mesh=None) -> JointDSEResult:
     """Implementation behind ``Session.deploy`` and the deprecated
     ``joint_explore`` shim: evaluate ``n`` deployments of ``nets`` on
     ``dev`` and return the sample plus its Pareto front over the system
@@ -102,7 +102,7 @@ def _joint_explore(nets, dev, n: int = 4096, *, strategy: str = "search",
         cfg = MultinetSearchConfig(**{**base, **over})
         res: MultinetSearchResult = joint_search(nets, dev, cfg,
                                                  mtables=mtables,
-                                                 backend=backend)
+                                                 backend=backend, mesh=mesh)
         return JointDSEResult(
             designs=res.designs, metrics=res.metrics, seconds=res.seconds,
             per_eval_us=res.seconds / max(res.n_evals, 1) * 1e6,
@@ -135,7 +135,7 @@ def _joint_explore(nets, dev, n: int = 4096, *, strategy: str = "search",
             sh = [s[pad] for s in sh]
         out = joint_evaluate(md, mt, dev, pes_shares=sh[0],
                              buf_shares=sh[1], bw_shares=sh[2],
-                             backend=backend)
+                             backend=backend, mesh=mesh)
         outs.append({k: np.asarray(out[k])[:b] for k in keep})
         mds.append(md.take(np.arange(b)))
         done += b

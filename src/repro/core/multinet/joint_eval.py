@@ -58,7 +58,8 @@ from ..batch_eval import (DeviceTables, DeviceSpec, NetTables,
                           _pair_layer_tables, eval_design_block,
                           evaluate_batch_traced, make_device_tables,
                           make_tables, pes_hint, shared_max_L)
-from ..dse.encoding import DesignBatch, MultiDesignBatch, pad_deployments
+from ..dse.encoding import (DesignBatch, MultiDesignBatch, pad_deployments,
+                            pad_plane)
 from ..workload import Network
 from .partition import (DEFAULT_FLOORS, DEFAULT_MAX_M, PartitionBatch,
                         gather_slices, partition_devices,
@@ -483,6 +484,45 @@ def _joint_hybrid_jit(md, mt, dev, assign, pes_shares, buf_shares,
         floors=floors, reconfig_s=reconfig_s)
 
 
+def _joint_sharded(mesh, mode: str, md, mt, devt, planes, *, backend, tile,
+                   fm_tile_rows, hint, design_tile, floors, reconfig_s):
+    """Sharded joint evaluation: the deployment axis is padded to a
+    multiple of ``ndevices x tile`` and sharded across the mesh, tables
+    replicated, pad rows sliced back off — the multinet analogue of
+    ``EvalMesh.evaluate_padded`` (same row-local-arithmetic argument, so
+    it is bit-identical to the single-device jits)."""
+    B = md.batch
+    n = mesh.padded_rows(B, tile)
+    mdp = pad_deployments(md, n)
+    planes = tuple(pad_plane(jnp.asarray(p), n) for p in planes)
+    if mode == "spatial":
+        run = mesh.shard_jit(
+            "joint_spatial", joint_spatial_traced, replicated=(1, 2),
+            static_kwargs=dict(backend=backend, tile=tile,
+                               fm_tile_rows=fm_tile_rows,
+                               pes_hint_static=hint,
+                               design_tile=design_tile, floors=floors))
+    elif mode == "temporal":
+        run = mesh.shard_jit(
+            "joint_temporal", joint_temporal_traced, replicated=(1, 2),
+            static_kwargs=dict(backend=backend, tile=tile,
+                               fm_tile_rows=fm_tile_rows,
+                               pes_hint_static=hint,
+                               design_tile=design_tile,
+                               share_floor=float(floors[2]),
+                               reconfig_s=reconfig_s))
+    else:
+        run = mesh.shard_jit(
+            "joint_hybrid", joint_hybrid_traced, replicated=(1, 2),
+            static_kwargs=dict(backend=backend, tile=tile,
+                               fm_tile_rows=fm_tile_rows,
+                               pes_hint_static=hint,
+                               design_tile=design_tile, floors=floors,
+                               reconfig_s=reconfig_s))
+    out = run(mdp, mt, devt, *planes)
+    return {k: v[:B] for k, v in out.items()}
+
+
 def joint_evaluate(md: MultiDesignBatch, mt: MultiNetTables,
                    dev: DeviceSpec | DeviceTables, *, mode: str = "spatial",
                    pes_shares=None, buf_shares=None, bw_shares=None,
@@ -490,7 +530,8 @@ def joint_evaluate(md: MultiDesignBatch, mt: MultiNetTables,
                    backend: str | None = None,
                    tile: int = JOINT_TILE, fm_tile_rows: int = 2,
                    design_tile: int = 16, floors=DEFAULT_FLOORS,
-                   reconfig_s: float = 0.0) -> dict[str, jnp.ndarray]:
+                   reconfig_s: float = 0.0, mesh=None
+                   ) -> dict[str, jnp.ndarray]:
     """Evaluate a batch of M-model deployments — one jitted dispatch.
 
     ``mode="spatial"`` consumes raw (B, M) resource shares (repaired
@@ -499,7 +540,9 @@ def joint_evaluate(md: MultiDesignBatch, mt: MultiNetTables,
     plane (> 0.5 = shared-slice member; defaults to all-spatial) plus both
     share families.  One compiled program per mode serves every model set
     (padded to ``DEFAULT_MAX_M``), board, split and assignment; only the
-    batch shape and static knobs key the jit cache.
+    batch shape and static knobs key the jit cache.  ``mesh`` (a
+    ``core.shard.EvalMesh``) shards the deployment axis; None or a
+    single-device mesh keeps the single-device jits.
     """
     backend = resolve_backend(backend)
     if isinstance(dev, DeviceSpec):
@@ -508,12 +551,20 @@ def joint_evaluate(md: MultiDesignBatch, mt: MultiNetTables,
     else:
         devt = dev
         hint = pes_hint(float(dev.pes))
+    sharded = mesh is not None and getattr(mesh, "is_sharded", False)
     B, max_m = md.batch, md.n_models
     ones = jnp.ones((B, max_m), jnp.float32)
     if mode == "spatial":
         pes_shares = ones if pes_shares is None else jnp.asarray(pes_shares)
         buf_shares = ones if buf_shares is None else jnp.asarray(buf_shares)
         bw_shares = ones if bw_shares is None else jnp.asarray(bw_shares)
+        if sharded:
+            return _joint_sharded(
+                mesh, mode, md, mt, devt,
+                (pes_shares, buf_shares, bw_shares), backend=backend,
+                tile=tile, fm_tile_rows=fm_tile_rows, hint=hint,
+                design_tile=design_tile, floors=tuple(floors),
+                reconfig_s=float(reconfig_s))
         return _joint_spatial_jit(
             md, mt, devt, pes_shares, buf_shares, bw_shares,
             backend=backend, tile=tile, fm_tile_rows=fm_tile_rows,
@@ -522,6 +573,12 @@ def joint_evaluate(md: MultiDesignBatch, mt: MultiNetTables,
     if mode == "temporal":
         time_shares = ones if time_shares is None \
             else jnp.asarray(time_shares)
+        if sharded:
+            return _joint_sharded(
+                mesh, mode, md, mt, devt, (time_shares,), backend=backend,
+                tile=tile, fm_tile_rows=fm_tile_rows, hint=hint,
+                design_tile=design_tile, floors=tuple(floors),
+                reconfig_s=float(reconfig_s))
         return _joint_temporal_jit(
             md, mt, devt, time_shares, backend=backend, tile=tile,
             fm_tile_rows=fm_tile_rows, pes_hint_static=hint,
@@ -535,6 +592,13 @@ def joint_evaluate(md: MultiDesignBatch, mt: MultiNetTables,
         bw_shares = ones if bw_shares is None else jnp.asarray(bw_shares)
         time_shares = ones if time_shares is None \
             else jnp.asarray(time_shares)
+        if sharded:
+            return _joint_sharded(
+                mesh, mode, md, mt, devt,
+                (assign, pes_shares, buf_shares, bw_shares, time_shares),
+                backend=backend, tile=tile, fm_tile_rows=fm_tile_rows,
+                hint=hint, design_tile=design_tile, floors=tuple(floors),
+                reconfig_s=float(reconfig_s))
         return _joint_hybrid_jit(
             md, mt, devt, assign, pes_shares, buf_shares, bw_shares,
             time_shares, backend=backend, tile=tile,

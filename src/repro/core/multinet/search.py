@@ -277,13 +277,15 @@ def _crossover_assign(rng, a, b, m, frac):
 # the search loop
 # --------------------------------------------------------------------------
 def joint_search(nets, dev, config: MultinetSearchConfig | None = None,
-                 mtables=None, backend: str | None = None
+                 mtables=None, backend: str | None = None, mesh=None
                  ) -> MultinetSearchResult:
     """Run the joint loop: sample deployments -> joint evaluate -> archive
     -> breed designs, budget splits and (hybrid) assignments together.
 
     Caller-provided ``mtables`` are used verbatim; an explicit ``backend``
-    overrides the env-resolved kernel backend (what the Session passes)."""
+    overrides the env-resolved kernel backend (what the Session passes);
+    a sharded ``mesh`` (``core.shard.EvalMesh``) shards every generation's
+    deployment axis through the sharded ``joint_evaluate`` entry point."""
     cfg = config or MultinetSearchConfig()
     if cfg.budget < 1 or cfg.pop_size < 1:
         raise ValueError(f"budget and pop_size must be >= 1 "
@@ -380,13 +382,13 @@ def joint_search(nets, dev, config: MultinetSearchConfig | None = None,
                                      buf_shares=subsh["buf"],
                                      bw_shares=subsh["bw"],
                                      backend=backend,
-                                     floors=cfg.floors)
+                                     floors=cfg.floors, mesh=mesh)
             elif cfg.mode == "temporal":
                 out = joint_evaluate(sub, mt, dev, mode="temporal",
                                      time_shares=subsh["time"],
                                      backend=backend,
                                      floors=cfg.floors,
-                                     reconfig_s=cfg.reconfig_s)
+                                     reconfig_s=cfg.reconfig_s, mesh=mesh)
             else:
                 out = joint_evaluate(sub, mt, dev, mode="hybrid",
                                      assign=subsh["assign"],
@@ -396,7 +398,7 @@ def joint_search(nets, dev, config: MultinetSearchConfig | None = None,
                                      time_shares=subsh["time"],
                                      backend=backend,
                                      floors=cfg.floors,
-                                     reconfig_s=cfg.reconfig_s)
+                                     reconfig_s=cfg.reconfig_s, mesh=mesh)
             keep = _KEEP_SYS + _KEEP_MODE[cfg.mode]
             got = {k: np.asarray(out[k])[:len(idx)] for k in keep}
             if slo_aware:

@@ -85,17 +85,24 @@ class EvalConfig:
     #: the first queued request before evaluating, so concurrent callers
     #: land in one compiled dispatch
     linger_s: float = 0.002
+    #: design-axis mesh width (devices).  None resolves REPRO_MESH_DEVICES,
+    #: else every visible device; 1 pins the single-device path.  The
+    #: session builds one ``core.shard.EvalMesh`` from this and threads it
+    #: through evaluate()/explore()/deploy()/submit() (docs/perf.md)
+    mesh: int | None = None
 
     def resolved(self) -> "EvalConfig":
-        """Pin the env-dependent fields (backend, cache_dir) to concrete
-        values — called once by :class:`Session`."""
+        """Pin the env-dependent fields (backend, cache_dir, mesh) to
+        concrete values — called once by :class:`Session`."""
         import os
 
         from ..compat import CACHE_ENV
+        from .shard import env_mesh_devices
         return replace(
             self,
             backend=resolve_backend(self.backend),
-            cache_dir=self.cache_dir or os.environ.get(CACHE_ENV) or None)
+            cache_dir=self.cache_dir or os.environ.get(CACHE_ENV) or None,
+            mesh=self.mesh if self.mesh is not None else env_mesh_devices())
 
 
 @dataclass
@@ -159,6 +166,10 @@ class Session:
         self.config = base.resolved()
         if self.config.cache_dir:
             enable_persistent_compilation_cache(self.config.cache_dir)
+        from .shard import EvalMesh
+        #: the session's design-axis mesh; single-device meshes delegate
+        #: to the exact single-device jits (zero extra compiles)
+        self.mesh = EvalMesh(ndevices=self.config.mesh)
         self.default_device = dev
         self.stats = SessionStats()
         # memoization has its own lock (held across check+build+count, so
@@ -306,7 +317,7 @@ class Session:
             return evaluate_batch(
                 designs, self.tables(net), self.device_tables(dev),
                 fm_tile_rows=cfg.fm_tile_rows, backend=cfg.backend,
-                tile=cfg.tile, design_tile=cfg.design_tile)
+                tile=cfg.tile, design_tile=cfg.design_tile, mesh=self.mesh)
         specs = [self._parse(d, net, inter_segment_pipelining)
                  for d in designs]
         if not specs:
@@ -316,7 +327,7 @@ class Session:
                                cfg.chunk, tables=self.tables(net),
                                backend=cfg.backend, tile=cfg.tile,
                                fm_tile_rows=cfg.fm_tile_rows,
-                               design_tile=cfg.design_tile)
+                               design_tile=cfg.design_tile, mesh=self.mesh)
 
     def build(self, design, net: Network, dev: DeviceSpec | None = None,
               *, opts=None, inter_segment_pipelining: bool = True):
@@ -341,7 +352,7 @@ class Session:
                         chunk=chunk, strategy=strategy,
                         objectives=objectives, config=config,
                         tables=self.tables(net),
-                        backend=self.config.backend)
+                        backend=self.config.backend, mesh=self.mesh)
 
     def deploy(self, nets, n: int = 4096, dev: DeviceSpec | None = None, *,
                strategy: str = "search", seed: int = 0, chunk: int = 512,
@@ -367,7 +378,8 @@ class Session:
             objectives=JOINT_OBJECTIVES if objectives is None
             else objectives,
             objective=objective, config=config, weights=weights,
-            slo_s=slo_s, mtables=mt, backend=self.config.backend)
+            slo_s=slo_s, mtables=mt, backend=self.config.backend,
+            mesh=self.mesh)
 
     # ---- queued requests (the serve-many-users path) ---------------------
     def submit(self, designs, net: Network,
@@ -437,7 +449,7 @@ class Session:
                                cfg.chunk, tables=self.tables(r.net),
                                backend=cfg.backend, tile=cfg.tile,
                                fm_tile_rows=cfg.fm_tile_rows,
-                               design_tile=cfg.design_tile)
+                               design_tile=cfg.design_tile, mesh=self.mesh)
 
     def _run_megabatch(self, reqs: list[_Request]) -> None:
         cfg = self.config
@@ -450,7 +462,8 @@ class Session:
                                             backend=cfg.backend,
                                             tile=cfg.tile, tables=tabs,
                                             fm_tile_rows=cfg.fm_tile_rows,
-                                            design_tile=cfg.design_tile)
+                                            design_tile=cfg.design_tile,
+                                            mesh=self.mesh)
         except BaseException:  # noqa: BLE001 — isolate the bad job(s)
             # one malformed request must not poison its co-queued peers:
             # retry per request so each future gets ITS OWN result/error
@@ -493,7 +506,10 @@ class Session:
             counts["joint_hybrid"] = je._joint_hybrid_jit._cache_size()
         except ImportError:  # pragma: no cover — multinet always ships
             pass
-        counts["total"] = sum(counts.values())
+        from .shard import mesh_compile_counts
+        for name, n in mesh_compile_counts().items():
+            counts[f"mesh_{name}"] = n
+        counts["total"] = sum(v for k, v in counts.items() if k != "total")
         return counts
 
 

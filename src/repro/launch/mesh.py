@@ -1,9 +1,13 @@
 """Production mesh construction.
 
 Functions, not module-level constants, so importing this module never
-touches jax device state.  The dry-run sets
-``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any jax
-import (see dryrun.py); smoke tests and benches see the real single device.
+touches jax device state.  Device discovery is shared with
+``repro.core.shard``: set ``REPRO_MESH_DEVICES=N`` (the one supported
+env-var path, see docs/perf.md) and import repro before first jax use —
+on CPU hosts the host platform is force-split into N devices
+automatically; callers never craft ``XLA_FLAGS`` by hand.  (The old
+dry-run path that exported ``--xla_force_host_platform_device_count``
+manually still works but is subsumed by the env var.)
 """
 from __future__ import annotations
 
@@ -15,9 +19,18 @@ except ImportError:                 # older jax: meshes are Auto by default
     AxisType = None
 
 
-def _mesh(shape, axes):
+def _mesh(shape, axes, devices=None):
     if AxisType is None:
+        if devices is not None:
+            import numpy as np
+            from jax.sharding import Mesh
+            return Mesh(np.asarray(devices).reshape(shape), axes)
         return jax.make_mesh(shape, axes)
+    if devices is not None:
+        import numpy as np
+        from jax.sharding import Mesh
+        return Mesh(np.asarray(devices).reshape(shape), axes,
+                    axis_types=(AxisType.Auto,) * len(axes))
     return jax.make_mesh(shape, axes,
                          axis_types=(AxisType.Auto,) * len(axes))
 
@@ -36,7 +49,13 @@ def make_mesh_spec(data: int, model: int, pod: int = 1):
     return _mesh((data, model), ("data", "model"))
 
 
-def make_host_mesh():
-    """Whatever the current host offers (tests: 1 CPU device)."""
-    n = len(jax.devices())
-    return _mesh((n, 1), ("data", "model"))
+def make_host_mesh(ndevices: int | None = None):
+    """Whatever the current host offers (tests: 1 CPU device).
+
+    Reuses :class:`repro.core.shard.EvalMesh` device discovery, so the
+    resolution order is: explicit ``ndevices``, then
+    ``REPRO_MESH_DEVICES``, then every visible device (requests beyond
+    the visible count clamp)."""
+    from ..core.shard import EvalMesh
+    em = EvalMesh(ndevices=ndevices)
+    return _mesh((em.ndevices, 1), ("data", "model"), devices=em.devices)
