@@ -232,6 +232,36 @@ def run(verbose: bool = True, quick: bool = False,
                   f"{ssteady / sB * 1e6:.1f}", str(sB),
                   f"{max(first_s - ssteady, 0.0):.2f}", "-"])
 
+    # ---- resilient session: the same steady-state call with the full
+    # fault policy armed (deadline + admission control + retries +
+    # breaker + per-call batch validation, docs/robustness.md) — the
+    # policy is bookkeeping around the compiled call, gated to <5% of
+    # session_cached
+    rses = Session(dev, deadline_s=60.0, max_queue=256, max_retries=2,
+                   fallback_backend="ref")
+    r = rses.evaluate(sdb, net)                    # warmup (shares compiles)
+    jax.block_until_ready(r["latency_s"])
+    rc0 = rses.compile_stats()["total"]
+    t0 = time.time()
+    for _ in range(reps):
+        r = rses.evaluate(sdb, net)
+        jax.block_until_ready(r["latency_s"])
+    rsteady = (time.time() - t0) / reps
+    rcompiles = rses.compile_stats()["total"] - rc0
+    resilient_overhead = rsteady / ssteady - 1.0
+    points["resilient_session"] = {
+        "B": sB,
+        "us_per_design": rsteady / sB * 1e6,
+        "steady_s": rsteady,
+        "overhead_vs_session_cached": resilient_overhead,
+        "compile_count_after_warmup": rcompiles,
+        "degraded": rses.stats.degraded,
+        "retried": rses.stats.retried,
+    }
+    table.append([f"resilient B={sB}", f"{rsteady / sB * 1e6:.1f}",
+                  f"{rsteady / sB * 1e6:.1f}", str(sB),
+                  f"{resilient_overhead * 100:+.1f}%", "-"])
+
     # ---- sharded weak-scaling: one subprocess per forced host-device
     # count (the backend pins its device count at init, so every point
     # needs a fresh interpreter; benchmarks.sharded_eval exports
@@ -304,6 +334,15 @@ def run(verbose: bool = True, quick: bool = False,
             "multinet_single_compile": mcompiles == 1,
             "hybrid_single_compile_across_assignments": hcompiles == 1,
             "session_reeval_no_new_compiles": scompiles == 0,
+            # the fault policy must stay out of the hot path: <5% over
+            # session_cached at the same B, zero new compiles, nothing
+            # degraded on a clean run (armed on full runs; quick CI
+            # batches are too small to measure 5% reliably)
+            "resilient_overhead_lt_5pct": (
+                resilient_overhead < 0.05 if not quick else True),
+            "resilient_no_new_compiles_no_degrade": (
+                rcompiles == 0 and rses.stats.degraded == 0
+                and rses.stats.retried == 0),
             "sharded_no_recompile_at_reeval": recompiles == 0,
             # scaled throughput: each in-cores device must hold >= 60%
             # of the single-device rate; vacuous on a 1-core host

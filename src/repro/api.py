@@ -16,7 +16,10 @@ the deprecated free functions live in ``docs/api.md``.
 """
 from __future__ import annotations
 
+from .core.resilience import (EvalError, load_checkpoint,  # noqa: F401
+                              save_checkpoint)
 from .core.session import (EvalConfig, Session, SessionStats,
                            default_session)
 
-__all__ = ["EvalConfig", "Session", "SessionStats", "default_session"]
+__all__ = ["EvalConfig", "EvalError", "Session", "SessionStats",
+           "default_session", "load_checkpoint", "save_checkpoint"]

@@ -35,11 +35,14 @@ and the scores.
 """
 from __future__ import annotations
 
+import os
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, fields as dc_fields
 
 import numpy as np
 
+from .. import resilience
+from ..resilience import EvalError
 from .encoding import NC, NS, DesignBatch, concat_batches
 from .pareto import ParetoArchive
 from .samplers import sample_custom, sample_mixed
@@ -89,6 +92,13 @@ class SearchConfig:
     migration_interval: int = 4       # generations between elite exchanges
     migration_elites: int = 8         # per-island elites broadcast at each
                                       # migration (0 disables migration)
+    # ---- checkpoint/resume (docs/robustness.md) -----------------------
+    checkpoint_path: str | None = None  # snapshot file; None disables
+    checkpoint_interval: int = 8      # generations between snapshots
+    resume: bool = False              # resume from checkpoint_path if it
+                                      # exists (a resumed run is
+                                      # bit-identical to an uninterrupted
+                                      # one); missing file = fresh start
 
 
 @dataclass
@@ -349,6 +359,55 @@ def _island_step_body(seg_end, seg_pipe, seg_nce, inter, tables, devt, w,
 
 
 # --------------------------------------------------------------------------
+# checkpoint plumbing (shared by the serial and island loops)
+# --------------------------------------------------------------------------
+#: checkpoint interval floor — every write costs a host sync of the halls
+_CKPT_KINDS = ("dse-search", "dse-search-island")
+
+
+def _cfg_fingerprint(cfg, n_layers: int) -> dict:
+    """The search-trajectory-determining identity a checkpoint is bound
+    to: every config field except the checkpoint knobs themselves, plus
+    the workload size.  A resume under a different fingerprint would NOT
+    reproduce the uninterrupted run, so it is refused."""
+    skip = {"checkpoint_path", "checkpoint_interval", "resume"}
+    fp = {f.name: getattr(cfg, f.name) for f in dc_fields(cfg)
+          if f.name not in skip}
+    fp["n_layers"] = n_layers
+    return fp
+
+
+def _checkpoint_meta(cfg, n_layers: int) -> dict:
+    return {"fingerprint": _cfg_fingerprint(cfg, n_layers)}
+
+
+def _load_search_checkpoint(cfg, n_layers: int, kind: str) -> dict | None:
+    """The state dict of a resumable checkpoint, or None for a fresh
+    start (no path / resume off / file absent)."""
+    path = cfg.checkpoint_path
+    if not path or not cfg.resume or not os.path.exists(path):
+        return None
+    snap = resilience.load_checkpoint(path, kind=kind)
+    want = _cfg_fingerprint(cfg, n_layers)
+    if snap["meta"].get("fingerprint") != want:
+        raise EvalError(
+            EvalError.INVALID_INPUT,
+            f"checkpoint {path} was written by a different search "
+            f"configuration/workload; refusing to resume (a resumed run "
+            f"must be bit-identical to an uninterrupted one)")
+    return snap["state"]
+
+
+def _merged_metrics(all_metrics: list[dict]) -> dict:
+    """One host dict over everything evaluated so far (device slices are
+    pulled exactly once per checkpoint)."""
+    if not all_metrics:
+        return {}
+    return {k: np.concatenate([np.asarray(m[k]) for m in all_metrics])
+            for k in all_metrics[0]}
+
+
+# --------------------------------------------------------------------------
 # the search loop
 # --------------------------------------------------------------------------
 def _initial_pop(rng, n_layers, cfg, n):
@@ -466,10 +525,47 @@ def search(net, dev, config: SearchConfig | None = None,
         darrs = [cat([d[i] for d in design_l]) for i in range(4)]
         return darrs, cat(pts_l), cat(ok_l), cat(score_l), lo, hi
 
-    pop = _initial_pop(rng, n_layers, cfg, sizes[0])
-    base = 0
-    t0 = time.time()
-    for gen in range(gens):
+    # ---- checkpoint/resume: restore loop state exactly as it was at
+    # the top of generation `start_gen` (before that gen's RNG draws),
+    # so the remaining generations replay bit-identically --------------
+    start_gen, base, elapsed0, pop = 0, 0, 0.0, None
+    snap = _load_search_checkpoint(cfg, n_layers, "dse-search")
+    if snap is not None:
+        start_gen, base = snap["gen"], snap["base"]
+        rng = resilience.rng_from_state(snap["rng"])
+        pop = DesignBatch.from_numpy(*snap["pop"])
+        hall_end[:base], hall_pipe[:base] = snap["hall"][0], snap["hall"][1]
+        hall_nce[:base], hall_inter[:base] = snap["hall"][2], snap["hall"][3]
+        all_points[:base] = snap["points"]
+        hall_ok[:base] = snap["ok"]
+        if snap["metrics"]:
+            all_metrics.append(snap["metrics"])
+        archive.points = snap["archive"][0].copy()
+        archive.payload = snap["archive"][1].copy()
+        lo, hi = jnp.asarray(snap["lo"]), jnp.asarray(snap["hi"])
+        history.extend(snap["history"])
+        elapsed0 = snap["elapsed_s"]
+    if pop is None:
+        pop = _initial_pop(rng, n_layers, cfg, sizes[0])
+    ckpt_every = max(1, cfg.checkpoint_interval)
+    t0 = time.time() - elapsed0
+    for gen in range(start_gen, gens):
+        if cfg.checkpoint_path and gen > 0 and gen % ckpt_every == 0:
+            resilience.save_checkpoint(
+                cfg.checkpoint_path, "dse-search",
+                {"gen": gen, "base": base,
+                 "rng": resilience.rng_state(rng),
+                 "pop": tuple(pop.to_numpy()),
+                 "hall": (hall_end[:base].copy(), hall_pipe[:base].copy(),
+                          hall_nce[:base].copy(), hall_inter[:base].copy()),
+                 "points": all_points[:base].copy(),
+                 "ok": hall_ok[:base].copy(),
+                 "metrics": _merged_metrics(all_metrics),
+                 "archive": (archive.points.copy(), archive.payload.copy()),
+                 "lo": np.asarray(lo), "hi": np.asarray(hi),
+                 "history": list(history),
+                 "elapsed_s": time.time() - t0},
+                meta=_checkpoint_meta(cfg, n_layers))
         if cfg.mode == "scalarized":
             w = np.asarray(cfg.weights if cfg.weights is not None
                            else np.ones(n_obj))
@@ -646,11 +742,51 @@ def _island_search(dev, cfg: SearchConfig, tables, backend: str, mesh,
     hi = jnp.full((I, n_obj), -jnp.inf, jnp.float32)
     history: list[dict] = []
 
-    pops = [_initial_pop(rngs[i], n_layers, cfg, int(sizes[0, i]))
-            for i in range(I)]
-    base = 0
-    t0 = time.time()
-    for gen in range(gens):
+    # ---- checkpoint/resume (same contract as the serial loop, with
+    # per-island RNG streams / populations / archives in the state) ----
+    start_gen, base, elapsed0 = 0, 0, 0.0
+    snap = _load_search_checkpoint(cfg, n_layers, "dse-search-island")
+    if snap is None:
+        pops = [_initial_pop(rngs[i], n_layers, cfg, int(sizes[0, i]))
+                for i in range(I)]
+    else:
+        start_gen, base = snap["gen"], snap["base"]
+        rngs = [resilience.rng_from_state(s) for s in snap["rngs"]]
+        pops = [DesignBatch.from_numpy(*p) for p in snap["pops"]]
+        hall_end[:base], hall_pipe[:base] = snap["hall"][0], snap["hall"][1]
+        hall_nce[:base], hall_inter[:base] = snap["hall"][2], snap["hall"][3]
+        all_points[:base] = snap["points"]
+        hall_ok[:base] = snap["ok"]
+        if snap["metrics"]:
+            all_metrics.append(snap["metrics"])
+        for arch, (apts, apay) in zip(islands, snap["islands"]):
+            arch.points, arch.payload = apts.copy(), apay.copy()
+        merged.points = snap["merged"][0].copy()
+        merged.payload = snap["merged"][1].copy()
+        lo, hi = jnp.asarray(snap["lo"]), jnp.asarray(snap["hi"])
+        history.extend(snap["history"])
+        elapsed0 = snap["elapsed_s"]
+    ckpt_every = max(1, cfg.checkpoint_interval)
+    t0 = time.time() - elapsed0
+    for gen in range(start_gen, gens):
+        if cfg.checkpoint_path and gen > 0 and gen % ckpt_every == 0:
+            resilience.save_checkpoint(
+                cfg.checkpoint_path, "dse-search-island",
+                {"gen": gen, "base": base,
+                 "rngs": [resilience.rng_state(r) for r in rngs],
+                 "pops": [tuple(p.to_numpy()) for p in pops],
+                 "hall": (hall_end[:base].copy(), hall_pipe[:base].copy(),
+                          hall_nce[:base].copy(), hall_inter[:base].copy()),
+                 "points": all_points[:base].copy(),
+                 "ok": hall_ok[:base].copy(),
+                 "metrics": _merged_metrics(all_metrics),
+                 "islands": [(a.points.copy(), a.payload.copy())
+                             for a in islands],
+                 "merged": (merged.points.copy(), merged.payload.copy()),
+                 "lo": np.asarray(lo), "hi": np.asarray(hi),
+                 "history": list(history),
+                 "elapsed_s": time.time() - t0},
+                meta=_checkpoint_meta(cfg, n_layers))
         ws = []
         for i in range(I):
             if cfg.mode == "scalarized":

@@ -48,11 +48,14 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from .. import resilience
 from ..dse.encoding import NS, DesignBatch, MultiDesignBatch, \
     sample_assign, stack_designs
 from ..dse.pareto import ParetoArchive
 from ..dse.samplers import sample_mixed
-from ..dse.search import SearchConfig, make_children, orient
+from ..dse.search import (SearchConfig, _checkpoint_meta,
+                          _load_search_checkpoint, _merged_metrics,
+                          make_children, orient)
 from .joint_eval import (DEADLINE_SCALES, make_multi_tables, joint_evaluate,
                          slo_attainment_dist)
 from .partition import DEFAULT_FLOORS, DEFAULT_MAX_M, equal_shares, \
@@ -138,6 +141,11 @@ class MultinetSearchConfig:
     slo_s: tuple[float, ...] | None = None
     floors: tuple[float, float, float] = DEFAULT_FLOORS
     max_m: int = DEFAULT_MAX_M
+    # ---- checkpoint/resume (docs/robustness.md; same contract as the
+    # single-model SearchConfig: a resumed run is bit-identical) -------
+    checkpoint_path: str | None = None
+    checkpoint_interval: int = 8
+    resume: bool = False
 
     def design_cfg(self) -> SearchConfig:
         """The per-model design-operator knobs, as the single-model
@@ -409,11 +417,48 @@ def joint_search(nets, dev, config: MultinetSearchConfig | None = None,
         return {k: np.concatenate([o[k] for o in outs])
                 if len(outs) > 1 else outs[0][k] for k in outs[0]}
 
-    pop_md = stack_designs(fresh_designs(sizes[0]), max_m)
-    pop_sh = fresh_shares(sizes[0])
-    base = 0
-    t0 = time.time()
-    for gen in range(gens):
+    # ---- checkpoint/resume: restore loop state exactly as it was at
+    # the top of generation `start_gen`, before that gen's RNG draws ---
+    start_gen, base, elapsed0 = 0, 0, 0.0
+    snap = _load_search_checkpoint(cfg, tuple(n_layers), "multinet-search")
+    if snap is None:
+        pop_md = stack_designs(fresh_designs(sizes[0]), max_m)
+        pop_sh = fresh_shares(sizes[0])
+    else:
+        start_gen, base = snap["gen"], snap["base"]
+        rng = resilience.rng_from_state(snap["rng"])
+        pop_md = MultiDesignBatch(*snap["pop_md"])
+        pop_sh = {r: v.copy() for r, v in snap["pop_sh"].items()}
+        hall_end[:base], hall_pipe[:base] = snap["hall"][0], snap["hall"][1]
+        hall_nce[:base], hall_inter[:base] = snap["hall"][2], snap["hall"][3]
+        for r in genes:
+            hall_sh[r][:base] = snap["hall_sh"][r]
+        all_points[:base] = snap["points"]
+        if snap["metrics"]:
+            all_metrics.append(snap["metrics"])
+        archive.points = snap["archive"][0].copy()
+        archive.payload = snap["archive"][1].copy()
+        history.extend(snap["history"])
+        elapsed0 = snap["elapsed_s"]
+    ckpt_every = max(1, cfg.checkpoint_interval)
+    t0 = time.time() - elapsed0
+    for gen in range(start_gen, gens):
+        if cfg.checkpoint_path and gen > 0 and gen % ckpt_every == 0:
+            resilience.save_checkpoint(
+                cfg.checkpoint_path, "multinet-search",
+                {"gen": gen, "base": base,
+                 "rng": resilience.rng_state(rng),
+                 "pop_md": tuple(np.asarray(a) for a in pop_md.to_numpy()),
+                 "pop_sh": {r: v.copy() for r, v in pop_sh.items()},
+                 "hall": (hall_end[:base].copy(), hall_pipe[:base].copy(),
+                          hall_nce[:base].copy(), hall_inter[:base].copy()),
+                 "hall_sh": {r: hall_sh[r][:base].copy() for r in genes},
+                 "points": all_points[:base].copy(),
+                 "metrics": _merged_metrics(all_metrics),
+                 "archive": (archive.points.copy(), archive.payload.copy()),
+                 "history": list(history),
+                 "elapsed_s": time.time() - t0},
+                meta=_checkpoint_meta(cfg, tuple(n_layers)))
         out = eval_gen(pop_md, pop_sh)
         pts = orient(out, objectives)
         ok = np.isfinite(pts).all(1)

@@ -46,6 +46,8 @@ from .dse.driver import DEFAULT_OBJECTIVES
 from .dse.encoding import DesignBatch
 from .evaluator import _evaluate_design, build_design
 from .notation import AcceleratorSpec, parse
+from .resilience import (CircuitBreaker, EvalError, classify,
+                         nonfinite_keys, retry_delay, wrap)
 from .workload import Network
 
 
@@ -90,6 +92,23 @@ class EvalConfig:
     #: session builds one ``core.shard.EvalMesh`` from this and threads it
     #: through evaluate()/explore()/deploy()/submit() (docs/perf.md)
     mesh: int | None = None
+    #: default per-request wall-clock deadline of submit(), in seconds.
+    #: A request still queued (or whose result is not yet delivered) when
+    #: its deadline passes fails with ``EvalError.DEADLINE_EXCEEDED``
+    #: instead of hanging; None disables.  submit(deadline_s=...) wins
+    #: per request (docs/robustness.md)
+    deadline_s: float | None = None
+    #: admission control: maximum queued submit() requests.  Further
+    #: submits fail fast with ``EvalError.QUEUE_FULL`` instead of growing
+    #: the queue without bound; None = unbounded
+    max_queue: int | None = None
+    #: transient-fault retries of the primary backend per call, with
+    #: exponential backoff (``resilience.retry_delay``) between attempts
+    max_retries: int = 0
+    #: degraded-mode backend when the primary faults past its retries (and
+    #: when the circuit breaker is open): the bit-tested pure-jnp "ref"
+    #: path by default.  None disables fallback entirely
+    fallback_backend: str | None = "ref"
 
     def resolved(self) -> "EvalConfig":
         """Pin the env-dependent fields (backend, cache_dir, mesh) to
@@ -98,9 +117,18 @@ class EvalConfig:
 
         from ..compat import CACHE_ENV
         from .shard import env_mesh_devices
+        if self.max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, "
+                             f"got {self.max_retries}")
+        if self.max_queue is not None and self.max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {self.max_queue}")
+        if self.deadline_s is not None and self.deadline_s <= 0:
+            raise ValueError(f"deadline_s must be > 0, got {self.deadline_s}")
         return replace(
             self,
             backend=resolve_backend(self.backend),
+            fallback_backend=None if self.fallback_backend is None
+            else resolve_backend(self.fallback_backend),
             cache_dir=self.cache_dir or os.environ.get(CACHE_ENV) or None,
             mesh=self.mesh if self.mesh is not None else env_mesh_devices())
 
@@ -122,6 +150,11 @@ class SessionStats:
     submits: int = 0
     megabatches: int = 0
     megabatch_requests: int = 0
+    # resilience counters (docs/robustness.md)
+    rejected: int = 0          # submits refused by admission control
+    retried: int = 0           # primary-backend retry attempts
+    degraded: int = 0          # calls served by the fallback backend
+    deadline_missed: int = 0   # requests failed with DEADLINE_EXCEEDED
 
     def as_dict(self) -> dict[str, int]:
         return {f.name: getattr(self, f.name) for f in fields(self)}
@@ -130,14 +163,15 @@ class SessionStats:
 class _Request:
     """One queued :meth:`Session.submit` unit of work."""
 
-    __slots__ = ("specs", "net", "dev", "future", "scalar")
+    __slots__ = ("specs", "net", "dev", "future", "scalar", "deadline")
 
-    def __init__(self, specs, net, dev, future, scalar):
+    def __init__(self, specs, net, dev, future, scalar, deadline=None):
         self.specs = specs
         self.net = net
         self.dev = dev
         self.future = future
         self.scalar = scalar
+        self.deadline = deadline   # absolute time.monotonic(), or None
 
 
 # --------------------------------------------------------------------------
@@ -172,6 +206,9 @@ class Session:
         self.mesh = EvalMesh(ndevices=self.config.mesh)
         self.default_device = dev
         self.stats = SessionStats()
+        #: trips on repeated primary-backend faults; while open, calls
+        #: degrade to ``fallback_backend`` with periodic recovery probes
+        self.breaker = CircuitBreaker()
         # memoization has its own lock (held across check+build+count, so
         # the drain thread and callers can't race a duplicate build); the
         # condition variable below is the submit queue's only
@@ -281,6 +318,57 @@ class Session:
             self.stats.multi_table_builds += 1
             return built
 
+    # ---- resilience ------------------------------------------------------
+    def _resilient_call(self, call):
+        """Run ``call(backend)`` under the session's fault policy:
+
+        * input-shaped errors (parse/encode/shape problems) raise
+          ``EvalError(INVALID_INPUT)`` immediately — retrying can't help;
+        * backend faults retry the primary up to ``max_retries`` times
+          with exponential backoff, feeding the circuit breaker;
+        * past the retries (or with the breaker open, minus its periodic
+          recovery probes) the call degrades to ``fallback_backend``.
+        """
+        cfg = self.config
+        fallback = cfg.fallback_backend
+        has_fallback = fallback is not None and fallback != cfg.backend
+        if has_fallback and not self.breaker.allow_primary():
+            self.stats.degraded += 1
+            return call(fallback)
+        last = None
+        for attempt in range(cfg.max_retries + 1):
+            if attempt:
+                self.stats.retried += 1
+                time.sleep(retry_delay(attempt))
+            try:
+                out = call(cfg.backend)
+            except Exception as e:  # noqa: BLE001 — classified below
+                if classify(e) != EvalError.BACKEND_FAULT:
+                    raise wrap(e) from e
+                self.breaker.record_failure()
+                last = e
+            else:
+                self.breaker.record_success()
+                return out
+        if has_fallback:
+            self.stats.degraded += 1
+            try:
+                return call(fallback)
+            except Exception as e:  # noqa: BLE001
+                raise wrap(e) from e
+        raise wrap(last, EvalError.BACKEND_FAULT) from last
+
+    def _search_backend(self) -> str:
+        """Backend for the explore()/deploy() search loops: the primary,
+        unless the breaker is open and a fallback exists (a whole search
+        is too expensive to gamble on a recovery probe)."""
+        cfg = self.config
+        fb = cfg.fallback_backend
+        if fb is not None and fb != cfg.backend and self.breaker.is_open:
+            self.stats.degraded += 1
+            return fb
+        return cfg.backend
+
     # ---- evaluation ------------------------------------------------------
     def _parse(self, design, net: Network,
                inter_segment_pipelining: bool) -> AcceleratorSpec:
@@ -308,26 +396,58 @@ class Session:
         dev = self._device(dev)
         if isinstance(designs, (str, AcceleratorSpec)):
             self.stats.scalar_evals += 1
-            return _evaluate_design(
-                designs, net, dev,
-                inter_segment_pipelining=inter_segment_pipelining)
+            try:
+                m = _evaluate_design(
+                    designs, net, dev,
+                    inter_segment_pipelining=inter_segment_pipelining)
+            except Exception as e:  # noqa: BLE001 — taxonomy boundary
+                raise wrap(e) from e
+            if not np.isfinite([m.latency_s, m.throughput_ips,
+                                float(m.buffer_bytes)]).all():
+                raise EvalError(EvalError.NONFINITE_METRICS,
+                                "scalar evaluation produced non-finite "
+                                "metrics")
+            return m
         cfg = self.config
         if isinstance(designs, DesignBatch):
+            from .dse.encoding import NC, validate_batch
+            try:
+                ok = validate_batch(designs, len(net), min_ces=1,
+                                    max_ces=NC)
+            except Exception as e:  # noqa: BLE001 — malformed arrays
+                raise wrap(e, EvalError.INVALID_INPUT) from e
+            if not ok.all():
+                bad = np.nonzero(~ok)[0]
+                raise EvalError(
+                    EvalError.INVALID_INPUT,
+                    f"{bad.size} invalid DesignBatch row(s), first at "
+                    f"index {int(bad[0])} (non-canonical segments or CE "
+                    f"count outside [1, {NC}])")
             self.stats.batch_designs += designs.batch
-            return evaluate_batch(
+            return self._resilient_call(lambda b: evaluate_batch(
                 designs, self.tables(net), self.device_tables(dev),
-                fm_tile_rows=cfg.fm_tile_rows, backend=cfg.backend,
-                tile=cfg.tile, design_tile=cfg.design_tile, mesh=self.mesh)
-        specs = [self._parse(d, net, inter_segment_pipelining)
-                 for d in designs]
+                fm_tile_rows=cfg.fm_tile_rows, backend=b,
+                tile=cfg.tile, design_tile=cfg.design_tile, mesh=self.mesh))
+        try:
+            specs = [self._parse(d, net, inter_segment_pipelining)
+                     for d in designs]
+        except Exception as e:  # noqa: BLE001
+            raise wrap(e, EvalError.INVALID_INPUT) from e
         if not specs:
-            raise ValueError("no designs to evaluate (empty list)")
+            raise EvalError(EvalError.INVALID_INPUT,
+                            "no designs to evaluate (empty list)")
         self.stats.batch_designs += len(specs)
-        return _evaluate_specs(specs, net, self.device_tables(dev),
-                               cfg.chunk, tables=self.tables(net),
-                               backend=cfg.backend, tile=cfg.tile,
-                               fm_tile_rows=cfg.fm_tile_rows,
-                               design_tile=cfg.design_tile, mesh=self.mesh)
+        out = self._resilient_call(lambda b: _evaluate_specs(
+            specs, net, self.device_tables(dev),
+            cfg.chunk, tables=self.tables(net),
+            backend=b, tile=cfg.tile,
+            fm_tile_rows=cfg.fm_tile_rows,
+            design_tile=cfg.design_tile, mesh=self.mesh))
+        bad = nonfinite_keys(out)
+        if bad:
+            raise EvalError(EvalError.NONFINITE_METRICS,
+                            f"non-finite metrics {bad}")
+        return out
 
     def build(self, design, net: Network, dev: DeviceSpec | None = None,
               *, opts=None, inter_segment_pipelining: bool = True):
@@ -352,7 +472,7 @@ class Session:
                         chunk=chunk, strategy=strategy,
                         objectives=objectives, config=config,
                         tables=self.tables(net),
-                        backend=self.config.backend, mesh=self.mesh)
+                        backend=self._search_backend(), mesh=self.mesh)
 
     def deploy(self, nets, n: int = 4096, dev: DeviceSpec | None = None, *,
                strategy: str = "search", seed: int = 0, chunk: int = 512,
@@ -378,13 +498,14 @@ class Session:
             objectives=JOINT_OBJECTIVES if objectives is None
             else objectives,
             objective=objective, config=config, weights=weights,
-            slo_s=slo_s, mtables=mt, backend=self.config.backend,
+            slo_s=slo_s, mtables=mt, backend=self._search_backend(),
             mesh=self.mesh)
 
     # ---- queued requests (the serve-many-users path) ---------------------
     def submit(self, designs, net: Network,
                dev: DeviceSpec | None = None, *,
-               inter_segment_pipelining: bool = True) -> Future:
+               inter_segment_pipelining: bool = True,
+               deadline_s: float | None = None) -> Future:
         """Queue an evaluation request; returns a ``Future``.
 
         A background drain loop collects everything queued within the
@@ -394,18 +515,46 @@ class Session:
         compile).  The future resolves to ``{metric: np.ndarray}`` over
         the submitted specs; a single spec/string resolves to
         ``{metric: float}``.
+
+        Failure semantics (docs/robustness.md): malformed designs raise
+        ``EvalError(INVALID_INPUT)`` here, synchronously; with
+        ``max_queue`` set, an over-full queue raises
+        ``EvalError(QUEUE_FULL)``; ``deadline_s`` (defaulting to the
+        config's) fails the future with ``EvalError(DEADLINE_EXCEEDED)``
+        if the result can't be delivered in time — a request never hangs.
         """
         scalar = isinstance(designs, (str, AcceleratorSpec))
         raw = [designs] if scalar else list(designs)
-        specs = [self._parse(d, net, inter_segment_pipelining) for d in raw]
+        try:
+            specs = [self._parse(d, net, inter_segment_pipelining)
+                     for d in raw]
+        except Exception as e:  # noqa: BLE001 — taxonomy boundary
+            raise wrap(e, EvalError.INVALID_INPUT) from e
         if not specs:
             # reject here: an empty job inside a megabatch would fail the
             # whole batch's futures, not just this one
-            raise ValueError("no designs to submit (empty list)")
-        req = _Request(specs, net, self._device(dev), Future(), scalar)
+            raise EvalError(EvalError.INVALID_INPUT,
+                            "no designs to submit (empty list)")
+        cfg = self.config
+        if deadline_s is None:
+            deadline_s = cfg.deadline_s
+        deadline = None if deadline_s is None \
+            else time.monotonic() + deadline_s
+        req = _Request(specs, net, self._device(dev), Future(), scalar,
+                       deadline)
         with self._cv:
             if self._closed:
-                raise RuntimeError("Session is closed")
+                raise RuntimeError(
+                    "session closed: submit() is refused after close() "
+                    "(the drain loop is stopped; synchronous evaluate() "
+                    "still works)")
+            if cfg.max_queue is not None \
+                    and len(self._pending) >= cfg.max_queue:
+                self.stats.rejected += 1
+                raise EvalError(
+                    EvalError.QUEUE_FULL,
+                    f"submit queue full ({cfg.max_queue} pending "
+                    f"requests); retry after the queue drains")
             self._pending.append(req)
             if self._worker is None:
                 self._worker = threading.Thread(
@@ -443,44 +592,106 @@ class Session:
             out = {k: float(v[0]) for k, v in out.items()}
         r.future.set_result(out)
 
-    def _eval_one(self, r: _Request) -> dict:
+    def _fail(self, r: _Request, exc: BaseException) -> None:
+        if r.future.set_running_or_notify_cancel():
+            r.future.set_exception(wrap(exc))
+
+    def _expire(self, reqs: list[_Request]) -> list[_Request]:
+        """Fail requests whose deadline already passed (DEADLINE_EXCEEDED)
+        before spending any evaluation on them; returns the live rest."""
+        now = time.monotonic()
+        live = []
+        for r in reqs:
+            if r.deadline is not None and now > r.deadline:
+                self.stats.deadline_missed += 1
+                self._fail(r, EvalError(
+                    EvalError.DEADLINE_EXCEEDED,
+                    "deadline passed while the request was queued"))
+            else:
+                live.append(r)
+        return live
+
+    def _finish(self, r: _Request, out: dict) -> None:
+        """Finite-guard + deadline-check one request's result, then
+        deliver: NaN/Inf rows fail THEIR future, not the megabatch, and
+        strict deadlines refuse late delivery."""
+        bad = nonfinite_keys(out)
+        if bad:
+            self._fail(r, EvalError(EvalError.NONFINITE_METRICS,
+                                    f"non-finite metrics {bad}"))
+            return
+        if r.deadline is not None and time.monotonic() > r.deadline:
+            self.stats.deadline_missed += 1
+            self._fail(r, EvalError(EvalError.DEADLINE_EXCEEDED,
+                                    "deadline passed during evaluation"))
+            return
+        self.stats.megabatch_requests += 1
+        self._deliver(r, out)
+
+    def _eval_one(self, r: _Request, backend: str | None = None) -> dict:
         cfg = self.config
         return _evaluate_specs(r.specs, r.net, self.device_tables(r.dev),
                                cfg.chunk, tables=self.tables(r.net),
-                               backend=cfg.backend, tile=cfg.tile,
+                               backend=backend or cfg.backend,
+                               tile=cfg.tile,
                                fm_tile_rows=cfg.fm_tile_rows,
                                design_tile=cfg.design_tile, mesh=self.mesh)
 
     def _run_megabatch(self, reqs: list[_Request]) -> None:
-        cfg = self.config
+        # the outer net: whatever goes wrong below, every future resolves
+        # — a drain must never leave callers hanging
         try:
-            # memoized tables for BOTH axes: nets and boards
-            jobs = [(r.specs, r.net, self.device_tables(r.dev))
-                    for r in reqs]
-            tabs = [self.tables(r.net) for r in reqs]
-            results = _evaluate_specs_multi(jobs, cfg.chunk,
-                                            backend=cfg.backend,
-                                            tile=cfg.tile, tables=tabs,
-                                            fm_tile_rows=cfg.fm_tile_rows,
-                                            design_tile=cfg.design_tile,
-                                            mesh=self.mesh)
-        except BaseException:  # noqa: BLE001 — isolate the bad job(s)
+            self._run_megabatch_inner(reqs)
+        except BaseException as e:  # noqa: BLE001
+            for r in reqs:
+                if not r.future.done():
+                    self._fail(r, e)
+            if not isinstance(e, Exception):   # KeyboardInterrupt etc.
+                raise
+
+    def _run_megabatch_inner(self, reqs: list[_Request]) -> None:
+        cfg = self.config
+        reqs = self._expire(reqs)
+        if not reqs:
+            return
+        # memoized tables for BOTH axes, built per request under its own
+        # guard: one request's broken net/board fails ITS future only,
+        # the rest still megabatch together
+        ready: list[tuple[_Request, object, object]] = []
+        for r in reqs:
+            try:
+                tab = self.tables(r.net)
+                dtab = self.device_tables(r.dev)
+            except Exception as e:  # noqa: BLE001
+                self._fail(r, wrap(e, EvalError.INVALID_INPUT))
+            else:
+                ready.append((r, tab, dtab))
+        if not ready:
+            return
+        jobs = [(r.specs, r.net, dtab) for r, _, dtab in ready]
+        tabs = [tab for _, tab, _ in ready]
+        try:
+            results = self._resilient_call(
+                lambda b: _evaluate_specs_multi(
+                    jobs, cfg.chunk, backend=b,
+                    tile=cfg.tile, tables=tabs,
+                    fm_tile_rows=cfg.fm_tile_rows,
+                    design_tile=cfg.design_tile, mesh=self.mesh))
+        except Exception:  # noqa: BLE001 — isolate the bad job(s)
             # one malformed request must not poison its co-queued peers:
             # retry per request so each future gets ITS OWN result/error
-            for r in reqs:
+            for r, _, _ in ready:
                 try:
-                    out = self._eval_one(r)
-                except BaseException as e:  # noqa: BLE001
-                    if r.future.set_running_or_notify_cancel():
-                        r.future.set_exception(e)
+                    out = self._resilient_call(
+                        lambda b, r=r: self._eval_one(r, b))
+                except Exception as e:  # noqa: BLE001
+                    self._fail(r, e)
                 else:
-                    self._deliver(r, out)
-                    self.stats.megabatch_requests += 1
+                    self._finish(r, out)
             return
         self.stats.megabatches += 1
-        self.stats.megabatch_requests += len(reqs)
-        for r, out in zip(reqs, results):
-            self._deliver(r, out)
+        for (r, _, _), out in zip(ready, results):
+            self._finish(r, out)
 
     # ---- observability ---------------------------------------------------
     def compile_stats(self) -> dict[str, int]:
@@ -510,6 +721,13 @@ class Session:
         for name, n in mesh_compile_counts().items():
             counts[f"mesh_{name}"] = n
         counts["total"] = sum(v for k, v in counts.items() if k != "total")
+        # resilience counters ride along for one-stop observability; they
+        # are NOT compile counts, so they stay out of `total` (and are all
+        # zero on a clean run — the warm-round equality tests still hold)
+        counts["rejected"] = self.stats.rejected
+        counts["retried"] = self.stats.retried
+        counts["degraded"] = self.stats.degraded
+        counts["deadline_missed"] = self.stats.deadline_missed
         return counts
 
 

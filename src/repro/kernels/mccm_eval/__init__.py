@@ -5,4 +5,5 @@ from .ops import (  # noqa: F401
     pair_tables,
     parallelism_search,
     resolve_backend,
+    set_fault_hook,
 )

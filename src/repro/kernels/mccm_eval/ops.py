@@ -67,6 +67,22 @@ def pair_tables(candidates: tuple, pes_hint: int | None) -> PairTables:
                       cand.astype(np.float32))
 
 
+#: test-only fault-injection hook (see tests/faults.py): when set, called
+#: as ``hook("parallelism_search", backend)`` at every dispatch — at TRACE
+#: time, so a raising hook aborts the jit compile (failed compiles are not
+#: cached, so every call through a faulty backend keeps faulting, which is
+#: exactly the repeated-failure signature the circuit breaker consumes)
+_FAULT_HOOK = None
+
+
+def set_fault_hook(hook):
+    """Install (or, with ``None``, uninstall) the fault-injection hook;
+    returns the previous hook so tests can restore it."""
+    global _FAULT_HOOK
+    prev, _FAULT_HOOK = _FAULT_HOOK, hook
+    return prev
+
+
 def parallelism_search(pes_ce, ce_of_layer, ce_oh, fc_pair, coh_pair,
                        ceil_ow, ow, pairs: PairTables, *,
                        backend: str = "ref", design_tile: int = 16):
@@ -76,6 +92,9 @@ def parallelism_search(pes_ce, ce_of_layer, ce_oh, fc_pair, coh_pair,
     kernel's in-VMEM ceil-div — both encode the same table.
     """
     import jax.numpy as jnp
+
+    if _FAULT_HOOK is not None:
+        _FAULT_HOOK("parallelism_search", backend)
 
     cand = jnp.asarray(pairs.cand)
     if backend == "ref":

@@ -1,0 +1,127 @@
+"""Deterministic fault-injection harness for the chaos suite.
+
+Three injection points, all count-based (no wall clock, no randomness) so
+every chaos scenario replays exactly:
+
+* :class:`CountingHook` + :func:`inject_fault` — raise out of the kernel
+  dispatch (``mccm_eval.ops.parallelism_search``) at TRACE time, which is
+  what a broken Pallas lowering looks like to the session.  Failed jit
+  compiles are not cached, so every call through the faulty backend keeps
+  faulting — the repeated-failure signature the circuit breaker consumes.
+  The hook filters on the backend name, so a session's ``ref`` fallback
+  traces straight through the same injection point unharmed.
+* :func:`poison_megabatch` — wrap ``session._evaluate_specs_multi`` so
+  one job's metrics come back NaN: the silent-corruption case the finite
+  guards must isolate to that request's future.
+* :func:`kill_after_checkpoints` — let the first N checkpoint writes land
+  on disk, then raise :class:`Killed` (a ``BaseException``, like a real
+  SIGKILL neither the search loop nor pytest machinery will swallow) out
+  of the search loop: the crash-mid-search case checkpoint/resume must
+  recover bit-identically.  ``tests/chaos_kill_resume.py`` runs the same
+  scenario with an actual ``SIGKILL`` across processes.
+
+Used by ``tests/test_chaos.py``; semantics in ``docs/robustness.md``.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import numpy as np
+
+from repro.kernels.mccm_eval import ops as _ops
+
+
+class FaultInjected(RuntimeError):
+    """The synthetic backend fault the harness raises at trace time."""
+
+
+class CountingHook:
+    """A fault hook that raises :class:`FaultInjected` on the first
+    ``fail_first_n`` traces through the kernel dispatch (``None`` = every
+    trace), counting every matching trace either way.
+
+    ``backend`` restricts the faults (and the count) to one backend name,
+    so a degraded session's fallback traces are left alone.
+    """
+
+    def __init__(self, fail_first_n: int | None = None,
+                 backend: str | None = None):
+        self.fail_first_n = fail_first_n
+        self.backend = backend
+        self.calls = 0
+
+    def __call__(self, site: str, backend: str) -> None:
+        if self.backend is not None and backend != self.backend:
+            return
+        self.calls += 1
+        if self.fail_first_n is None or self.calls <= self.fail_first_n:
+            raise FaultInjected(
+                f"injected fault at {site} (backend={backend}, "
+                f"trace #{self.calls})")
+
+
+@contextlib.contextmanager
+def inject_fault(hook):
+    """Install ``hook`` as the kernel fault hook for the block, restoring
+    whatever was installed before (exception-safe, so one failing chaos
+    test can't poison the rest of the suite)."""
+    prev = _ops.set_fault_hook(hook)
+    try:
+        yield hook
+    finally:
+        _ops.set_fault_hook(prev)
+
+
+@contextlib.contextmanager
+def poison_megabatch(job_index: int, key: str = "latency_s"):
+    """Corrupt one job of every megabatch dispatch for the block: job
+    ``job_index``'s ``key`` metric comes back all-NaN, everything else is
+    delivered verbatim — silent data corruption, not an exception."""
+    from repro.core import session as _session
+
+    orig = _session._evaluate_specs_multi
+
+    def poisoned(jobs, *args, **kwargs):
+        results = list(orig(jobs, *args, **kwargs))
+        if job_index < len(results):
+            out = dict(results[job_index])
+            arr = np.array(out[key], dtype=np.float64, copy=True)
+            arr[...] = np.nan
+            out[key] = arr
+            results[job_index] = out
+        return results
+
+    _session._evaluate_specs_multi = poisoned
+    try:
+        yield
+    finally:
+        _session._evaluate_specs_multi = orig
+
+
+class Killed(BaseException):
+    """Simulated hard crash (BaseException so nothing downstream of the
+    checkpoint writer can catch-and-continue past it, like SIGKILL)."""
+
+
+@contextlib.contextmanager
+def kill_after_checkpoints(n: int):
+    """Let the first ``n`` checkpoint writes complete, then raise
+    :class:`Killed` out of the writer — i.e. the process dies right after
+    its n-th snapshot lands on disk.  Yields a dict whose ``"writes"``
+    entry counts the completed writes."""
+    from repro.core import resilience as res
+
+    orig = res.save_checkpoint
+    state = {"writes": 0}
+
+    def writer(path, kind, snap, meta=None):
+        orig(path, kind, snap, meta=meta)
+        state["writes"] += 1
+        if state["writes"] >= n:
+            raise Killed(f"simulated crash after checkpoint write #{n}")
+
+    res.save_checkpoint = writer
+    try:
+        yield state
+    finally:
+        res.save_checkpoint = orig

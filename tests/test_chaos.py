@@ -1,0 +1,304 @@
+"""Chaos suite: the resilience contracts under injected faults.
+
+Every scenario is deterministic (count-based injection, fixed seeds — see
+``tests/faults.py``), so each contract is asserted exactly:
+
+* a faulting Pallas backend trips the circuit breaker and the session
+  degrades to ``ref`` with bit-identical results;
+* a poisoned (NaN) request in a mixed megabatch fails ITS future only;
+* deadlines and admission control fail with their specific error codes,
+  never by hanging;
+* transient faults are retried past, without degrading;
+* a search killed mid-run resumes from its checkpoint bit-identically
+  (serial, island and multinet loops — the cross-process SIGKILL variant
+  lives in ``tests/chaos_kill_resume.py``);
+* corrupted/mismatched checkpoints are refused up front.
+
+Contracts and recipes: ``docs/robustness.md``.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from faults import (CountingHook, FaultInjected, Killed, inject_fault,
+                    kill_after_checkpoints, poison_megabatch)
+from repro.api import EvalError, Session, load_checkpoint, save_checkpoint
+from repro.cnn.registry import get_cnn
+from repro.core.dse.search import SearchConfig, search
+from repro.core.multinet.search import MultinetSearchConfig, joint_search
+from repro.core.resilience import CircuitBreaker
+from repro.fpga.archs import ARCH_NAMES, make_arch
+from repro.fpga.boards import get_board
+
+NET = "mobilenetv2"
+BOARD = "zc706"
+
+
+def _specs(net, n_ces=4):
+    return [make_arch(a, net, n_ces) for a in ARCH_NAMES]
+
+
+def _code(excinfo) -> str:
+    assert isinstance(excinfo.value, EvalError)
+    return excinfo.value.code
+
+
+# --------------------------------------------------------------------------
+# acceptance (a): breaker trips, session degrades to ref, bit-identical
+# --------------------------------------------------------------------------
+def test_breaker_trips_and_degrades_bit_identical():
+    """With the pallas_interpret backend hard-faulting, the first calls
+    retryless-fail onto the fallback; after ``fail_threshold`` faults the
+    breaker opens and the primary is not even traced any more.  Every
+    degraded result is bit-identical to a clean ref session's."""
+    net, dev = get_cnn(NET), get_board(BOARD)
+    specs = _specs(net)
+    # design_tile=13 is unique to this test: no other test compiles it,
+    # so every primary attempt really re-traces (and re-faults)
+    ses = Session(dev, backend="pallas_interpret", design_tile=13,
+                  fallback_backend="ref", max_retries=0)
+    ref = Session(dev, backend="ref", design_tile=13)
+    want = ref.evaluate(specs, net)
+
+    hook = CountingHook(backend="pallas_interpret")   # always fault
+    with inject_fault(hook):
+        for call in range(1, 6):
+            out = ses.evaluate(specs, net)
+            for k in want:
+                np.testing.assert_array_equal(
+                    np.asarray(out[k]), np.asarray(want[k]),
+                    err_msg=f"degraded call {call}, metric {k}")
+            if call >= ses.breaker.fail_threshold:
+                assert ses.breaker.is_open
+    # one primary trace per call until the trip, then none: calls 4 and 5
+    # went straight to the fallback without touching the faulty kernel
+    assert hook.calls == ses.breaker.fail_threshold
+    assert ses.stats.degraded == 5
+    assert ses.compile_stats()["degraded"] == 5
+
+    # recovery: the fault clears (hook uninstalled); the breaker's
+    # periodic probe retries the primary and closes again
+    assert ses.breaker.is_open
+    for _ in range(ses.breaker.probe_interval):
+        out = ses.evaluate(specs, net)
+    assert not ses.breaker.is_open, \
+        "recovery probe never re-armed the breaker"
+    # once closed, the primary serves again (pallas_interpret is
+    # bit-identical to ref by the kernel parity tests)
+    degraded_before = ses.stats.degraded
+    out = ses.evaluate(specs, net)
+    assert ses.stats.degraded == degraded_before
+    for k in want:
+        np.testing.assert_array_equal(np.asarray(out[k]),
+                                      np.asarray(want[k]))
+
+
+def test_search_backend_degrades_while_breaker_open():
+    """explore() consults the breaker without spending recovery probes:
+    open -> the whole search runs on the fallback and still succeeds."""
+    net, dev = get_cnn(NET), get_board(BOARD)
+    ses = Session(dev, backend="pallas_interpret", fallback_backend="ref")
+    ses.breaker = CircuitBreaker(fail_threshold=1, probe_interval=8)
+    hook = CountingHook(backend="pallas_interpret")
+    with inject_fault(hook):
+        with pytest.raises(EvalError) as ei:
+            Session(dev, backend="pallas_interpret", fallback_backend=None,
+                    design_tile=19).evaluate(_specs(net), net)
+        assert _code(ei) == EvalError.BACKEND_FAULT
+        ses.breaker.record_failure()          # trip this session's breaker
+        assert ses.breaker.is_open
+        res = ses.explore(net, n=256, strategy="search",
+                          config=SearchConfig(pop_size=128, seed=0))
+    assert res.n_evals == 256
+    assert ses.stats.degraded == 1
+
+
+# --------------------------------------------------------------------------
+# acceptance (b): one poisoned request fails only its own future
+# --------------------------------------------------------------------------
+def test_poisoned_request_fails_only_its_future():
+    net, dev = get_cnn(NET), get_board(BOARD)
+    ses = Session(dev, linger_s=0.5)
+    with poison_megabatch(job_index=0, key="latency_s"):
+        f_bad = ses.submit(["{L1-Last:CE1-CE4}"], net)
+        f_good = ses.submit(_specs(net), net)
+        with pytest.raises(EvalError, match="non-finite") as ei:
+            f_bad.result(timeout=120)
+        assert _code(ei) == EvalError.NONFINITE_METRICS
+        good = f_good.result(timeout=120)
+    ses.close()
+    want = ses.evaluate(_specs(net), net)
+    for k in want:
+        np.testing.assert_array_equal(np.asarray(good[k]),
+                                      np.asarray(want[k]))
+    assert ses.stats.megabatches >= 1
+
+
+# --------------------------------------------------------------------------
+# acceptance (d): deadlines and admission control fail fast, never hang
+# --------------------------------------------------------------------------
+def test_deadline_exceeded_fails_with_its_code():
+    net, dev = get_cnn(NET), get_board(BOARD)
+    with Session(dev, linger_s=0.3) as ses:
+        fut = ses.submit("{L1-Last:CE1-CE4}", net, deadline_s=0.01)
+        with pytest.raises(EvalError, match="deadline") as ei:
+            fut.result(timeout=120)
+        assert _code(ei) == EvalError.DEADLINE_EXCEEDED
+        assert ses.stats.deadline_missed == 1
+        # a submit under a generous deadline still completes
+        out = ses.submit("{L1-Last:CE1-CE4}", net,
+                         deadline_s=300.0).result(timeout=300)
+        assert np.isfinite(out["latency_s"])
+    assert ses.compile_stats()["deadline_missed"] == 1
+
+
+def test_queue_full_rejects_with_its_code():
+    net, dev = get_cnn(NET), get_board(BOARD)
+    # a long linger holds the first request in the queue while the second
+    # submit arrives, so admission control sees a deterministic queue depth
+    ses = Session(dev, max_queue=1, linger_s=1.0)
+    f1 = ses.submit(_specs(net), net)
+    with pytest.raises(EvalError, match="queue full") as ei:
+        ses.submit(_specs(net), net)
+    assert _code(ei) == EvalError.QUEUE_FULL
+    assert ses.stats.rejected == 1
+    out = f1.result(timeout=300)              # the admitted one completes
+    assert np.isfinite(np.asarray(out["latency_s"])).all()
+    ses.close()
+
+
+# --------------------------------------------------------------------------
+# retries: transient faults are absorbed without degrading
+# --------------------------------------------------------------------------
+def test_transient_fault_retried_past_without_degrading():
+    net, dev = get_cnn(NET), get_board(BOARD)
+    ses = Session(dev, backend="pallas_interpret", design_tile=17,
+                  fallback_backend="ref", max_retries=2)
+    hook = CountingHook(fail_first_n=2, backend="pallas_interpret")
+    with inject_fault(hook):
+        out = ses.evaluate(_specs(net), net)
+    assert hook.calls == 3                    # 2 faults + 1 clean trace
+    assert ses.stats.retried == 2
+    assert ses.stats.degraded == 0
+    assert not ses.breaker.is_open            # success reset the breaker
+    want = Session(dev, backend="ref").evaluate(_specs(net), net)
+    for k in want:
+        np.testing.assert_array_equal(np.asarray(out[k]),
+                                      np.asarray(want[k]))
+
+
+# --------------------------------------------------------------------------
+# acceptance (c): kill mid-search, resume bit-identical (in-process;
+# the SIGKILL + REPRO_MESH_DEVICES=4 variant: tests/chaos_kill_resume.py)
+# --------------------------------------------------------------------------
+def _assert_same_search(a, b):
+    np.testing.assert_array_equal(a.front_idx, b.front_idx)
+    np.testing.assert_array_equal(a.points, b.points)
+    for k in a.metrics:
+        np.testing.assert_array_equal(a.metrics[k], b.metrics[k])
+    assert len(a.history) == len(b.history)
+    for ha, hb in zip(a.history, b.history):
+        for k in ha:
+            if k != "elapsed_s":
+                np.testing.assert_array_equal(ha[k], hb[k])
+
+
+@pytest.mark.parametrize("islands", [None, 2],
+                         ids=["serial", "island2"])
+def test_search_killed_and_resumed_bit_identical(islands, tmp_path):
+    net, dev = get_cnn(NET), get_board(BOARD)
+    # both variants run >= 5 generations, so interval-2 checkpointing
+    # writes twice (gens 2 and 4) before the simulated crash
+    base = dict(pop_size=32, budget=192, seed=3, n_islands=islands) \
+        if islands is None else \
+        dict(pop_size=16, budget=160, seed=3, n_islands=islands,
+             migration_interval=2, migration_elites=4)
+    plain = search(net, dev, SearchConfig(**base))
+    ckpt = str(tmp_path / "dse.ckpt")
+    cfg = SearchConfig(**base, checkpoint_path=ckpt, checkpoint_interval=2)
+    with kill_after_checkpoints(2) as wrote:
+        with pytest.raises(Killed):
+            search(net, dev, cfg)
+    assert wrote["writes"] == 2
+    resumed = search(net, dev,
+                     SearchConfig(**{**base, "checkpoint_path": ckpt,
+                                     "checkpoint_interval": 2,
+                                     "resume": True}))
+    _assert_same_search(plain, resumed)
+    if islands:
+        assert len(resumed.island_fronts) == islands
+        for fa, fb in zip(plain.island_fronts, resumed.island_fronts):
+            np.testing.assert_array_equal(fa, fb)
+
+
+def test_multinet_search_killed_and_resumed_bit_identical(tmp_path):
+    nets = [get_cnn(NET), get_cnn("resnet50")]
+    dev = get_board(BOARD)
+    base = dict(pop_size=16, budget=96, seed=2, mode="spatial")
+    plain = joint_search(nets, dev, MultinetSearchConfig(**base))
+    ckpt = str(tmp_path / "mn.ckpt")
+    with kill_after_checkpoints(2):
+        with pytest.raises(Killed):
+            joint_search(nets, dev, MultinetSearchConfig(
+                **base, checkpoint_path=ckpt, checkpoint_interval=2))
+    resumed = joint_search(nets, dev, MultinetSearchConfig(
+        **base, checkpoint_path=ckpt, checkpoint_interval=2, resume=True))
+    _assert_same_search(plain, resumed)
+    for r in plain.shares:
+        np.testing.assert_array_equal(plain.shares[r], resumed.shares[r])
+
+
+# the real thing: a worker SIGKILLs itself mid-search; a fresh process
+# resumes bit-identically (island mode under REPRO_MESH_DEVICES=4)
+@pytest.mark.slow
+@pytest.mark.parametrize("mode", ["serial", "island"])
+def test_sigkill_and_resume_subprocess(mode):
+    script = os.path.join(os.path.dirname(__file__), "chaos_kill_resume.py")
+    out = subprocess.run([sys.executable, script, mode],
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, \
+        f"chaos driver {mode} failed:\n{out.stdout}\n{out.stderr}"
+    assert f"CHAOS_OK {mode}" in out.stdout
+
+
+# --------------------------------------------------------------------------
+# checkpoint integrity: corruption and mismatches are refused up front
+# --------------------------------------------------------------------------
+def test_corrupt_checkpoint_refused(tmp_path):
+    path = str(tmp_path / "x.ckpt")
+    save_checkpoint(path, "dse-search", {"gen": 3}, meta={"fingerprint": 1})
+    assert load_checkpoint(path, kind="dse-search")["state"]["gen"] == 3
+    with open(path, "r+b") as f:              # flip one payload byte
+        f.seek(-1, 2)
+        last = f.read(1)
+        f.seek(-1, 2)
+        f.write(bytes([last[0] ^ 0xFF]))
+    with pytest.raises(EvalError, match="checksum") as ei:
+        load_checkpoint(path, kind="dse-search")
+    assert _code(ei) == EvalError.INVALID_INPUT
+
+
+def test_wrong_kind_and_fingerprint_refused(tmp_path):
+    path = str(tmp_path / "x.ckpt")
+    save_checkpoint(path, "dse-search", {"gen": 1}, meta={"fingerprint": 1})
+    with pytest.raises(EvalError, match="kind"):
+        load_checkpoint(path, kind="multinet-search")
+    # a resume under different search settings is refused, not misapplied
+    net, dev = get_cnn(NET), get_board(BOARD)
+    cfg = SearchConfig(pop_size=32, budget=128, seed=3,
+                       checkpoint_path=str(tmp_path / "fp.ckpt"),
+                       checkpoint_interval=2)
+    with kill_after_checkpoints(1):
+        with pytest.raises(Killed):
+            search(net, dev, cfg)
+    with pytest.raises(EvalError, match="different search") as ei:
+        search(net, dev, SearchConfig(
+            pop_size=32, budget=128, seed=4,        # different seed
+            checkpoint_path=cfg.checkpoint_path,
+            checkpoint_interval=2, resume=True))
+    assert _code(ei) == EvalError.INVALID_INPUT

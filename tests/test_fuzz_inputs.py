@@ -1,0 +1,123 @@
+"""Input fuzzing: arbitrary notation strings and (corrupted) DesignBatch
+rows either evaluate to finite metrics or fail as ``EvalError`` with the
+``INVALID_INPUT`` code — never an uncaught parser/indexing exception, and
+never silently non-finite numbers (docs/robustness.md taxonomy contract).
+
+Runs under real ``hypothesis`` when installed, else the deterministic
+``hypo_fallback`` shim — strings are built from token lists (the shim has
+no ``st.text``), which also keeps the corpus centred on near-miss inputs
+instead of pure noise.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from hypo_fallback import given, settings, st
+from repro.api import EvalError, Session
+from repro.cnn.registry import get_cnn
+from repro.core.dse.encoding import NC, NS, DesignBatch
+from repro.core.dse.samplers import sample_mixed
+from repro.fpga.boards import get_board
+
+NET = get_cnn("vgg16")
+SES = Session(get_board("zc706"))
+
+
+def _finite_or_invalid(call):
+    """The fuzz contract: a finite result, or EvalError(INVALID_INPUT)."""
+    try:
+        out = call()
+    except EvalError as e:
+        assert e.code == EvalError.INVALID_INPUT, \
+            f"fuzzed input mapped to {e.code}, want INVALID_INPUT: {e}"
+        return None
+    return out
+
+
+# --------------------------------------------------------------------------
+# notation strings: near-miss entries assembled from grammar tokens
+# --------------------------------------------------------------------------
+@st.composite
+def notation_strings(draw):
+    entries = []
+    for _ in range(draw(st.integers(min_value=1, max_value=4))):
+        lo = draw(st.integers(min_value=0, max_value=40))
+        hi = draw(st.sampled_from(
+            ["", "-Last", "-last"] + [f"-L{h}" for h in (0, 1, 5, 13, 40)]
+            + [f"-{h}" for h in (3, 13)]))
+        clo = draw(st.integers(min_value=0, max_value=NC + 3))
+        chi = draw(st.sampled_from(
+            [""] + [f"-CE{c}" for c in (0, 1, 2, 4, NC, NC + 3)]))
+        sep = draw(st.sampled_from([":", "", ";"]))
+        prefix = draw(st.sampled_from(["L", "", "X"]))
+        entries.append(f"{prefix}{lo}{hi}{sep}CE{clo}{chi}")
+    body = ", ".join(entries)
+    wrap = draw(st.sampled_from(["{%s}", "%s", "{%s", "%s}"]))
+    return wrap % body
+
+
+@settings(max_examples=40, deadline=None)
+@given(text=notation_strings())
+def test_fuzzed_notation_never_escapes_the_taxonomy(text):
+    m = _finite_or_invalid(lambda: SES.evaluate(text, NET))
+    if m is not None:   # parsed + evaluated: the metrics must be finite
+        assert np.isfinite([m.latency_s, m.throughput_ips]).all()
+
+
+@settings(max_examples=40, deadline=None)
+@given(text=notation_strings())
+def test_fuzzed_submit_rejects_synchronously(text):
+    """submit() applies the same parse guard before queueing: a bad spec
+    raises HERE (INVALID_INPUT), a good one resolves to finite floats."""
+    fut = _finite_or_invalid(lambda: SES.submit(text, NET))
+    if fut is not None:
+        out = fut.result(timeout=300)
+        assert np.isfinite(out["latency_s"])
+
+
+# --------------------------------------------------------------------------
+# DesignBatch rows: valid samples, then targeted corruption
+# --------------------------------------------------------------------------
+_B = 4   # fixed fuzz batch: every example pads to one compiled shape
+
+_CORRUPTIONS = ("none", "neg_end", "end_over", "unsorted", "nce_zero",
+                "nce_over", "pad_dirty")
+
+
+@st.composite
+def design_batches(draw):
+    rng = np.random.default_rng(draw(st.integers(min_value=0,
+                                                 max_value=100_000)))
+    db = sample_mixed(rng, len(NET), _B, min_ces=1, max_ces=8)
+    se, sp, sn, ip = (np.array(a) for a in db.to_numpy())
+    row = draw(st.integers(min_value=0, max_value=_B - 1))
+    col = draw(st.integers(min_value=0, max_value=NS - 1))
+    kind = draw(st.sampled_from(_CORRUPTIONS))
+    if kind == "neg_end":
+        se[row, col] = -draw(st.integers(min_value=1, max_value=5))
+    elif kind == "end_over":
+        se[row, col] = len(NET) + draw(st.integers(min_value=1,
+                                                   max_value=9))
+    elif kind == "unsorted":
+        se[row, 0], se[row, -1] = se[row, -1].copy(), se[row, 0].copy()
+    elif kind == "nce_zero":
+        sn[row, col] = 0
+    elif kind == "nce_over":
+        sn[row, col] = NC + draw(st.integers(min_value=1, max_value=7))
+    elif kind == "pad_dirty":
+        # padding columns must stay canonical; scribble on the last one
+        sn[row, NS - 1] = 3
+        se[row, NS - 1] = se[row, NS - 2]
+    return DesignBatch.from_numpy(se, sp, sn, ip), kind
+
+
+@settings(max_examples=40, deadline=None)
+@given(dbk=design_batches())
+def test_fuzzed_design_batches_never_escape_the_taxonomy(dbk):
+    db, kind = dbk
+    out = _finite_or_invalid(lambda: SES.evaluate(db, NET))
+    if kind == "none":
+        assert out is not None, "a valid sampled batch was rejected"
+    if out is not None:
+        assert np.isfinite(np.asarray(out["latency_s"])).all()
+        assert np.isfinite(np.asarray(out["throughput_ips"])).all()

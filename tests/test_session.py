@@ -5,7 +5,7 @@ from __future__ import annotations
 import numpy as np
 import pytest
 
-from repro.api import EvalConfig, Session
+from repro.api import EvalConfig, EvalError, Session
 from repro.cnn.registry import get_cnn
 from repro.core.dse import sample_mixed
 from repro.core.dse.search import SearchConfig
@@ -233,10 +233,12 @@ def test_session_requires_a_device():
 def test_empty_design_lists_rejected_cleanly():
     net, dev = get_cnn(NET), get_board(BOARD)
     ses = Session(dev)
-    with pytest.raises(ValueError, match="empty"):
+    with pytest.raises(EvalError, match="empty") as ei:
         ses.evaluate([], net)
-    with pytest.raises(ValueError, match="empty"):
+    assert ei.value.code == EvalError.INVALID_INPUT
+    with pytest.raises(EvalError, match="empty") as ei:
         ses.submit([], net)
+    assert ei.value.code == EvalError.INVALID_INPUT
 
 
 def test_config_knobs_consistent_across_batch_paths():
@@ -272,8 +274,45 @@ def test_submit_isolates_failing_jobs():
     want = ses.evaluate(good, net)
     for k in want:
         np.testing.assert_array_equal(out[k], want[k], err_msg=k)
-    with pytest.raises(ValueError, match="segments"):
+    with pytest.raises(EvalError, match="segments") as ei:
         f_bad.result(timeout=300)
+    assert ei.value.code == EvalError.INVALID_INPUT
+    ses.close()
+
+
+def test_submit_isolates_bad_net_table_build():
+    """A request whose NET is broken (table build raises, BEFORE any
+    per-request chunking) fails its own future only; the co-queued valid
+    request still megabatches — no per-job fallback needed."""
+
+    class _BadNet:
+        # parses fine (len is all submit needs) but any table build dies
+        name = "corrupt"
+
+        def __len__(self):
+            return 20
+
+        def __iter__(self):
+            raise ValueError("corrupt layer data")
+
+        @property
+        def total_macs(self):
+            return 0
+
+    net, dev = get_cnn(NET), get_board(BOARD)
+    ses = Session(dev, linger_s=0.2)      # wide window: both jobs batch
+    good = _specs(net)
+    f_bad = ses.submit(["{L1-Last:CE1-CE4}"], _BadNet())
+    f_good = ses.submit(good, net)
+    out = f_good.result(timeout=300)
+    want = ses.evaluate(good, net)
+    for k in want:
+        np.testing.assert_array_equal(out[k], want[k], err_msg=k)
+    with pytest.raises(EvalError, match="corrupt") as ei:
+        f_bad.result(timeout=300)
+    assert ei.value.code == EvalError.INVALID_INPUT
+    # the good request went through the megabatch path, not a fallback
+    assert ses.stats.megabatches >= 1
     ses.close()
 
 
@@ -309,8 +348,15 @@ def test_submit_megabatches_and_scalar_result():
     assert scalar["latency_s"] == float(ref["latency_s"][0])
     assert ses.stats.megabatch_requests == 4
     ses.close()
-    with pytest.raises(RuntimeError):
+    with pytest.raises(RuntimeError, match="session closed"):
         ses.submit(specs, net)
+    ses.close()   # idempotent: a second close is a no-op
+    with pytest.raises(RuntimeError, match="session closed"):
+        ses.submit(specs, net)
+    # synchronous evaluation still works on the closed session's caches
+    again = ses.evaluate(specs, net)
+    for k in want:
+        np.testing.assert_array_equal(again[k], want[k], err_msg=k)
 
 
 def test_session_designbatch_path_matches_evaluate_batch():
