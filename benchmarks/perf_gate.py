@@ -262,6 +262,38 @@ def run(verbose: bool = True, quick: bool = False,
                   f"{rsteady / sB * 1e6:.1f}", str(sB),
                   f"{resilient_overhead * 100:+.1f}%", "-"])
 
+    # ---- telemetry overhead: the same session_cached call with the
+    # metrics registry + spans armed (in-process, no trace dir) against a
+    # back-to-back disabled re-measure — the observability layer must be
+    # a rounding error on the hot path (<3%, docs/observability.md)
+    from repro import telemetry as _tele
+
+    was_enabled = _tele.enabled()
+    t0 = time.time()
+    for _ in range(reps):
+        r = ses.evaluate(sdb, net)
+        jax.block_until_ready(r["latency_s"])
+    toff = (time.time() - t0) / reps
+    _tele.enable()                        # registry + spans, no JSONL sink
+    t0 = time.time()
+    for _ in range(reps):
+        r = ses.evaluate(sdb, net)
+        jax.block_until_ready(r["latency_s"])
+    ton = (time.time() - t0) / reps
+    if not was_enabled:
+        _tele.disable()
+    telemetry_overhead = ton / toff - 1.0
+    points["telemetry_session"] = {
+        "B": sB,
+        "us_per_design_enabled": ton / sB * 1e6,
+        "steady_s_enabled": ton,
+        "steady_s_disabled": toff,
+        "overhead_vs_disabled": telemetry_overhead,
+    }
+    table.append([f"telemetry B={sB}", f"{ton / sB * 1e6:.1f}",
+                  f"{ton / sB * 1e6:.1f}", str(sB),
+                  f"{telemetry_overhead * 100:+.1f}%", "-"])
+
     # ---- sharded weak-scaling: one subprocess per forced host-device
     # count (the backend pins its device count at init, so every point
     # needs a fresh interpreter; benchmarks.sharded_eval exports
@@ -343,6 +375,11 @@ def run(verbose: bool = True, quick: bool = False,
             "resilient_no_new_compiles_no_degrade": (
                 rcompiles == 0 and rses.stats.degraded == 0
                 and rses.stats.retried == 0),
+            # the observability layer must stay off the hot path: <3%
+            # over the back-to-back disabled measure (armed on full runs;
+            # quick CI batches are too noisy at this granularity)
+            "telemetry_overhead_lt_3pct": (
+                telemetry_overhead < 0.03 if not quick else True),
             "sharded_no_recompile_at_reeval": recompiles == 0,
             # scaled throughput: each in-cores device must hold >= 60%
             # of the single-device rate; vacuous on a 1-core host

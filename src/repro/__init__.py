@@ -21,6 +21,9 @@ _LAZY = {
     "default_session": ".core.session",
 }
 
+# subpackages resolvable as attributes without eager import
+_LAZY_MODULES = {"telemetry": ".telemetry"}
+
 
 def __getattr__(name):
     if name in _LAZY:
@@ -28,7 +31,13 @@ def __getattr__(name):
         value = getattr(importlib.import_module(_LAZY[name], __name__), name)
         globals()[name] = value        # cache for subsequent lookups
         return value
+    if name in _LAZY_MODULES:
+        import importlib
+        value = importlib.import_module(_LAZY_MODULES[name], __name__)
+        globals()[name] = value
+        return value
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
-__all__ = ["EvalConfig", "Session", "SessionStats", "default_session"]
+__all__ = ["EvalConfig", "Session", "SessionStats", "default_session",
+           "telemetry"]

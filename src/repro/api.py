@@ -16,10 +16,13 @@ the deprecated free functions live in ``docs/api.md``.
 """
 from __future__ import annotations
 
+from . import telemetry  # noqa: F401
 from .core.resilience import (EvalError, load_checkpoint,  # noqa: F401
                               save_checkpoint)
 from .core.session import (EvalConfig, Session, SessionStats,
                            default_session)
+from .telemetry import bottleneck_report, format_report  # noqa: F401
 
 __all__ = ["EvalConfig", "EvalError", "Session", "SessionStats",
-           "default_session", "load_checkpoint", "save_checkpoint"]
+           "bottleneck_report", "default_session", "format_report",
+           "load_checkpoint", "save_checkpoint", "telemetry"]

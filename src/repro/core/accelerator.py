@@ -75,6 +75,10 @@ class Metrics:
     fm_access_bytes: float
     per_segment: list[SegmentMetrics]
     blocks: list[BlockResult]
+    #: steady-state busy seconds charged to each physical CE id (the
+    #: Eq. 8 busy-time ledger; its max bounds pipelined throughput) —
+    #: what `repro.telemetry.report` ranks for bottleneck attribution
+    ce_busy_s: dict[int, float] = field(default_factory=dict)
 
     def as_dict(self) -> dict:
         return {
@@ -190,4 +194,6 @@ def evaluate(acc: ConcreteAccelerator) -> Metrics:
         fm_access_bytes=fm_access,
         per_segment=seg_metrics,
         blocks=blocks,
+        ce_busy_s={ce: busy / dev.clock_hz
+                   for ce, busy in sorted(ce_busy.items())},
     )

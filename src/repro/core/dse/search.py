@@ -41,10 +41,10 @@ from dataclasses import dataclass, field, fields as dc_fields
 
 import numpy as np
 
-from .. import resilience
+from .. import resilience, telemetry
 from ..resilience import EvalError
 from .encoding import NC, NS, DesignBatch, concat_batches
-from .pareto import ParetoArchive
+from .pareto import ParetoArchive, hypervolume_2d
 from .samplers import sample_custom, sample_mixed
 
 # metrics where HIGHER is better get flipped when building objective points
@@ -429,6 +429,29 @@ def _initial_pop(rng, n_layers, cfg, n):
     return concat_batches([a, b])
 
 
+def _gen_telemetry(kind: str, gen: int, evals: int, points,
+                   extra: dict | None = None) -> None:
+    """Per-generation search telemetry (``docs/observability.md``): a
+    generation counter, the current front size, the 2-objective dominated
+    hypervolume (ref = the front's own max corner, so it is monotone in
+    front quality without needing a user reference), and one trace event.
+    No-op — no host pulls, no allocation — when telemetry is disabled."""
+    if not telemetry.enabled():
+        return
+    telemetry.count(f"{kind}.generations")
+    front = 0 if points is None else len(points)
+    telemetry.gauge(f"{kind}.front_size", front)
+    attrs = {"gen": gen, "evals": evals, "front": front}
+    if extra:
+        attrs.update(extra)
+    if points is not None and front and points.shape[1] == 2:
+        ref = points.max(0) * 1.1 + 1e-30
+        hv = hypervolume_2d(points, ref)
+        telemetry.gauge(f"{kind}.hypervolume", hv)
+        attrs["hypervolume"] = hv
+    telemetry.event(f"{kind}.generation", attrs)
+
+
 def search(net, dev, config: SearchConfig | None = None,
            tables=None, backend: str | None = None,
            mesh=None) -> SearchResult:
@@ -603,6 +626,8 @@ def search(net, dev, config: SearchConfig | None = None,
                             best=dict(zip(cfg.objectives,
                                           archive.points.min(0).tolist()))
                             if len(archive) else {}))
+        _gen_telemetry("dse", gen, base,
+                       archive.points if len(archive) else None)
 
     seconds = time.time() - t0
     # one host pull per metric for the whole search (they stayed on device)
@@ -624,6 +649,8 @@ def search(net, dev, config: SearchConfig | None = None,
                                       archive.points.min(0).tolist()))
                         if len(archive) else {},
                         best_scalar_idx=best_scalar_idx))
+    _gen_telemetry("dse", gens - 1, total,
+                   archive.points if len(archive) else None)
     return SearchResult(
         batch=DesignBatch.from_numpy(hall_end, hall_pipe, hall_nce,
                                      hall_inter),
@@ -876,6 +903,12 @@ def _island_search(dev, cfg: SearchConfig, tables, backend: str, mesh,
                             best=dict(zip(cfg.objectives,
                                           merged.points.min(0).tolist()))
                             if len(merged) else {}))
+        if len(migrants):
+            telemetry.count("dse.migrations", int(len(migrants)))
+        _gen_telemetry("dse", gen, base,
+                       merged.points if len(merged) else None,
+                       {"islands": len(islands),
+                        "migrants": int(len(migrants))})
 
     seconds = time.time() - t0
     metrics = {k: np.concatenate([np.asarray(m[k]) for m in all_metrics])
@@ -896,6 +929,9 @@ def _island_search(dev, cfg: SearchConfig, tables, backend: str, mesh,
                                       merged.points.min(0).tolist()))
                         if len(merged) else {},
                         best_scalar_idx=best_scalar_idx))
+    _gen_telemetry("dse", gens - 1, total,
+                   merged.points if len(merged) else None,
+                   {"islands": len(islands), "migrants": 0})
     return SearchResult(
         batch=DesignBatch.from_numpy(hall_end, hall_pipe, hall_nce,
                                      hall_inter),

@@ -53,7 +53,7 @@ from ..dse.encoding import NS, DesignBatch, MultiDesignBatch, \
     sample_assign, stack_designs
 from ..dse.pareto import ParetoArchive
 from ..dse.samplers import sample_mixed
-from ..dse.search import (SearchConfig, _checkpoint_meta,
+from ..dse.search import (SearchConfig, _checkpoint_meta, _gen_telemetry,
                           _load_search_checkpoint, _merged_metrics,
                           make_children, orient)
 from .joint_eval import (DEADLINE_SCALES, make_multi_tables, joint_evaluate,
@@ -552,6 +552,9 @@ def joint_search(nets, dev, config: MultinetSearchConfig | None = None,
                             best=dict(zip(objectives,
                                           archive.points.min(0).tolist()))
                             if len(archive) else {}))
+        _gen_telemetry("multinet", gen, base,
+                       archive.points if len(archive) else None,
+                       {"mode": cfg.mode})
 
     seconds = time.time() - t0
     cat_md = MultiDesignBatch(hall_end, hall_pipe, hall_nce, hall_inter)
@@ -562,6 +565,9 @@ def joint_search(nets, dev, config: MultinetSearchConfig | None = None,
                         best=dict(zip(objectives,
                                       archive.points.min(0).tolist()))
                         if len(archive) else {}))
+    _gen_telemetry("multinet", gens - 1, total,
+                   archive.points if len(archive) else None,
+                   {"mode": cfg.mode})
     return MultinetSearchResult(
         designs=cat_md, shares=hall_sh, metrics=metrics, points=all_points,
         front_idx=np.sort(archive.payload.copy()),

@@ -35,6 +35,8 @@ import threading
 
 import numpy as np
 
+from . import telemetry
+
 __all__ = [
     "EvalError", "classify", "wrap", "CircuitBreaker", "retry_delay",
     "nonfinite_keys", "save_checkpoint", "load_checkpoint", "rng_state",
@@ -158,17 +160,27 @@ class CircuitBreaker:
 
     def record_success(self) -> None:
         with self._lock:
+            closed = self._open
             self._consecutive = 0
             self._open = False
             self._asked_while_open = 0
+        if closed:  # emit outside the lock: telemetry has its own
+            telemetry.event("resilience.breaker_close",
+                            {"trips": self.trips})
 
     def record_failure(self) -> None:
+        tripped = False
         with self._lock:
             self._consecutive += 1
             if not self._open and self._consecutive >= self.fail_threshold:
                 self._open = True
                 self._asked_while_open = 0
                 self.trips += 1
+                tripped = True
+        if tripped:
+            telemetry.event("resilience.breaker_open",
+                            {"consecutive": self.fail_threshold,
+                             "trips": self.trips})
 
 
 # --------------------------------------------------------------------------
@@ -209,6 +221,10 @@ def save_checkpoint(path: str, kind: str, state: dict,
         f.flush()
         os.fsync(f.fileno())
     os.replace(tmp, path)
+    if telemetry.enabled():
+        telemetry.count(f"checkpoint.writes.{kind}")
+        telemetry.event("checkpoint.write",
+                        {"kind": kind, "bytes": len(payload)})
     return path
 
 

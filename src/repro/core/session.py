@@ -37,6 +37,7 @@ import numpy as np
 
 from ..compat import enable_persistent_compilation_cache
 from ..kernels.mccm_eval import resolve_backend
+from . import telemetry
 from .batch_eval import (DEFAULT_TILE, DeviceTables, NetTables,
                          _evaluate_specs, _evaluate_specs_multi,
                          bucket_max_L, evaluate_batch, make_device_tables,
@@ -135,7 +136,14 @@ class EvalConfig:
 
 @dataclass
 class SessionStats:
-    """Host-side counters of what a session reused vs rebuilt."""
+    """Host-side counters of what a session reused vs rebuilt.
+
+    Counters are mutated from BOTH the caller threads and the background
+    drain thread (retries/degrades/deadlines happen on either side), so
+    every mutation goes through :meth:`bump` under the stats lock —
+    plain ``+=`` on the fields is a lost-update race
+    (``tests/test_session.py::test_submit_hammer_counters_consistent``).
+    """
 
     net_table_builds: int = 0
     net_table_hits: int = 0
@@ -156,6 +164,17 @@ class SessionStats:
     degraded: int = 0          # calls served by the fallback backend
     deadline_missed: int = 0   # requests failed with DEADLINE_EXCEEDED
 
+    def __post_init__(self):
+        # not a dataclass field: stays out of fields()/as_dict()/repr
+        self._lock = threading.Lock()
+
+    def bump(self, name: str, n: int = 1) -> None:
+        """Atomically increment counter ``name`` (and mirror it into the
+        telemetry registry when enabled)."""
+        with self._lock:
+            setattr(self, name, getattr(self, name) + n)
+        telemetry.count(f"session.{name}", n)
+
     def as_dict(self) -> dict[str, int]:
         return {f.name: getattr(self, f.name) for f in fields(self)}
 
@@ -163,7 +182,8 @@ class SessionStats:
 class _Request:
     """One queued :meth:`Session.submit` unit of work."""
 
-    __slots__ = ("specs", "net", "dev", "future", "scalar", "deadline")
+    __slots__ = ("specs", "net", "dev", "future", "scalar", "deadline",
+                 "t_enq")
 
     def __init__(self, specs, net, dev, future, scalar, deadline=None):
         self.specs = specs
@@ -172,6 +192,7 @@ class _Request:
         self.future = future
         self.scalar = scalar
         self.deadline = deadline   # absolute time.monotonic(), or None
+        self.t_enq = time.monotonic()   # queue-wait telemetry anchor
 
 
 # --------------------------------------------------------------------------
@@ -271,11 +292,14 @@ class Session:
         with self._table_lock:
             hit = self._net_tables.get(key)
             if hit is not None:
-                self.stats.net_table_hits += 1
+                self.stats.bump("net_table_hits")
                 return hit
-            built = make_tables(net, max_L=bucket)
+            with telemetry.span("session.net_table_build") as sp:
+                sp.set_attr("net", net.name)
+                sp.set_attr("max_L", bucket)
+                built = make_tables(net, max_L=bucket)
             self._net_tables[key] = built
-            self.stats.net_table_builds += 1
+            self.stats.bump("net_table_builds")
             return built
 
     def device_tables(self, dev: DeviceSpec | None = None) -> DeviceTables:
@@ -284,11 +308,12 @@ class Session:
         with self._table_lock:
             hit = self._dev_tables.get(dev)
             if hit is not None:
-                self.stats.device_table_hits += 1
+                self.stats.bump("device_table_hits")
                 return hit
-            built = make_device_tables(dev)
+            with telemetry.span("session.device_table_build"):
+                built = make_device_tables(dev)
             self._dev_tables[dev] = built
-            self.stats.device_table_builds += 1
+            self.stats.bump("device_table_builds")
             return built
 
     def multi_tables(self, nets, *, weights=None, slo_s=None,
@@ -310,12 +335,14 @@ class Session:
         with self._table_lock:
             hit = self._multi_tables.get(key)
             if hit is not None:
-                self.stats.multi_table_hits += 1
+                self.stats.bump("multi_table_hits")
                 return hit
-            built = make_multi_tables(list(nets), weights=weights,
-                                      slo_s=slo_s, max_m=max_m)
+            with telemetry.span("session.multi_table_build") as sp:
+                sp.set_attr("models", len(list(nets)))
+                built = make_multi_tables(list(nets), weights=weights,
+                                          slo_s=slo_s, max_m=max_m)
             self._multi_tables[key] = built
-            self.stats.multi_table_builds += 1
+            self.stats.bump("multi_table_builds")
             return built
 
     # ---- resilience ------------------------------------------------------
@@ -333,12 +360,15 @@ class Session:
         fallback = cfg.fallback_backend
         has_fallback = fallback is not None and fallback != cfg.backend
         if has_fallback and not self.breaker.allow_primary():
-            self.stats.degraded += 1
+            self.stats.bump("degraded")
+            telemetry.event("resilience.degrade",
+                            {"reason": "breaker_open", "backend": fallback})
             return call(fallback)
         last = None
         for attempt in range(cfg.max_retries + 1):
             if attempt:
-                self.stats.retried += 1
+                self.stats.bump("retried")
+                telemetry.event("resilience.retry", {"attempt": attempt})
                 time.sleep(retry_delay(attempt))
             try:
                 out = call(cfg.backend)
@@ -351,7 +381,10 @@ class Session:
                 self.breaker.record_success()
                 return out
         if has_fallback:
-            self.stats.degraded += 1
+            self.stats.bump("degraded")
+            telemetry.event("resilience.degrade",
+                            {"reason": "retries_exhausted",
+                             "backend": fallback})
             try:
                 return call(fallback)
             except Exception as e:  # noqa: BLE001
@@ -365,7 +398,10 @@ class Session:
         cfg = self.config
         fb = cfg.fallback_backend
         if fb is not None and fb != cfg.backend and self.breaker.is_open:
-            self.stats.degraded += 1
+            self.stats.bump("degraded")
+            telemetry.event("resilience.degrade",
+                            {"reason": "breaker_open_search",
+                             "backend": fb})
             return fb
         return cfg.backend
 
@@ -393,9 +429,16 @@ class Session:
         ``inter_segment_pipelining`` applies to notation strings only
         (specs already carry the flag).
         """
+        with telemetry.span("session.evaluate") as sp:
+            out = self._evaluate(designs, net, dev,
+                                 inter_segment_pipelining, sp)
+        return out
+
+    def _evaluate(self, designs, net, dev, inter_segment_pipelining, sp):
         dev = self._device(dev)
         if isinstance(designs, (str, AcceleratorSpec)):
-            self.stats.scalar_evals += 1
+            sp.set_attr("kind", "scalar")
+            self.stats.bump("scalar_evals")
             try:
                 m = _evaluate_design(
                     designs, net, dev,
@@ -423,7 +466,9 @@ class Session:
                     f"{bad.size} invalid DesignBatch row(s), first at "
                     f"index {int(bad[0])} (non-canonical segments or CE "
                     f"count outside [1, {NC}])")
-            self.stats.batch_designs += designs.batch
+            sp.set_attr("kind", "design_batch")
+            sp.set_attr("designs", designs.batch)
+            self.stats.bump("batch_designs", designs.batch)
             return self._resilient_call(lambda b: evaluate_batch(
                 designs, self.tables(net), self.device_tables(dev),
                 fm_tile_rows=cfg.fm_tile_rows, backend=b,
@@ -436,7 +481,9 @@ class Session:
         if not specs:
             raise EvalError(EvalError.INVALID_INPUT,
                             "no designs to evaluate (empty list)")
-        self.stats.batch_designs += len(specs)
+        sp.set_attr("kind", "spec_list")
+        sp.set_attr("designs", len(specs))
+        self.stats.bump("batch_designs", len(specs))
         out = self._resilient_call(lambda b: _evaluate_specs(
             specs, net, self.device_tables(dev),
             cfg.chunk, tables=self.tables(net),
@@ -467,12 +514,15 @@ class Session:
         ``explore`` free function at equal arguments."""
         from .dse.driver import _explore
 
-        self.stats.explore_calls += 1
-        return _explore(net, self._device(dev), n, family=family, seed=seed,
-                        chunk=chunk, strategy=strategy,
-                        objectives=objectives, config=config,
-                        tables=self.tables(net),
-                        backend=self._search_backend(), mesh=self.mesh)
+        self.stats.bump("explore_calls")
+        with telemetry.span("session.explore") as sp:
+            sp.set_attr("n", n)
+            sp.set_attr("strategy", strategy)
+            return _explore(net, self._device(dev), n, family=family,
+                            seed=seed, chunk=chunk, strategy=strategy,
+                            objectives=objectives, config=config,
+                            tables=self.tables(net),
+                            backend=self._search_backend(), mesh=self.mesh)
 
     def deploy(self, nets, n: int = 4096, dev: DeviceSpec | None = None, *,
                strategy: str = "search", seed: int = 0, chunk: int = 512,
@@ -491,15 +541,45 @@ class Session:
         s = config.slo_s if config is not None else slo_s
         mm = config.max_m if config is not None else None
         mt = self.multi_tables(nets, weights=w, slo_s=s, max_m=mm)
-        self.stats.deploy_calls += 1
-        return _joint_explore(
-            list(nets), self._device(dev), n, strategy=strategy, seed=seed,
-            chunk=chunk,
-            objectives=JOINT_OBJECTIVES if objectives is None
-            else objectives,
-            objective=objective, config=config, weights=weights,
-            slo_s=slo_s, mtables=mt, backend=self._search_backend(),
-            mesh=self.mesh)
+        self.stats.bump("deploy_calls")
+        with telemetry.span("session.deploy") as sp:
+            sp.set_attr("n", n)
+            sp.set_attr("models", len(list(nets)))
+            sp.set_attr("strategy", strategy)
+            return _joint_explore(
+                list(nets), self._device(dev), n, strategy=strategy,
+                seed=seed, chunk=chunk,
+                objectives=JOINT_OBJECTIVES if objectives is None
+                else objectives,
+                objective=objective, config=config, weights=weights,
+                slo_s=slo_s, mtables=mt, backend=self._search_backend(),
+                mesh=self.mesh)
+
+    # ---- bottleneck attribution (paper use case 2) -----------------------
+    def explain(self, design, net: Network, dev: DeviceSpec | None = None,
+                *, inter_segment_pipelining: bool = True) -> dict:
+        """Rank where a single design's time and off-chip traffic go.
+
+        Evaluates ``design`` through the exact scalar path (full
+        per-segment / per-layer / per-CE detail) and returns the
+        :func:`repro.telemetry.report.bottleneck_report` dict: segments
+        ranked by occupancy with compute/memory bound verdicts, the
+        busiest CE, Fig. 6's memory-bound layers + idle fraction and
+        Fig. 7's weights-vs-FMs access split — bit-identical to
+        ``benchmarks/fig6_fig7_breakdown.py``'s formulas
+        (``docs/observability.md`` walks through the output).
+        """
+        from ..telemetry.report import bottleneck_report
+
+        if not isinstance(design, (str, AcceleratorSpec)):
+            raise EvalError(
+                EvalError.INVALID_INPUT,
+                "explain() takes one design (notation string or "
+                "AcceleratorSpec); use evaluate() for batches")
+        with telemetry.span("session.explain") as sp:
+            m = self._evaluate(design, net, dev,
+                               inter_segment_pipelining, sp)
+            return bottleneck_report(m)
 
     # ---- queued requests (the serve-many-users path) ---------------------
     def submit(self, designs, net: Network,
@@ -525,6 +605,13 @@ class Session:
         """
         scalar = isinstance(designs, (str, AcceleratorSpec))
         raw = [designs] if scalar else list(designs)
+        with telemetry.span("session.submit") as sp:
+            sp.set_attr("designs", len(raw))
+            return self._submit(raw, net, dev, scalar,
+                                inter_segment_pipelining, deadline_s)
+
+    def _submit(self, raw, net, dev, scalar, inter_segment_pipelining,
+                deadline_s) -> Future:
         try:
             specs = [self._parse(d, net, inter_segment_pipelining)
                      for d in raw]
@@ -550,19 +637,22 @@ class Session:
                     "still works)")
             if cfg.max_queue is not None \
                     and len(self._pending) >= cfg.max_queue:
-                self.stats.rejected += 1
+                self.stats.bump("rejected")
+                telemetry.event("resilience.rejected",
+                                {"queue": len(self._pending)})
                 raise EvalError(
                     EvalError.QUEUE_FULL,
                     f"submit queue full ({cfg.max_queue} pending "
                     f"requests); retry after the queue drains")
             self._pending.append(req)
+            telemetry.gauge("session.queue_depth", len(self._pending))
             if self._worker is None:
                 self._worker = threading.Thread(
                     target=self._drain_loop, name="repro-session-drain",
                     daemon=True)
                 self._worker.start()
             self._cv.notify_all()
-        self.stats.submits += 1
+        self.stats.bump("submits")
         return req.future
 
     def drain(self) -> int:
@@ -603,7 +693,9 @@ class Session:
         live = []
         for r in reqs:
             if r.deadline is not None and now > r.deadline:
-                self.stats.deadline_missed += 1
+                self.stats.bump("deadline_missed")
+                telemetry.event("resilience.deadline_missed",
+                                {"where": "queued"})
                 self._fail(r, EvalError(
                     EvalError.DEADLINE_EXCEEDED,
                     "deadline passed while the request was queued"))
@@ -621,11 +713,15 @@ class Session:
                                     f"non-finite metrics {bad}"))
             return
         if r.deadline is not None and time.monotonic() > r.deadline:
-            self.stats.deadline_missed += 1
+            self.stats.bump("deadline_missed")
+            telemetry.event("resilience.deadline_missed",
+                            {"where": "evaluated"})
             self._fail(r, EvalError(EvalError.DEADLINE_EXCEEDED,
                                     "deadline passed during evaluation"))
             return
-        self.stats.megabatch_requests += 1
+        self.stats.bump("megabatch_requests")
+        telemetry.observe("session.request_latency_s",
+                          time.monotonic() - r.t_enq)
         self._deliver(r, out)
 
     def _eval_one(self, r: _Request, backend: str | None = None) -> dict:
@@ -650,10 +746,26 @@ class Session:
                 raise
 
     def _run_megabatch_inner(self, reqs: list[_Request]) -> None:
+        with telemetry.span("session.megabatch") as sp:
+            sp.set_attr("requests", len(reqs))
+            self._run_megabatch_spanned(reqs, sp)
+
+    def _run_megabatch_spanned(self, reqs: list[_Request], sp) -> None:
         cfg = self.config
         reqs = self._expire(reqs)
         if not reqs:
             return
+        if telemetry.enabled():
+            # per-request queue wait + batch shape, measured at the top
+            # of the drain (docs/observability.md metric catalog)
+            now = time.monotonic()
+            for r in reqs:
+                telemetry.observe("session.queue_wait_s", now - r.t_enq)
+            telemetry.observe("session.megabatch_fill",
+                              len(reqs), bounds=tuple(
+                                  float(2 ** i) for i in range(16)))
+            telemetry.gauge("session.megabatch_size", len(reqs))
+            telemetry.gauge("session.linger_s", cfg.linger_s)
         # memoized tables for BOTH axes, built per request under its own
         # guard: one request's broken net/board fails ITS future only,
         # the rest still megabatch together
@@ -689,7 +801,7 @@ class Session:
                 else:
                     self._finish(r, out)
             return
-        self.stats.megabatches += 1
+        self.stats.bump("megabatches")
         for (r, _, _), out in zip(ready, results):
             self._finish(r, out)
 
@@ -729,6 +841,20 @@ class Session:
         counts["degraded"] = self.stats.degraded
         counts["deadline_missed"] = self.stats.deadline_missed
         return counts
+
+    def observability(self) -> dict:
+        """One-stop report: compile counts, session counters, breaker
+        state and — when telemetry is enabled — the full metrics
+        registry snapshot (counters/gauges/histograms with
+        p50/p90/p99/p999), merged into one dict
+        (``docs/observability.md``)."""
+        return {
+            "compile": self.compile_stats(),
+            "stats": self.stats.as_dict(),
+            "breaker": {"open": self.breaker.is_open,
+                        "trips": self.breaker.trips},
+            "telemetry": telemetry.snapshot(),
+        }
 
 
 # --------------------------------------------------------------------------

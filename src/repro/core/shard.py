@@ -62,6 +62,7 @@ import jax                                           # noqa: E402
 from jax.sharding import Mesh, PartitionSpec as P    # noqa: E402
 
 from ..compat import shard_map                       # noqa: E402
+from . import telemetry                              # noqa: E402
 from .batch_eval import (                            # noqa: E402
     DEFAULT_TILE, _pad_rows, evaluate_batch_traced, padded_rows)
 
@@ -151,6 +152,9 @@ class EvalMesh:
         jitted = jax.jit(run, donate_argnums=donate_argnums)
         self._jits[key] = jitted
         _REGISTRY.append((name, jitted))
+        telemetry.count("shard.jit_builds")
+        telemetry.event("shard.jit_build",
+                        {"name": name, "ndevices": self.ndevices})
         return jitted
 
     # -- the evaluator entry point --------------------------------------

@@ -1,0 +1,100 @@
+"""Telemetry acceptance smoke: one traced session round, schema-checked.
+
+Sets ``REPRO_TELEMETRY_DIR`` **before** any repro import (the env-gated
+activation path CI exercises), then runs a warm
+evaluate -> explore -> deploy -> submit round plus a short
+fault-injection burst, and asserts:
+
+* the JSONL trace file exists and is non-empty;
+* every line is schema-valid (``telemetry.read_trace`` raises otherwise);
+* spans from all four session entry points are present;
+* at least one ``resilience.*`` event landed under fault injection;
+* ``Session.observability()`` agrees with the trace-side counters.
+
+Usage (also run by the ``telemetry-smoke`` CI job):
+    python tests/telemetry_smoke.py [trace_dir]
+Exit code 0 = all assertions hold.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import tempfile
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+SRC = os.path.join(os.path.dirname(HERE), "src")
+sys.path.insert(0, SRC)
+sys.path.insert(0, HERE)
+
+
+def main(trace_dir: str) -> int:
+    os.environ["REPRO_TELEMETRY_DIR"] = trace_dir
+
+    # imports AFTER the env var: this is the env-gated activation path
+    from faults import CountingHook, inject_fault
+    from repro import telemetry
+    from repro.api import Session
+    from repro.cnn.registry import get_cnn
+    from repro.core.dse.search import SearchConfig
+    from repro.core.multinet import MultinetSearchConfig
+    from repro.fpga.boards import get_board
+
+    assert telemetry.enabled(), \
+        "REPRO_TELEMETRY_DIR in the environment must enable telemetry"
+
+    net, net2 = get_cnn("mobilenetv2"), get_cnn("resnet50")
+    dev = get_board("zc706")
+    ses = Session(dev)
+
+    # warmup, then the traced warm round across all four entry points
+    ses.evaluate("{L1-Last:CE1-CE4}", net)
+    ses.evaluate("{L1-Last:CE1-CE4}", net)
+    ses.explore(net, n=64, strategy="search", seed=0,
+                config=SearchConfig(pop_size=32, seed=0))
+    ses.deploy([net, net2], n=32, seed=0,
+               config=MultinetSearchConfig(pop_size=16, seed=0))
+    ses.submit(["{L1-Last:CE1-CE4}"], net).result(timeout=300)
+    rep = ses.explain("{L1-Last:CE1-CE4}", net)
+    assert rep["bottleneck"]["segment"] is not None
+
+    # fault burst: trip the breaker so resilience events hit the trace
+    fses = Session(dev, backend="pallas_interpret", design_tile=9,
+                   fallback_backend="ref", max_retries=0)
+    with inject_fault(CountingHook(backend="pallas_interpret")):
+        for _ in range(fses.breaker.fail_threshold):
+            # batched path: scalar evaluation is analytic and never
+            # touches the kernel backend the hook faults
+            fses.evaluate(["{L1-Last:CE1-CE4}"], net)
+    assert fses.breaker.is_open, "fault burst never tripped the breaker"
+
+    path = telemetry.trace_path()
+    assert path and os.path.exists(path), "no trace file was written"
+    lines = telemetry.read_trace(path)       # raises on any schema problem
+    assert lines, "trace file is empty"
+
+    names = {ln["name"] for ln in lines}
+    for want in ("session.evaluate", "session.explore", "session.deploy",
+                 "session.submit", "session.megabatch", "session.explain",
+                 "dse.generation", "multinet.generation"):
+        assert want in names, f"span/event {want!r} missing from trace"
+    resilience_events = [ln for ln in lines if ln["type"] == "event"
+                         and ln["name"].startswith("resilience.")]
+    assert resilience_events, "no resilience.* event under fault injection"
+
+    obs = ses.observability()
+    counters = obs["telemetry"]["counters"]
+    assert counters["session.scalar_evals"] >= 2
+    assert obs["stats"]["submits"] == 1
+    n_spans = sum(1 for ln in lines if ln["type"] == "span")
+    print(f"telemetry smoke OK: {len(lines)} trace lines "
+          f"({n_spans} spans, {len(resilience_events)} resilience "
+          f"event(s)) in {path}")
+    print("  span/event names:", ", ".join(sorted(names)))
+    return 0
+
+
+if __name__ == "__main__":
+    if len(sys.argv) > 1:
+        raise SystemExit(main(sys.argv[1]))
+    with tempfile.TemporaryDirectory(prefix="repro-telemetry-") as d:
+        raise SystemExit(main(d))

@@ -371,3 +371,44 @@ def test_session_designbatch_path_matches_evaluate_batch():
     for k in want:
         np.testing.assert_array_equal(np.asarray(got[k]),
                                       np.asarray(want[k]), err_msg=k)
+
+
+def test_submit_hammer_counters_consistent():
+    """SessionStats counters are mutated from submitter threads AND the
+    drain thread; unsynchronized ``+=`` would lose updates under this
+    hammer.  Every bump goes through the stats lock, so the totals must
+    come out exact."""
+    import threading
+
+    net, dev = get_cnn(NET), get_board(BOARD)
+    ses = Session(dev)
+    ses.evaluate("{L1-Last:CE1-CE4}", net)        # warm the compile
+    n_threads, per_thread = 8, 25
+    futs, errs = [], []
+    lock = threading.Lock()
+
+    def hammer():
+        mine = []
+        try:
+            for _ in range(per_thread):
+                mine.append(ses.submit("{L1-Last:CE1-CE4}", net))
+        except Exception as e:  # noqa: BLE001 — report, don't deadlock
+            errs.append(e)
+        with lock:
+            futs.extend(mine)
+
+    threads = [threading.Thread(target=hammer) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs, errs
+    for f in futs:
+        f.result(timeout=300)
+    total = n_threads * per_thread
+    assert ses.stats.submits == total
+    assert ses.stats.megabatch_requests == total
+    assert ses.stats.rejected == 0
+    # scalar_evals counts the warmup only — submits take the batched path
+    assert ses.stats.scalar_evals == 1
+    ses.close()
