@@ -1,0 +1,223 @@
+"""Load-generate the serving front and report latency percentiles.
+
+Replays a deterministic mixed-traffic trace — point probes and bulk
+sweeps across the CNN zoo x paper boards, interactive and batch lanes —
+against an in-process :class:`repro.serve.EvalServer`, pipelined over one
+:class:`ServeClient` connection, and reports p50/p99 request latency and
+aggregate designs/sec.  A background DSE job (``submit_search``) runs at
+full budget for the second half of the replay, and one deadline-bearing
+interactive probe is timed against it — the measured guarantee that the
+batch lane cannot starve the interactive lane (docs/serving.md).
+
+The trace is a pure function of ``--seed`` (``make_trace``): same seed,
+same nets/boards/designs/arrival offsets, byte-identical ``--print-trace``
+output (asserted by ``tests/test_serve_load.py``).  Everything heavyweight
+imports inside :func:`run`, so ``--print-trace`` stays jax-free.
+
+Gate wiring: ``benchmarks/perf_gate.py`` runs this at reduced budget and
+commits the payload as the ``serve_load`` BENCH point with the
+``serve_p99_bounded`` / ``serve_interactive_deadline`` checks.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import random
+import time
+
+#: CNN x board mix of the trace (names resolved inside the server)
+TRACE_NETS = ("mobilenetv2", "resnet50", "xception", "densenet121")
+TRACE_BOARDS = ("zc706", "vcu108", "vcu110", "zcu102")
+#: mean request inter-arrival of the replay schedule, seconds — chosen
+#: so the offered design rate sits near half the drain's measured service
+#: capacity for the 4 x 4 net x board mix, so the percentiles measure
+#: serving overhead under load rather than unbounded saturation queueing
+MEAN_ARRIVAL_S = 0.1
+#: bulk-request share of the trace (batch lane)
+BULK_FRACTION = 0.2
+
+
+def _design(rng: random.Random) -> str:
+    """One random-but-valid notation string.  Split points stay below 9
+    (every zoo net is deeper), so the trace needs no net metadata."""
+    kind = rng.random()
+    if kind < 0.5:
+        return f"{{L1-Last:CE1-CE{rng.randint(1, 8)}}}"
+    m = rng.randint(1, 8)
+    a = rng.randint(1, 4)
+    b = rng.randint(1, 4)
+    return (f"{{L1-L{m}:CE1-CE{a}, "
+            f"L{m + 1}-Last:CE{a + 1}-CE{a + b}}}")
+
+
+def make_trace(seed: int, n_requests: int = 64) -> list[dict]:
+    """The deterministic request trace: ``n_requests`` entries of
+    ``{t, net, board, designs, priority}`` with exponential arrival
+    offsets.  Pure ``random.Random(seed)`` — no numpy, no jax — so the
+    CLI can print it without touching the evaluation stack."""
+    rng = random.Random(seed)
+    t = 0.0
+    trace = []
+    for _ in range(n_requests):
+        t += rng.expovariate(1.0 / MEAN_ARRIVAL_S)
+        bulk = rng.random() < BULK_FRACTION
+        n = rng.randint(64, 96) if bulk else rng.randint(1, 4)
+        trace.append({
+            "t": round(t, 6),
+            "net": rng.choice(TRACE_NETS),
+            "board": rng.choice(TRACE_BOARDS),
+            "designs": [_design(rng) for _ in range(n)],
+            "priority": "batch" if bulk else "interactive",
+        })
+    return trace
+
+
+def percentile(xs: list[float], q: float) -> float:
+    """Linear-interpolated percentile (numpy-free: the module must stay
+    importable without the evaluation stack)."""
+    if not xs:
+        return float("nan")
+    s = sorted(xs)
+    pos = (len(s) - 1) * q
+    lo = int(pos)
+    hi = min(lo + 1, len(s) - 1)
+    return s[lo] + (s[hi] - s[lo]) * (pos - lo)
+
+
+def run(seed: int = 0, quick: bool = False, verbose: bool = True) -> dict:
+    """Replay the trace against an in-process server; returns the BENCH
+    payload (and saves it as ``BENCH_serve``)."""
+    try:
+        from .common import save          # python -m benchmarks.serve_load
+    except ImportError:
+        from common import save           # script run from benchmarks/
+    from repro.api import EvalConfig, Session
+    from repro.cnn.registry import get_cnn
+    from repro.fpga.boards import get_board
+    from repro.serve import EvalServer, ServeClient
+
+    n_requests = 24 if quick else 64
+    dse_budget = 2048 if quick else 100_000
+    deadline_s = 120.0 if quick else 60.0
+    trace = make_trace(seed, n_requests)
+    designs_total = sum(len(e["designs"]) for e in trace)
+
+    ses = Session(get_board("vcu110"), config=EvalConfig(
+        linger_s=0.002, linger_max_s=0.02))
+    srv = EvalServer(ses).start()
+    host, port = srv.address
+    lat: dict[int, float] = {}
+    out = {}
+    try:
+        with ServeClient(host, port) as cli:
+            cli.ping()
+            # warm tables and every compiled ladder shape the replay can
+            # hit (chunk pads are powers of two up to the largest bulk
+            # request), so the percentiles measure serving overhead +
+            # dispatch, not first-compile time
+            warm_rng = random.Random(seed + 1)
+            t_warm = time.monotonic()
+            for net_name in sorted({e["net"] for e in trace}):
+                net = get_cnn(net_name)
+                for size in (1, 64, 128, 256):
+                    ses.evaluate([_design(warm_rng) for _ in range(size)],
+                                 net)
+            for board in sorted({e["board"] for e in trace}):
+                ses.evaluate(_design(warm_rng), get_cnn(trace[0]["net"]),
+                             get_board(board))
+            warm_s = time.monotonic() - t_warm
+
+            t0 = time.monotonic()
+            futs = []
+            for i, e in enumerate(trace):
+                now = time.monotonic() - t0
+                if e["t"] > now:
+                    time.sleep(e["t"] - now)
+                t_send = time.monotonic()
+                fut = cli.evaluate_async(
+                    e["designs"], e["net"], board=e["board"],
+                    priority=e["priority"])
+                fut.add_done_callback(
+                    lambda f, i=i, t=t_send:
+                    lat.__setitem__(i, time.monotonic() - t))
+                futs.append(fut)
+            for f in futs:
+                f.result(timeout=600)
+            wall = time.monotonic() - t0
+
+            # the contract probe: one deadline-bearing interactive
+            # evaluation while a full-budget DSE job holds the batch lane
+            dse_fut = ses.submit_search(get_cnn("mobilenetv2"),
+                                        dse_budget, strategy="random",
+                                        seed=seed)
+            dse_running = not dse_fut.done()
+            t_probe = time.monotonic()
+            cli.evaluate("{L1-Last:CE1-CE4}", "resnet50", board="zc706",
+                         deadline_s=deadline_s, priority="interactive")
+            probe_s = time.monotonic() - t_probe
+            t_dse = time.monotonic()
+            dse = dse_fut.result(timeout=600)
+            dse_wait = time.monotonic() - t_dse
+            obs = cli.observability()
+    finally:
+        srv.stop()
+        ses.close()
+
+    ms = [v * 1e3 for v in lat.values()]
+    stats = obs["stats"]
+    out = {
+        "seed": seed,
+        "quick": quick,
+        "n_requests": n_requests,
+        "designs_total": designs_total,
+        "warm_s": round(warm_s, 3),
+        "wall_s": round(wall, 4),
+        "designs_per_s": round(designs_total / wall, 1),
+        "latency_ms": {
+            "p50": round(percentile(ms, 0.50), 3),
+            "p99": round(percentile(ms, 0.99), 3),
+            "mean": round(sum(ms) / len(ms), 3),
+            "max": round(max(ms), 3),
+        },
+        "dse": {"budget": dse_budget, "n_evals": int(dse.n_evals),
+                "tail_wait_s": round(dse_wait, 3)},
+        "interactive_under_dse": {
+            "latency_s": round(probe_s, 4),
+            "deadline_s": deadline_s,
+            "met": probe_s < deadline_s,
+            "dse_running_at_probe": dse_running,
+        },
+        "coalesce": {k: stats[k] for k in
+                     ("megabatches", "megabatch_requests",
+                      "coalesced_chunks", "coalesced_merges",
+                      "coalesced_splits")},
+        "caches": obs["caches"],
+    }
+    save("BENCH_serve", out)
+    if verbose:
+        print(json.dumps(out, indent=1))
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quick", action="store_true",
+                    help="small trace + 2048-budget DSE (CI smoke)")
+    ap.add_argument("--json", action="store_true",
+                    help="print only the JSON payload")
+    ap.add_argument("--print-trace", action="store_true",
+                    help="print the deterministic trace and exit "
+                         "(no evaluation, no jax import)")
+    args = ap.parse_args(argv)
+    if args.print_trace:
+        print(json.dumps(make_trace(args.seed), indent=1))
+        return 0
+    out = run(seed=args.seed, quick=args.quick, verbose=not args.json)
+    if args.json:
+        print(json.dumps(out, indent=1))
+    return 0 if out["interactive_under_dse"]["met"] else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -42,6 +42,8 @@ from .batch_eval import (DEFAULT_TILE, DeviceTables, NetTables,
                          _evaluate_specs, _evaluate_specs_multi,
                          bucket_max_L, evaluate_batch, make_device_tables,
                          make_tables)
+from .cache import (DEFAULT_MAX_TABLES, TABLES_ENV, BoundedLRU, env_bound)
+from .coalesce import ArrivalEstimator, plan_megabatch
 from .device import DeviceSpec
 from .dse.driver import DEFAULT_OBJECTIVES
 from .dse.encoding import DesignBatch
@@ -110,10 +112,29 @@ class EvalConfig:
     #: when the circuit breaker is open): the bit-tested pure-jnp "ref"
     #: path by default.  None disables fallback entirely
     fallback_backend: str | None = "ref"
+    #: adaptive linger cap, in seconds.  None keeps the fixed ``linger_s``
+    #: window; a value arms the arrival-rate-driven policy (the drain
+    #: lingers ~2 observed inter-arrivals, never more than this cap) —
+    #: what the serving front runs with (docs/serving.md)
+    linger_max_s: float | None = None
+    #: megabatch coalescing: merge tiny same-(net, board) requests into
+    #: shared padded chunks and split oversized requests at the compiled
+    #: chunk size.  Bit-identical results (evaluation is row-local) and
+    #: never forks compiles; off reproduces the one-padded-chunk-per-
+    #: request drain
+    coalesce: bool = True
+    #: bound of EACH memoized table cache (NetTables / DeviceTables /
+    #: MultiNetTables), in entries.  None resolves REPRO_CACHE_TABLES
+    #: (default 256); 0 disables eviction.  LRU past the bound, with
+    #: eviction counters in observability() (docs/serving.md)
+    max_cached_tables: int | None = None
+    #: bound of the mesh's sharded-jit registry, in compiled programs.
+    #: None resolves REPRO_CACHE_JITS (default 128); 0 disables eviction
+    max_cached_jits: int | None = None
 
     def resolved(self) -> "EvalConfig":
-        """Pin the env-dependent fields (backend, cache_dir, mesh) to
-        concrete values — called once by :class:`Session`."""
+        """Pin the env-dependent fields (backend, cache_dir, mesh, cache
+        bounds) to concrete values — called once by :class:`Session`."""
         import os
 
         from ..compat import CACHE_ENV
@@ -125,13 +146,19 @@ class EvalConfig:
             raise ValueError(f"max_queue must be >= 1, got {self.max_queue}")
         if self.deadline_s is not None and self.deadline_s <= 0:
             raise ValueError(f"deadline_s must be > 0, got {self.deadline_s}")
+        if self.linger_max_s is not None and self.linger_max_s < 0:
+            raise ValueError(f"linger_max_s must be >= 0, "
+                             f"got {self.linger_max_s}")
         return replace(
             self,
             backend=resolve_backend(self.backend),
             fallback_backend=None if self.fallback_backend is None
             else resolve_backend(self.fallback_backend),
             cache_dir=self.cache_dir or os.environ.get(CACHE_ENV) or None,
-            mesh=self.mesh if self.mesh is not None else env_mesh_devices())
+            mesh=self.mesh if self.mesh is not None else env_mesh_devices(),
+            max_cached_tables=env_bound(TABLES_ENV, DEFAULT_MAX_TABLES)
+            if self.max_cached_tables is None else self.max_cached_tables,
+            max_cached_jits=self.max_cached_jits)
 
 
 @dataclass
@@ -158,6 +185,16 @@ class SessionStats:
     submits: int = 0
     megabatches: int = 0
     megabatch_requests: int = 0
+    # coalescing counters (docs/serving.md)
+    coalesced_chunks: int = 0  # padded dispatch units planned
+    coalesced_merges: int = 0  # requests that shared a chunk with another
+    coalesced_splits: int = 0  # requests split at the compiled chunk size
+    # priority-lane / search-job counters (docs/serving.md)
+    search_jobs: int = 0       # submit_search() jobs accepted
+    # cache-eviction counters (bounded table caches, docs/serving.md)
+    net_table_evictions: int = 0
+    device_table_evictions: int = 0
+    multi_table_evictions: int = 0
     # resilience counters (docs/robustness.md)
     rejected: int = 0          # submits refused by admission control
     retried: int = 0           # primary-backend retry attempts
@@ -179,20 +216,43 @@ class SessionStats:
         return {f.name: getattr(self, f.name) for f in fields(self)}
 
 
+#: submit() priority lanes, highest first.  The drain serves interactive
+#: requests ahead of batch ones inside every megabatch, and search jobs
+#: run on their own worker thread — bulk work can never starve a point
+#: evaluation (docs/serving.md)
+PRIORITIES = ("interactive", "batch")
+
+
 class _Request:
     """One queued :meth:`Session.submit` unit of work."""
 
     __slots__ = ("specs", "net", "dev", "future", "scalar", "deadline",
-                 "t_enq")
+                 "t_enq", "priority")
 
-    def __init__(self, specs, net, dev, future, scalar, deadline=None):
+    def __init__(self, specs, net, dev, future, scalar, deadline=None,
+                 priority="interactive"):
         self.specs = specs
         self.net = net
         self.dev = dev
         self.future = future
         self.scalar = scalar
         self.deadline = deadline   # absolute time.monotonic(), or None
+        self.priority = priority
         self.t_enq = time.monotonic()   # queue-wait telemetry anchor
+
+
+class _SearchJob:
+    """One queued :meth:`Session.submit_search` long-running job (the
+    batch lane's bulk work: explore/deploy searches)."""
+
+    __slots__ = ("fn", "future", "deadline", "label", "t_enq")
+
+    def __init__(self, fn, future, deadline=None, label="search"):
+        self.fn = fn
+        self.future = future
+        self.deadline = deadline
+        self.label = label
+        self.t_enq = time.monotonic()
 
 
 # --------------------------------------------------------------------------
@@ -224,7 +284,8 @@ class Session:
         from .shard import EvalMesh
         #: the session's design-axis mesh; single-device meshes delegate
         #: to the exact single-device jits (zero extra compiles)
-        self.mesh = EvalMesh(ndevices=self.config.mesh)
+        self.mesh = EvalMesh(ndevices=self.config.mesh,
+                             max_jits=self.config.max_cached_jits)
         self.default_device = dev
         self.stats = SessionStats()
         #: trips on repeated primary-backend faults; while open, calls
@@ -232,14 +293,34 @@ class Session:
         self.breaker = CircuitBreaker()
         # memoization has its own lock (held across check+build+count, so
         # the drain thread and callers can't race a duplicate build); the
-        # condition variable below is the submit queue's only
+        # condition variable below is the submit queue's only.  The table
+        # memos are LRU-bounded (config.max_cached_tables per cache) so a
+        # long-lived server under unbounded distinct keys stays
+        # memory-bounded — evicted entries rebuild on next use,
+        # bit-identically (tests/test_session_cache.py)
         self._table_lock = threading.Lock()
-        self._net_tables: dict[tuple, NetTables] = {}
-        self._dev_tables: dict[DeviceSpec, DeviceTables] = {}
-        self._multi_tables: dict[tuple, object] = {}
+        bound = self.config.max_cached_tables
+        self._net_tables = BoundedLRU(
+            bound, on_evict=lambda *_:
+            self.stats.bump("net_table_evictions"))
+        self._dev_tables = BoundedLRU(
+            bound, on_evict=lambda *_:
+            self.stats.bump("device_table_evictions"))
+        self._multi_tables = BoundedLRU(
+            bound, on_evict=lambda *_:
+            self.stats.bump("multi_table_evictions"))
         self._cv = threading.Condition()
         self._pending: list[_Request] = []
         self._worker: threading.Thread | None = None
+        #: adaptive-linger arrival tracking (armed by config.linger_max_s)
+        self._arrivals = ArrivalEstimator()
+        # the batch lane's job queue: long searches run on their own
+        # worker so the megabatch drain — the interactive lane — never
+        # blocks behind a 100k-budget DSE (docs/serving.md)
+        self._jobs: list[_SearchJob] = []
+        self._job_cv = threading.Condition()
+        self._job_worker: threading.Thread | None = None
+        self._job_running = False
         self._closed = False
 
     # ---- lifecycle -------------------------------------------------------
@@ -250,15 +331,27 @@ class Session:
         self.close()
 
     def close(self) -> None:
-        """Flush the submit queue and stop the background drain loop.
-        Idempotent; the session's caches stay usable afterwards, only
-        :meth:`submit` is refused."""
+        """Flush the submit queue and stop the background drain loop and
+        the search-job worker.  Queued-but-unstarted search jobs are
+        cancelled (``Future.cancel()``); a *running* job finishes — its
+        checkpoint, when configured, is what makes killing the process
+        instead lossless (docs/robustness.md).  Idempotent; the session's
+        caches stay usable afterwards, only :meth:`submit` /
+        :meth:`submit_search` are refused."""
         with self._cv:
             self._closed = True
             self._cv.notify_all()
+        with self._job_cv:
+            cancelled, self._jobs = self._jobs, []
+            self._job_cv.notify_all()
+        for j in cancelled:
+            j.future.cancel()
         if self._worker is not None:
             self._worker.join(timeout=60.0)
             self._worker = None
+        if self._job_worker is not None:
+            self._job_worker.join(timeout=600.0)
+            self._job_worker = None
         self.drain()
 
     # ---- memoized tables -------------------------------------------------
@@ -298,7 +391,7 @@ class Session:
                 sp.set_attr("net", net.name)
                 sp.set_attr("max_L", bucket)
                 built = make_tables(net, max_L=bucket)
-            self._net_tables[key] = built
+            self._net_tables.put(key, built)
             self.stats.bump("net_table_builds")
             return built
 
@@ -312,7 +405,7 @@ class Session:
                 return hit
             with telemetry.span("session.device_table_build"):
                 built = make_device_tables(dev)
-            self._dev_tables[dev] = built
+            self._dev_tables.put(dev, built)
             self.stats.bump("device_table_builds")
             return built
 
@@ -341,7 +434,7 @@ class Session:
                 sp.set_attr("models", len(list(nets)))
                 built = make_multi_tables(list(nets), weights=weights,
                                           slo_s=slo_s, max_m=max_m)
-            self._multi_tables[key] = built
+            self._multi_tables.put(key, built)
             self.stats.bump("multi_table_builds")
             return built
 
@@ -585,16 +678,24 @@ class Session:
     def submit(self, designs, net: Network,
                dev: DeviceSpec | None = None, *,
                inter_segment_pipelining: bool = True,
-               deadline_s: float | None = None) -> Future:
+               deadline_s: float | None = None,
+               priority: str = "interactive") -> Future:
         """Queue an evaluation request; returns a ``Future``.
 
         A background drain loop collects everything queued within the
-        config's ``linger_s`` window and megabatches it through ONE
-        compiled program (``_evaluate_specs_multi`` semantics: all jobs
-        pad to a shared shape, so mixed CNNs × boards still reuse the same
-        compile).  The future resolves to ``{metric: np.ndarray}`` over
-        the submitted specs; a single spec/string resolves to
-        ``{metric: float}``.
+        linger window (fixed ``linger_s``, or arrival-rate adaptive when
+        ``linger_max_s`` is set), coalesces it — tiny same-(net, board)
+        requests merge into shared padded chunks, oversized requests
+        split at the compiled chunk size — and megabatches it through ONE
+        compiled program (all chunks pad to a shared ladder shape, so
+        mixed CNNs × boards still reuse the same compile).  The future
+        resolves to ``{metric: np.ndarray}`` over the submitted specs; a
+        single spec/string resolves to ``{metric: float}``.
+
+        ``priority`` is the request's lane: ``"interactive"`` requests
+        are planned and delivered ahead of ``"batch"`` ones in every
+        drain, so bulk traffic cannot starve point evaluations
+        (docs/serving.md).
 
         Failure semantics (docs/robustness.md): malformed designs raise
         ``EvalError(INVALID_INPUT)`` here, synchronously; with
@@ -607,11 +708,17 @@ class Session:
         raw = [designs] if scalar else list(designs)
         with telemetry.span("session.submit") as sp:
             sp.set_attr("designs", len(raw))
+            sp.set_attr("priority", priority)
             return self._submit(raw, net, dev, scalar,
-                                inter_segment_pipelining, deadline_s)
+                                inter_segment_pipelining, deadline_s,
+                                priority)
 
     def _submit(self, raw, net, dev, scalar, inter_segment_pipelining,
-                deadline_s) -> Future:
+                deadline_s, priority="interactive") -> Future:
+        if priority not in PRIORITIES:
+            raise EvalError(EvalError.INVALID_INPUT,
+                            f"unknown priority {priority!r}; "
+                            f"known: {PRIORITIES}")
         try:
             specs = [self._parse(d, net, inter_segment_pipelining)
                      for d in raw]
@@ -628,7 +735,7 @@ class Session:
         deadline = None if deadline_s is None \
             else time.monotonic() + deadline_s
         req = _Request(specs, net, self._device(dev), Future(), scalar,
-                       deadline)
+                       deadline, priority)
         with self._cv:
             if self._closed:
                 raise RuntimeError(
@@ -636,7 +743,8 @@ class Session:
                     "(the drain loop is stopped; synchronous evaluate() "
                     "still works)")
             if cfg.max_queue is not None \
-                    and len(self._pending) >= cfg.max_queue:
+                    and len(self._pending) + len(self._jobs) \
+                    >= cfg.max_queue:
                 self.stats.bump("rejected")
                 telemetry.event("resilience.rejected",
                                 {"queue": len(self._pending)})
@@ -644,6 +752,7 @@ class Session:
                     EvalError.QUEUE_FULL,
                     f"submit queue full ({cfg.max_queue} pending "
                     f"requests); retry after the queue drains")
+            self._arrivals.observe(time.monotonic())
             self._pending.append(req)
             telemetry.gauge("session.queue_depth", len(self._pending))
             if self._worker is None:
@@ -655,14 +764,148 @@ class Session:
         self.stats.bump("submits")
         return req.future
 
+    # ---- the batch lane: long search jobs --------------------------------
+    def submit_search(self, nets, n: int = 100_000,
+                      dev: DeviceSpec | None = None, *,
+                      deadline_s: float | None = None,
+                      checkpoint_path: str | None = None,
+                      checkpoint_interval: int = 8,
+                      **kw) -> Future:
+        """Queue a long DSE job — :meth:`explore` for a single ``Network``,
+        :meth:`deploy` for a list — on the batch lane; returns a
+        ``Future`` resolving to the search result.
+
+        Jobs run FIFO on a dedicated worker thread, so the interactive
+        megabatch drain never blocks behind a 100k-budget search; the
+        evaluations inside the job still flow through the session's
+        cached tables and compiled programs.  ``checkpoint_path`` makes a
+        ``strategy="search"`` job preemptible: the search snapshots every
+        ``checkpoint_interval`` generations and a resubmitted job (or a
+        restarted server) resumes bit-identically from the snapshot
+        (docs/robustness.md).  Admission control (``max_queue``) counts
+        queued jobs; a job whose ``deadline_s`` passes while queued fails
+        with ``DEADLINE_EXCEEDED`` without spending any search budget.
+        """
+        from .workload import Network as _Network
+
+        is_single = isinstance(nets, (_Network, NetTables))
+        kind = "explore" if is_single else "deploy"
+        if checkpoint_path is not None:
+            if kw.get("strategy", "random" if is_single else "search") \
+                    != "search":
+                raise EvalError(
+                    EvalError.INVALID_INPUT,
+                    "checkpoint_path requires strategy='search' (the "
+                    "random sweep has no loop state to snapshot)")
+            config = kw.get("config")
+            if config is None:
+                from .dse.search import SearchConfig
+                from .multinet.search import MultinetSearchConfig
+                config = SearchConfig() if is_single \
+                    else MultinetSearchConfig()
+                if "seed" in kw:
+                    config = replace(config, seed=kw["seed"])
+            kw["config"] = replace(config,
+                                   checkpoint_path=checkpoint_path,
+                                   checkpoint_interval=checkpoint_interval,
+                                   resume=True)
+
+        def job():
+            if kind == "explore":
+                return self.explore(nets, n, dev, **kw)
+            return self.deploy(nets, n, dev, **kw)
+
+        cfg = self.config
+        deadline = None if deadline_s is None \
+            else time.monotonic() + deadline_s
+        j = _SearchJob(job, Future(), deadline, label=kind)
+        with self._job_cv:
+            if self._closed:
+                raise RuntimeError(
+                    "session closed: submit_search() is refused after "
+                    "close()")
+            if cfg.max_queue is not None \
+                    and len(self._jobs) + len(self._pending) \
+                    >= cfg.max_queue:
+                self.stats.bump("rejected")
+                telemetry.event("resilience.rejected",
+                                {"queue": len(self._jobs),
+                                 "lane": "batch"})
+                raise EvalError(
+                    EvalError.QUEUE_FULL,
+                    f"search-job queue full ({cfg.max_queue} pending); "
+                    f"retry after the queue drains")
+            self._jobs.append(j)
+            telemetry.gauge("session.job_queue_depth", len(self._jobs))
+            if self._job_worker is None:
+                self._job_worker = threading.Thread(
+                    target=self._job_loop, name="repro-session-jobs",
+                    daemon=True)
+                self._job_worker.start()
+            self._job_cv.notify_all()
+        self.stats.bump("search_jobs")
+        return j.future
+
+    def _job_loop(self) -> None:
+        while True:
+            with self._job_cv:
+                while not self._jobs and not self._closed:
+                    self._job_cv.wait()
+                if not self._jobs:        # closed and drained
+                    return
+                j = self._jobs.pop(0)
+                self._job_running = True
+            try:
+                self._run_job(j)
+            finally:
+                with self._job_cv:
+                    self._job_running = False
+                    self._job_cv.notify_all()
+
+    def _run_job(self, j: _SearchJob) -> None:
+        if not j.future.set_running_or_notify_cancel():
+            return
+        if j.deadline is not None and time.monotonic() > j.deadline:
+            self.stats.bump("deadline_missed")
+            telemetry.event("resilience.deadline_missed",
+                            {"where": "job_queued"})
+            j.future.set_exception(EvalError(
+                EvalError.DEADLINE_EXCEEDED,
+                "deadline passed while the search job was queued"))
+            return
+        with telemetry.span("session.search_job") as sp:
+            sp.set_attr("kind", j.label)
+            telemetry.observe("session.job_queue_wait_s",
+                              time.monotonic() - j.t_enq)
+            try:
+                out = j.fn()
+            except BaseException as e:  # noqa: BLE001 — job isolation
+                j.future.set_exception(wrap(e))
+                if not isinstance(e, Exception):
+                    raise
+            else:
+                j.future.set_result(out)
+
     def drain(self) -> int:
         """Synchronously megabatch everything currently queued (also what
-        the background loop runs); returns the number of requests served."""
+        the background loop runs); returns the number of requests served.
+        Interactive-lane requests are planned and delivered ahead of
+        batch-lane ones (stable within a lane)."""
         with self._cv:
             reqs, self._pending = self._pending, []
         if reqs:
+            reqs.sort(key=lambda r: PRIORITIES.index(r.priority))
             self._run_megabatch(reqs)
         return len(reqs)
+
+    def _linger(self) -> float:
+        """The next drain's linger window: fixed ``linger_s``, or the
+        arrival-rate-adaptive policy when ``linger_max_s`` is armed
+        (~2 observed inter-arrivals, capped — docs/serving.md)."""
+        cfg = self.config
+        if cfg.linger_max_s is None:
+            return cfg.linger_s
+        return self._arrivals.linger(cfg.linger_max_s)
 
     def _drain_loop(self) -> None:
         while True:
@@ -672,7 +915,7 @@ class Session:
                 if self._closed and not self._pending:
                     return
             # linger so concurrent submitters land in the same megabatch
-            time.sleep(self.config.linger_s)
+            time.sleep(self._linger())
             self.drain()
 
     def _deliver(self, r: _Request, out: dict) -> None:
@@ -780,8 +1023,13 @@ class Session:
                 ready.append((r, tab, dtab))
         if not ready:
             return
-        jobs = [(r.specs, r.net, dtab) for r, _, dtab in ready]
-        tabs = [tab for _, tab, _ in ready]
+        if cfg.coalesce:
+            jobs, tabs, scatter = self._coalesce_jobs(ready, sp)
+        else:
+            # one padded chunk per request (the pre-coalescing drain)
+            jobs = [(r.specs, r.net, dtab) for r, _, dtab in ready]
+            tabs = [tab for _, tab, _ in ready]
+            scatter = None
         try:
             results = self._resilient_call(
                 lambda b: _evaluate_specs_multi(
@@ -802,8 +1050,65 @@ class Session:
                     self._finish(r, out)
             return
         self.stats.bump("megabatches")
-        for (r, _, _), out in zip(ready, results):
-            self._finish(r, out)
+        if scatter is None:
+            for (r, _, _), out in zip(ready, results):
+                self._finish(r, out)
+            return
+        scatter(results)
+
+    def _coalesce_jobs(self, ready, sp):
+        """Plan the coalesced megabatch: merge-compatible requests (same
+        memoized ``NetTables`` object + same board) pack into shared
+        chunks, oversized requests split at the compiled chunk size
+        (``core.coalesce``).  Returns ``(jobs, tabs, scatter)`` where
+        ``jobs`` holds one ``(specs, net, dev)`` triple per chunk and
+        ``scatter(results)`` slices the per-chunk metric arrays back to
+        each request's future — every request answered exactly once, in
+        its own spec order, NaN rows still failing only their request."""
+        cfg = self.config
+        nd = self.mesh.ndevices if self.mesh.is_sharded else 1
+        keyed = [((id(tab), id(dtab)), len(r.specs))
+                 for r, tab, dtab in ready]
+        plan = plan_megabatch(keyed, cfg.chunk, cfg.tile, nd)
+        by_key = {}
+        for i, (key, _) in enumerate(keyed):
+            by_key.setdefault(key, i)
+        jobs, tabs = [], []
+        for c in plan.chunks:
+            specs = []
+            for p in c.parts:
+                specs.extend(ready[p.req][0].specs[p.lo:p.hi])
+            lead = ready[by_key[c.group]]
+            jobs.append((specs, lead[0].net, lead[0].dev))
+            tabs.append(lead[1])
+        self.stats.bump("coalesced_chunks", len(plan.chunks))
+        if plan.merges:
+            self.stats.bump("coalesced_merges", plan.merges)
+        if plan.splits:
+            self.stats.bump("coalesced_splits", plan.splits)
+        sp.set_attr("chunks", len(plan.chunks))
+        sp.set_attr("shared_pad", plan.shared_pad)
+
+        def scatter(results):
+            pieces: dict[int, list] = {i: [] for i in range(len(ready))}
+            for c, out in zip(plan.chunks, results):
+                off = 0
+                for p in c.parts:
+                    n = len(p)
+                    pieces[p.req].append(
+                        (p.lo, {k: v[off:off + n]
+                                for k, v in out.items()}))
+                    off += n
+            for i, (r, _, _) in enumerate(ready):
+                parts = sorted(pieces[i], key=lambda t: t[0])
+                outs = [d for _, d in parts]
+                if len(outs) == 1:
+                    self._finish(r, outs[0])
+                else:
+                    self._finish(r, {k: np.concatenate(
+                        [o[k] for o in outs]) for k in outs[0]})
+
+        return jobs, tabs, scatter
 
     # ---- observability ---------------------------------------------------
     def compile_stats(self) -> dict[str, int]:
@@ -842,15 +1147,32 @@ class Session:
         counts["deadline_missed"] = self.stats.deadline_missed
         return counts
 
+    def cache_stats(self) -> dict[str, dict[str, int]]:
+        """Size / bound / eviction counters of every bounded cache the
+        session owns: the three table memos plus the mesh's sharded-jit
+        registry (``docs/serving.md``).  A long-lived server's memory
+        guarantee is exactly ``size <= maxsize`` here."""
+        with self._table_lock:
+            out = {
+                "net_tables": self._net_tables.stats(),
+                "device_tables": self._dev_tables.stats(),
+                "multi_tables": self._multi_tables.stats(),
+            }
+        out["mesh_jits"] = {"size": len(self.mesh._jits),
+                            "maxsize": self.mesh.max_jits,
+                            "evictions": self.mesh.jit_evictions}
+        return out
+
     def observability(self) -> dict:
-        """One-stop report: compile counts, session counters, breaker
-        state and — when telemetry is enabled — the full metrics
-        registry snapshot (counters/gauges/histograms with
-        p50/p90/p99/p999), merged into one dict
+        """One-stop report: compile counts, session counters, bounded-
+        cache occupancy/evictions, breaker state and — when telemetry is
+        enabled — the full metrics registry snapshot (counters/gauges/
+        histograms with p50/p90/p99/p999), merged into one dict
         (``docs/observability.md``)."""
         return {
             "compile": self.compile_stats(),
             "stats": self.stats.as_dict(),
+            "caches": self.cache_stats(),
             "breaker": {"open": self.breaker.is_open,
                         "trips": self.breaker.trips},
             "telemetry": telemetry.snapshot(),

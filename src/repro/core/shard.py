@@ -65,15 +65,23 @@ from ..compat import shard_map                       # noqa: E402
 from . import telemetry                              # noqa: E402
 from .batch_eval import (                            # noqa: E402
     DEFAULT_TILE, _pad_rows, evaluate_batch_traced, padded_rows)
+from .cache import (                                 # noqa: E402
+    DEFAULT_MAX_JITS, JITS_ENV, BoundedLRU, env_bound)
 
-#: every sharded jit ever built (name, jitted fn) — Session.compile_stats
+#: every *live* sharded jit (name, jitted fn) — Session.compile_stats
 #: sums ``_cache_size()`` over this to count per-mesh compiles.
 _REGISTRY: list[tuple[str, object]] = []
+#: compile counts of evicted jits, folded in at eviction time so
+#: ``mesh_compile_counts`` stays monotone across LRU turnover (a cache
+#: that forgets a program must not forget that it was compiled).
+_EVICTED_COUNTS: dict[str, int] = {}
 
 
 def mesh_compile_counts() -> dict[str, int]:
-    """Compiled-program count per sharded entry point, over all meshes."""
-    out: dict[str, int] = {}
+    """Compiled-program count per sharded entry point, over all meshes —
+    live jits plus everything evicted by the bounded registry (monotone:
+    eviction frees the program, not its history)."""
+    out: dict[str, int] = dict(_EVICTED_COUNTS)
     for name, fn in _REGISTRY:
         out[name] = out.get(name, 0) + fn._cache_size()
     return out
@@ -89,7 +97,8 @@ class EvalMesh:
     it is not an error.
     """
 
-    def __init__(self, ndevices: int | None = None, *, devices=None):
+    def __init__(self, ndevices: int | None = None, *, devices=None,
+                 max_jits: int | None = None):
         if devices is None:
             avail = jax.devices()
             want = ndevices if ndevices is not None else env_mesh_devices()
@@ -103,7 +112,35 @@ class EvalMesh:
             self.requested = len(devices)
         self.devices = tuple(devices)
         self._mesh: Mesh | None = None
-        self._jits: dict = {}
+        # bounded: a long-lived server cycling many (backend, tile, ...)
+        # statics must not pin every sharded program forever.  Eviction
+        # drops the program (a re-request recompiles) but folds its
+        # compile count into _EVICTED_COUNTS so observability stays
+        # monotone.  max_jits <= 0 disables eviction.
+        if max_jits is None:
+            max_jits = env_bound(JITS_ENV, DEFAULT_MAX_JITS)
+        self._jits = BoundedLRU(max_jits, on_evict=self._on_evict_jit)
+
+    @property
+    def jit_evictions(self) -> int:
+        """Sharded programs dropped by this mesh's bounded jit registry."""
+        return self._jits.evictions
+
+    @property
+    def max_jits(self) -> int:
+        return self._jits.maxsize
+
+    def _on_evict_jit(self, key, jitted) -> None:
+        name = key[0]
+        _EVICTED_COUNTS[name] = _EVICTED_COUNTS.get(name, 0) \
+            + jitted._cache_size()
+        for i, (n, fn) in enumerate(_REGISTRY):
+            if fn is jitted:
+                del _REGISTRY[i]
+                break
+        telemetry.count("shard.jit_evictions")
+        telemetry.event("shard.jit_evict",
+                        {"name": name, "ndevices": self.ndevices})
 
     @property
     def ndevices(self) -> int:
@@ -136,7 +173,7 @@ class EvalMesh:
         calls reuse the compiled program."""
         statics = tuple(sorted((static_kwargs or {}).items()))
         key = (name, statics)
-        cached = self._jits.get(key)
+        cached = self._jits.get(key)      # refreshes LRU recency on a hit
         if cached is not None:
             return cached
         body = partial(fn, **dict(statics)) if statics else fn
@@ -150,8 +187,8 @@ class EvalMesh:
                              out_specs=P(MESH_AXIS))(*args)
 
         jitted = jax.jit(run, donate_argnums=donate_argnums)
-        self._jits[key] = jitted
         _REGISTRY.append((name, jitted))
+        self._jits.put(key, jitted)
         telemetry.count("shard.jit_builds")
         telemetry.event("shard.jit_build",
                         {"name": name, "ndevices": self.ndevices})

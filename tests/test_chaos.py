@@ -122,17 +122,21 @@ def test_search_backend_degrades_while_breaker_open():
 # acceptance (b): one poisoned request fails only its own future
 # --------------------------------------------------------------------------
 def test_poisoned_request_fails_only_its_future():
-    net, dev = get_cnn(NET), get_board(BOARD)
+    # distinct nets: the coalescer merges same-(net, board) requests into
+    # one chunk, and the poisoner corrupts a whole chunk — different nets
+    # keep the victim in its own chunk (within-chunk NaN isolation is
+    # covered by tests/test_serve_coalesce.py)
+    net, net2, dev = get_cnn(NET), get_cnn("resnet50"), get_board(BOARD)
     ses = Session(dev, linger_s=0.5)
     with poison_megabatch(job_index=0, key="latency_s"):
         f_bad = ses.submit(["{L1-Last:CE1-CE4}"], net)
-        f_good = ses.submit(_specs(net), net)
+        f_good = ses.submit(_specs(net2), net2)
         with pytest.raises(EvalError, match="non-finite") as ei:
             f_bad.result(timeout=120)
         assert _code(ei) == EvalError.NONFINITE_METRICS
         good = f_good.result(timeout=120)
     ses.close()
-    want = ses.evaluate(_specs(net), net)
+    want = ses.evaluate(_specs(net2), net2)
     for k in want:
         np.testing.assert_array_equal(np.asarray(good[k]),
                                       np.asarray(want[k]))

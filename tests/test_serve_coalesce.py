@@ -1,0 +1,223 @@
+"""The coalescer's contract (docs/serving.md): every submitted spec is
+answered exactly once, in order, from chunks that never exceed the
+compiled tile ladder — and coalescing never forks a compile and never
+spreads one request's NaN to its chunk-mates.
+
+Planner properties run through ``hypo_fallback`` (real hypothesis when
+installed) against ``validate_plan`` — arbitrary request streams, zero
+violations.  The integration half drives a real :class:`Session`.
+"""
+from __future__ import annotations
+
+import time
+from unittest import mock
+
+import numpy as np
+import pytest
+from hypo_fallback import given, settings, st
+
+from repro.api import Session
+from repro.cnn.registry import get_cnn
+from repro.core import session as _session
+from repro.core.coalesce import (ArrivalEstimator, ladder_pad,
+                                 plan_megabatch, validate_plan)
+from repro.fpga.boards import get_board
+
+NET = "mobilenetv2"
+BOARD = "zc706"
+
+
+# --------------------------------------------------------------------------
+# planner properties
+# --------------------------------------------------------------------------
+@st.composite
+def _streams(draw):
+    """(requests, chunk, tile, ndevices): arbitrary mixed-group request
+    streams against arbitrary ladder geometry."""
+    tile = draw(st.sampled_from([1, 8, 32]))
+    ndevices = draw(st.sampled_from([1, 2, 4]))
+    base = tile * ndevices
+    chunk = base * draw(st.sampled_from([1, 2, 8]))
+    n = draw(st.integers(min_value=1, max_value=12))
+    reqs = [(draw(st.sampled_from(["g0", "g1", "g2"])),
+             draw(st.integers(min_value=1, max_value=3 * chunk)))
+            for _ in range(n)]
+    return reqs, chunk, tile, ndevices
+
+
+@settings(max_examples=60, deadline=None)
+@given(_streams())
+def test_plan_sound_for_arbitrary_streams(stream):
+    """Exactly-once coverage in order, one group per chunk, every pad on
+    the ladder and under the compiled chunk — for any stream."""
+    reqs, chunk, tile, nd = stream
+    plan = plan_megabatch(reqs, chunk, tile, nd)
+    assert validate_plan(plan, reqs, chunk, tile, nd) == []
+    total = sum(size for _, size in reqs)
+    assert sum(c.rows for c in plan.chunks) == total
+    assert plan.shared_pad <= chunk
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(min_value=1, max_value=4096),
+       st.sampled_from([1, 2, 8, 32]),
+       st.sampled_from([1, 2, 4]))
+def test_ladder_pad_is_ladder_shape(rows, tile, nd):
+    chunk = 4096
+    pad = ladder_pad(rows, chunk, tile, nd)
+    assert rows <= pad <= chunk
+    if pad < chunk:
+        # exactly tile x nd x 2^k: dividing out tile x nd leaves 2^k
+        q = pad // (tile * nd)
+        assert pad == q * tile * nd and q & (q - 1) == 0
+
+
+def test_ladder_pad_rejects_oversized_rows():
+    with pytest.raises(ValueError, match="exceed"):
+        ladder_pad(33, 32, 8)
+
+
+def test_plan_merges_tiny_and_splits_oversized():
+    reqs = [("g", 1), ("g", 1), ("g", 1), ("g", 70)]
+    plan = plan_megabatch(reqs, chunk=32, tile=8)
+    assert validate_plan(plan, reqs, 32, 8) == []
+    # the three probes and the split request's head share chunks
+    assert plan.merges >= 3
+    assert plan.splits == 1          # only the 70-spec request splits
+    assert all(c.pad <= 32 for c in plan.chunks)
+
+
+def test_plan_never_mixes_groups():
+    reqs = [("a", 2), ("b", 2), ("a", 2)]
+    plan = plan_megabatch(reqs, chunk=32, tile=8)
+    for c in plan.chunks:
+        assert len({c.group}) == 1
+    # same-group requests merged; the other group stayed apart
+    assert plan.merges == 2
+    assert len(plan.chunks) == 2
+
+
+def test_plan_rejects_empty_request():
+    with pytest.raises(ValueError, match="size 0"):
+        plan_megabatch([("g", 0)], chunk=32, tile=8)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(min_value=1e-4, max_value=0.2),
+       st.floats(min_value=0.001, max_value=0.1))
+def test_adaptive_linger_clamped(dt, max_s):
+    """Linger always lands in [0, max_s], and a constant arrival rate
+    converges it to gain x dt (capped)."""
+    est = ArrivalEstimator()
+    assert est.linger(max_s) == max_s       # cold queue: full window
+    t = 0.0
+    for _ in range(64):
+        est.observe(t)
+        t += dt
+        assert 0.0 <= est.linger(max_s) <= max_s
+    want = min(est.gain * dt, max_s)
+    assert est.linger(max_s) == pytest.approx(want, rel=0.05)
+
+
+def test_adaptive_linger_tracks_rate_change():
+    est = ArrivalEstimator()
+    t = 0.0
+    for _ in range(32):
+        est.observe(t)
+        t += 0.1
+    slow = est.linger(1.0)
+    for _ in range(64):
+        est.observe(t)
+        t += 0.001
+    assert est.linger(1.0) < slow           # hot stream shrinks the wait
+
+
+# --------------------------------------------------------------------------
+# integration: a real session's drain
+# --------------------------------------------------------------------------
+def _specs(k: int):
+    return [f"{{L1-Last:CE1-CE{1 + (i % 6)}}}" for i in range(k)]
+
+
+def test_coalescing_never_forks_compiles_and_is_bit_identical():
+    """Tiny same-net probes merged into one chunk reuse the warmed
+    compiled program (compile-miss total unchanged) and reproduce the
+    uncoalesced results bit-for-bit."""
+    net, dev = get_cnn(NET), get_board(BOARD)
+    ses = Session(dev, linger_s=0.25)
+    want = ses.evaluate(_specs(8), net)      # warms tables + ladder shape
+    before = ses.compile_stats()["total"]
+    futs = [ses.submit([s], net) for s in _specs(8)]
+    outs = [f.result(timeout=300) for f in futs]
+    assert ses.compile_stats()["total"] == before
+    assert ses.stats.coalesced_merges >= 2
+    assert ses.stats.coalesced_chunks >= 1
+    for i, out in enumerate(outs):
+        for k in want:
+            np.testing.assert_array_equal(np.asarray(out[k]),
+                                          np.asarray(want[k][i]))
+    ses.close()
+
+
+def test_split_request_reassembles_in_order():
+    """A request larger than the compiled chunk splits, evaluates and
+    concatenates back in spec order, bit-identical to the direct path."""
+    net, dev = get_cnn(NET), get_board(BOARD)
+    ses = Session(dev, chunk=32, linger_s=0.05)
+    specs = _specs(70)
+    out = ses.submit(specs, net).result(timeout=300)
+    assert ses.stats.coalesced_splits >= 1
+    want = ses.evaluate(specs, net)
+    for k in want:
+        np.testing.assert_array_equal(np.asarray(out[k]),
+                                      np.asarray(want[k]))
+    ses.close()
+
+
+def test_merged_chunk_nan_fails_only_owner_row():
+    """Within one merged chunk, a NaN in request A's rows fails A's
+    future only — B (same chunk) still delivers."""
+    net, dev = get_cnn(NET), get_board(BOARD)
+    ses = Session(dev, linger_s=0.4)
+    want = ses.evaluate(_specs(2), net)      # warm, and the reference
+    real = _session._evaluate_specs_multi
+
+    def poison_first_row(jobs, *a, **kw):
+        outs = real(jobs, *a, **kw)
+        poisoned = dict(outs[0])
+        lat = np.asarray(poisoned["latency_s"]).copy()
+        lat[0] = np.nan                      # request A owns row 0
+        poisoned["latency_s"] = lat
+        return [poisoned] + list(outs[1:])
+
+    from repro.core.resilience import EvalError
+    with mock.patch.object(_session, "_evaluate_specs_multi",
+                           side_effect=poison_first_row):
+        f_a = ses.submit([_specs(2)[0]], net)
+        time.sleep(0.05)
+        f_b = ses.submit([_specs(2)[1]], net)
+        with pytest.raises(EvalError, match="non-finite"):
+            f_a.result(timeout=300)
+        out_b = f_b.result(timeout=300)
+    assert ses.stats.coalesced_merges >= 2   # they shared a chunk
+    for k in want:
+        np.testing.assert_array_equal(np.asarray(out_b[k]),
+                                      np.asarray(want[k][1]))
+    ses.close()
+
+
+def test_coalesce_off_reproduces_legacy_drain():
+    """coalesce=False restores one-padded-chunk-per-request, still
+    bit-identical."""
+    net, dev = get_cnn(NET), get_board(BOARD)
+    ses = Session(dev, linger_s=0.1, coalesce=False)
+    futs = [ses.submit([s], net) for s in _specs(4)]
+    outs = [f.result(timeout=300) for f in futs]
+    assert ses.stats.coalesced_chunks == 0
+    assert ses.stats.coalesced_merges == 0
+    want = ses.evaluate(_specs(4), net)
+    for i, out in enumerate(outs):
+        for k in want:
+            np.testing.assert_array_equal(np.asarray(out[k]),
+                                          np.asarray(want[k][i]))
+    ses.close()

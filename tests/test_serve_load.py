@@ -1,0 +1,57 @@
+"""The load generator's trace is a pure function of the seed — the BENCH
+point is replayable (docs/serving.md)."""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+from benchmarks.serve_load import TRACE_BOARDS, TRACE_NETS, make_trace
+from repro.core.notation import parse
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_make_trace_deterministic_and_seed_sensitive():
+    a, b = make_trace(7, 40), make_trace(7, 40)
+    assert a == b
+    assert make_trace(8, 40) != a
+
+
+def test_trace_entries_are_valid_requests():
+    trace = make_trace(3, 48)
+    assert len(trace) == 48
+    t_prev = 0.0
+    for e in trace:
+        assert e["t"] >= t_prev          # arrival offsets nondecreasing
+        t_prev = e["t"]
+        assert e["net"] in TRACE_NETS
+        assert e["board"] in TRACE_BOARDS
+        assert e["priority"] in ("interactive", "batch")
+        assert len(e["designs"]) >= 1
+        for d in e["designs"]:
+            # every design is legal notation at any zoo net depth
+            parse(d, n_layers=52)
+    assert any(e["priority"] == "batch" for e in trace)
+    assert any(e["priority"] == "interactive" for e in trace)
+
+
+def test_print_trace_cli_is_byte_identical():
+    """Two --print-trace subprocess runs at one seed produce identical
+    stdout (and differ at another seed) — without importing jax."""
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(ROOT, "src") + os.pathsep
+               + os.environ.get("PYTHONPATH", ""))
+
+    def run(seed: int) -> str:
+        out = subprocess.run(
+            [sys.executable, "-m", "benchmarks.serve_load",
+             "--print-trace", "--seed", str(seed)],
+            cwd=ROOT, env=env, capture_output=True, text=True,
+            timeout=120)
+        assert out.returncode == 0, out.stderr
+        return out.stdout
+
+    one, two = run(11), run(11)
+    assert one == two
+    assert run(12) != one

@@ -1,0 +1,262 @@
+"""The serving front over a real loopback socket (docs/serving.md):
+round-trips, concurrent mixed traffic, the EvalError taxonomy on the
+wire, deadline / queue-full codes end-to-end, DSE ops at tiny budgets,
+interactive-lane latency under a running batch job, and graceful
+shutdown that drains in-flight work.
+"""
+from __future__ import annotations
+
+import json
+import socket
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import EvalError, Session
+from repro.cnn.registry import get_cnn
+from repro.fpga.boards import get_board
+from repro.serve import EvalServer, ServeClient
+
+NET = "mobilenetv2"
+BOARD = "zc706"
+SPEC = "{L1-Last:CE1-CE4}"
+
+
+@pytest.fixture(scope="module")
+def served():
+    """One warmed session + server shared by the whole module (sockets
+    are cheap; compiles are not)."""
+    ses = Session(get_board(BOARD), linger_s=0.005)
+    ses.evaluate([SPEC], get_cnn(NET))       # warm tables + ladder
+    with EvalServer(ses) as srv:
+        yield srv
+    ses.close()
+
+
+def _client(srv) -> ServeClient:
+    return ServeClient(*srv.address)
+
+
+# --------------------------------------------------------------------------
+# round-trips
+# --------------------------------------------------------------------------
+def test_ping_and_scalar_roundtrip(served):
+    with _client(served) as cli:
+        assert cli.ping() == {"pong": True}
+        m = cli.evaluate(SPEC, NET)
+        want = served.session.evaluate(SPEC, get_cnn(NET))
+        assert m["latency_s"] == pytest.approx(want.latency_s)
+
+
+def test_list_roundtrip_bit_identical(served):
+    specs = [SPEC, "{L1-Last:CE1-CE2}", "{L1-L4:CE1, L5-Last:CE2}"]
+    with _client(served) as cli:
+        out = cli.evaluate(specs, NET, board=BOARD)
+    want = served.session.evaluate(specs, get_cnn(NET))
+    for k, v in want.items():
+        np.testing.assert_array_equal(np.asarray(out[k]), np.asarray(v))
+
+
+def test_observability_over_wire(served):
+    with _client(served) as cli:
+        obs = cli.observability()
+    assert {"compile", "stats", "caches", "breaker"} <= obs.keys()
+    assert obs["caches"]["net_tables"]["size"] >= 1
+
+
+def test_pipelined_out_of_order_completion(served):
+    """Many async requests on one connection resolve to the right
+    futures regardless of server completion order."""
+    with _client(served) as cli:
+        futs = {i: cli.evaluate_async([f"{{L1-Last:CE1-CE{1 + i % 6}}}"],
+                                      NET)
+                for i in range(12)}
+        for i, f in futs.items():
+            want = served.session.evaluate(
+                [f"{{L1-Last:CE1-CE{1 + i % 6}}}"], get_cnn(NET))
+            got = f.result(timeout=300)
+            np.testing.assert_array_equal(np.asarray(got["latency_s"]),
+                                          np.asarray(want["latency_s"]))
+
+
+def test_concurrent_mixed_traffic_hammer(served):
+    """Several client connections at once, mixed scalar/list and
+    interactive/batch — every reply correct, none dropped."""
+    errors: list = []
+
+    def worker(seed: int) -> None:
+        try:
+            with _client(served) as cli:
+                for j in range(4):
+                    k = 1 + (seed + j) % 6
+                    spec = f"{{L1-Last:CE1-CE{k}}}"
+                    out = cli.evaluate(
+                        [spec], NET,
+                        priority="batch" if j % 2 else "interactive")
+                    want = served.session.evaluate([spec], get_cnn(NET))
+                    np.testing.assert_array_equal(
+                        np.asarray(out["latency_s"]),
+                        np.asarray(want["latency_s"]))
+        except Exception as e:  # noqa: BLE001 — collected for the assert
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(i,))
+               for i in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=300)
+    assert errors == []
+
+
+# --------------------------------------------------------------------------
+# the taxonomy on the wire
+# --------------------------------------------------------------------------
+def test_malformed_line_fails_only_that_line(served):
+    """Raw socket: garbage JSON gets an INVALID_INPUT error envelope and
+    the connection stays usable for the next request."""
+    host, port = served.address
+    with socket.create_connection((host, port)) as s:
+        f = s.makefile("rw", encoding="utf-8")
+        f.write("this is not json\n")
+        f.flush()
+        err = json.loads(f.readline())
+        assert err["ok"] is False
+        assert err["error"]["code"] == EvalError.INVALID_INPUT
+        f.write(json.dumps({"id": 1, "op": "ping"}) + "\n")
+        f.flush()
+        ok = json.loads(f.readline())
+        assert ok == {"id": 1, "ok": True, "result": {"pong": True}}
+
+
+@pytest.mark.parametrize("msg", [
+    {"op": "warp_drive"},                       # unknown op
+    {"op": "evaluate", "designs": [SPEC], "net": "nope"},
+    {"op": "evaluate", "designs": [], "net": NET},
+    {"op": "evaluate", "designs": ["{not notation"], "net": NET},
+    {"op": "evaluate", "designs": [SPEC], "net": NET, "board": "nope"},
+    {"op": "deploy", "nets": [NET], "n": 8},    # needs >= 2 nets
+    {"op": "evaluate", "designs": [SPEC], "net": NET,
+     "priority": "vip"},
+])
+def test_invalid_requests_return_invalid_input(served, msg):
+    with _client(served) as cli:
+        with pytest.raises(EvalError) as ei:
+            cli.request(msg.pop("op"), **msg)
+        assert ei.value.code == EvalError.INVALID_INPUT
+
+
+def test_deadline_exceeded_over_wire():
+    """A deadline shorter than the linger window comes back as a wire
+    DEADLINE_EXCEEDED, reconstructed as EvalError client-side."""
+    ses = Session(get_board(BOARD), linger_s=0.5)
+    with EvalServer(ses) as srv, _client(srv) as cli:
+        with pytest.raises(EvalError) as ei:
+            cli.evaluate(SPEC, NET, deadline_s=0.01)
+        assert ei.value.code == EvalError.DEADLINE_EXCEEDED
+    ses.close()
+
+
+def test_queue_full_over_wire():
+    """Admission control crosses the wire: with max_queue=1 and a long
+    linger, the second concurrent request is refused as QUEUE_FULL."""
+    ses = Session(get_board(BOARD), linger_s=1.0, max_queue=1)
+    with EvalServer(ses) as srv, _client(srv) as cli:
+        first = cli.evaluate_async(SPEC, NET)     # parks in the queue
+        time.sleep(0.1)
+        with pytest.raises(EvalError) as ei:
+            cli.evaluate(SPEC, NET)
+        assert ei.value.code == EvalError.QUEUE_FULL
+        first.result(timeout=300)                 # still delivered
+    ses.close()
+
+
+# --------------------------------------------------------------------------
+# DSE over the wire, and lane isolation
+# --------------------------------------------------------------------------
+def test_explore_over_wire_matches_local(served):
+    with _client(served) as cli:
+        r = cli.explore(NET, n=128, strategy="random", seed=5)
+    local = served.session.explore(get_cnn(NET), 128, strategy="random",
+                                   seed=5)
+    assert r["n_evals"] == local.n_evals == 128
+    assert r["front"] == local.front.tolist()
+    np.testing.assert_allclose(np.asarray(r["front_points"]),
+                               local.front_points())
+
+
+def test_deploy_over_wire(served):
+    with _client(served) as cli:
+        r = cli.deploy([NET, "resnet50"], n=48, seed=2)
+    assert r["n_evals"] > 0
+    assert r["front_size"] >= 1
+    assert set(r["front_metrics"]) >= {"makespan_s"} \
+        or len(r["front_metrics"]) > 0
+
+
+def test_interactive_not_starved_by_batch_job(served):
+    """An interactive probe lands within its deadline while an explore
+    job holds the batch lane."""
+    with _client(served) as cli:
+        job = cli.request_async("explore", net=NET, n=2048,
+                                strategy="random", seed=0)
+        t0 = time.monotonic()
+        cli.evaluate(SPEC, NET, deadline_s=30.0, priority="interactive")
+        assert time.monotonic() - t0 < 30.0
+        assert job.result(timeout=600)["n_evals"] == 2048
+
+
+def test_server_bounded_under_key_churn():
+    """The whole zoo (> 2x the table bound in distinct nets) through the
+    wire: live tables never exceed the bound, evictions surface in the
+    wire observability, answers stay correct."""
+    from repro.cnn.registry import CNN_NAMES
+
+    ses = Session(get_board(BOARD), linger_s=0.005, max_cached_tables=2)
+    with EvalServer(ses) as srv, _client(srv) as cli:
+        for name in CNN_NAMES:
+            out = cli.evaluate([SPEC], name)
+            want = ses.evaluate([SPEC], get_cnn(name))
+            np.testing.assert_array_equal(np.asarray(out["latency_s"]),
+                                          np.asarray(want["latency_s"]))
+        caches = cli.observability()["caches"]
+    assert caches["net_tables"]["size"] <= 2
+    assert caches["net_tables"]["evictions"] >= len(CNN_NAMES) - 2
+    ses.close()
+
+
+# --------------------------------------------------------------------------
+# lifecycle
+# --------------------------------------------------------------------------
+def test_graceful_shutdown_drains_inflight():
+    """stop(drain=True) (the shutdown op) delivers every accepted
+    response before closing the sockets."""
+    ses = Session(get_board(BOARD), linger_s=0.3)
+    ses.evaluate([SPEC], get_cnn(NET))
+    srv = EvalServer(ses).start()
+    addr = srv.address
+    with _client(srv) as cli:
+        fut = cli.evaluate_async(SPEC, NET)    # parked in the linger
+        time.sleep(0.05)
+        cli.shutdown(drain=True)
+        out = fut.result(timeout=300)          # delivered, not dropped
+        assert np.isfinite(out["latency_s"])
+    # the listener is gone
+    time.sleep(0.3)                            # shutdown thread finishes
+    with pytest.raises(OSError):
+        socket.create_connection(addr, timeout=0.5)
+    srv.stop()                                 # idempotent
+    ses.close()
+
+
+def test_stop_is_idempotent_and_session_survives():
+    ses = Session(get_board(BOARD), linger_s=0.005)
+    srv = EvalServer(ses).start()
+    srv.stop()
+    srv.stop()
+    # the server never owns the session
+    m = ses.evaluate(SPEC, get_cnn(NET))
+    assert np.isfinite(m.latency_s)
+    ses.close()

@@ -1,0 +1,195 @@
+"""Bounded-cache guarantees (docs/serving.md): a long-lived session under
+more distinct (net, board) keys than its bound stays memory-bounded, an
+evicted entry rebuilds bit-identically on next use, eviction counters
+surface in ``observability()``, and the mesh's sharded-jit LRU keeps
+``mesh_compile_counts`` monotone across turnover.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.api import EvalConfig, Session
+from repro.cnn.registry import get_cnn
+from repro.core.cache import BoundedLRU, env_bound
+from repro.core.device import DeviceSpec, mib
+from repro.core.workload import make_network
+from repro.fpga.boards import get_board
+
+SPEC = "{L1-Last:CE1-CE2}"
+
+
+def _tiny_net(i: int):
+    """A distinct 3-layer synthetic net per ``i`` (distinct content →
+    distinct NetTables cache key)."""
+    c = 4 + i
+    return make_network(f"tiny{i}", [
+        dict(name="c0", kind="conv", in_ch=3, out_ch=c, kh=3, kw=3,
+             stride=1, ih=16, iw=16),
+        dict(name="c1", kind="conv", in_ch=c, out_ch=c, kh=3, kw=3,
+             stride=2, ih=16, iw=16),
+        dict(name="c2", kind="conv", in_ch=c, out_ch=2 * c, kh=1, kw=1,
+             stride=1, ih=8, iw=8),
+    ])
+
+
+# --------------------------------------------------------------------------
+# BoundedLRU unit behaviour
+# --------------------------------------------------------------------------
+def test_bounded_lru_evicts_least_recent():
+    gone = []
+    lru = BoundedLRU(2, on_evict=lambda k, v: gone.append(k))
+    lru.put("a", 1)
+    lru.put("b", 2)
+    assert lru.get("a") == 1          # refresh: "b" is now the LRU entry
+    lru.put("c", 3)
+    assert gone == ["b"]
+    assert lru.get("b") is None
+    assert lru.get("a") == 1 and lru.get("c") == 3
+    assert lru.stats() == {"size": 2, "maxsize": 2, "evictions": 1}
+
+
+def test_bounded_lru_zero_bound_is_unbounded():
+    lru = BoundedLRU(0)
+    for i in range(500):
+        lru.put(i, i)
+    assert len(lru) == 500 and lru.evictions == 0
+
+
+def test_env_bound_parses_unset_and_disable(monkeypatch):
+    monkeypatch.delenv("REPRO_CACHE_TABLES", raising=False)
+    assert env_bound("REPRO_CACHE_TABLES", 256) == 256
+    monkeypatch.setenv("REPRO_CACHE_TABLES", "7")
+    assert env_bound("REPRO_CACHE_TABLES", 256) == 7
+    monkeypatch.setenv("REPRO_CACHE_TABLES", "0")
+    assert env_bound("REPRO_CACHE_TABLES", 256) == 0
+
+
+def test_config_resolves_table_bound_from_env(monkeypatch):
+    monkeypatch.setenv("REPRO_CACHE_TABLES", "5")
+    assert EvalConfig().resolved().max_cached_tables == 5
+    # an explicit bound wins over the env
+    assert EvalConfig(max_cached_tables=9).resolved() \
+        .max_cached_tables == 9
+
+
+# --------------------------------------------------------------------------
+# session table caches
+# --------------------------------------------------------------------------
+def test_net_table_cache_stays_bounded_under_key_churn():
+    """>2x the bound in distinct nets: live tables never exceed the
+    bound, the overflow shows up as evictions, and observability()
+    reports both."""
+    ses = Session(get_board("zc706"), max_cached_tables=4)
+    for i in range(10):
+        ses.evaluate([SPEC], _tiny_net(i))
+    caches = ses.observability()["caches"]
+    assert caches["net_tables"]["size"] <= 4
+    assert caches["net_tables"]["maxsize"] == 4
+    assert caches["net_tables"]["evictions"] >= 6
+    assert ses.stats.net_table_evictions == \
+        caches["net_tables"]["evictions"]
+    ses.close()
+
+
+def test_evicted_net_table_rebuilds_bit_identically():
+    ses = Session(get_board("zc706"), max_cached_tables=2)
+    net0 = _tiny_net(0)
+    first = ses.evaluate([SPEC], net0)
+    for i in range(1, 5):                    # churn net0 out of the cache
+        ses.evaluate([SPEC], _tiny_net(i))
+    assert ses.stats.net_table_evictions >= 1
+    builds_before = ses.stats.net_table_builds
+    again = ses.evaluate([SPEC], net0)
+    assert ses.stats.net_table_builds == builds_before + 1  # rebuilt
+    for k in first:
+        np.testing.assert_array_equal(np.asarray(first[k]),
+                                      np.asarray(again[k]))
+    ses.close()
+
+
+def test_device_table_cache_bounded_under_board_churn():
+    """More distinct boards than the bound — same guarantee on the
+    device-table memo."""
+    ses = Session(max_cached_tables=2)
+    net = _tiny_net(0)
+    boards = [DeviceSpec(f"b{i}", pes=256 + 64 * i,
+                         on_chip_bytes=mib(1 + i), off_chip_gbps=4.0)
+              for i in range(5)]
+    for b in boards:
+        ses.evaluate([SPEC], net, b)
+    caches = ses.cache_stats()
+    assert caches["device_tables"]["size"] <= 2
+    assert caches["device_tables"]["evictions"] >= 3
+    assert ses.stats.device_table_evictions >= 3
+    ses.close()
+
+
+def test_default_bounds_never_evict_in_normal_use():
+    """The default bounds (256 tables) are far above any test or
+    benchmark working set — a plain session never evicts."""
+    ses = Session(get_board("zc706"))
+    ses.evaluate([SPEC], get_cnn("mobilenetv2"))
+    caches = ses.cache_stats()
+    assert caches["net_tables"]["maxsize"] == 256
+    for c in caches.values():
+        assert c["evictions"] == 0
+    ses.close()
+
+
+# --------------------------------------------------------------------------
+# mesh sharded-jit LRU
+# --------------------------------------------------------------------------
+def test_mesh_jit_lru_bounded_and_counts_monotone():
+    from repro.core.shard import EvalMesh, mesh_compile_counts
+
+    mesh = EvalMesh(ndevices=1, max_jits=2)
+
+    def f(x):
+        return x * 2.0
+
+    def counts_total():
+        return sum(mesh_compile_counts().values())
+
+    before = counts_total()
+    for i in range(4):                       # distinct names → 4 entries
+        fn = mesh.shard_jit(f"cache_probe_{i}", f)
+        fn(np.ones(4, np.float32))
+    assert len(mesh._jits) <= 2
+    assert mesh.jit_evictions >= 2
+    after = counts_total()
+    assert after >= before               # eviction never loses history
+    # re-requesting an evicted key rebuilds; the count only grows
+    mesh.shard_jit("cache_probe_0", f)(np.ones(4, np.float32))
+    assert counts_total() >= after
+
+
+def test_mesh_jit_eviction_disabled_with_zero_bound():
+    from repro.core.shard import EvalMesh
+
+    mesh = EvalMesh(ndevices=1, max_jits=0)
+
+    def g(x):
+        return x + 1.0
+
+    for i in range(6):
+        mesh.shard_jit(f"unbounded_probe_{i}", g)
+    assert mesh.jit_evictions == 0
+    assert len(mesh._jits) >= 6
+
+
+def test_session_reeval_after_jit_churn_no_new_compiles():
+    """The headline reuse property survives the bounded registry at its
+    default size: warm re-evaluation adds zero compile misses."""
+    ses = Session(get_board("zc706"))
+    net = get_cnn("mobilenetv2")
+    ses.evaluate([SPEC], net)
+    before = ses.compile_stats()["total"]
+    ses.evaluate([SPEC], net)
+    assert ses.compile_stats()["total"] == before
+    ses.close()
+
+
+def test_invalid_linger_max_rejected():
+    with pytest.raises(ValueError, match="linger_max_s"):
+        EvalConfig(linger_max_s=-0.1).resolved()
