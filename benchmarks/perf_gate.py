@@ -294,6 +294,42 @@ def run(verbose: bool = True, quick: bool = False,
                   f"{ton / sB * 1e6:.1f}", str(sB),
                   f"{telemetry_overhead * 100:+.1f}%", "-"])
 
+    # ---- schedule search: the temporal-mapping refinement at batch
+    # granularity (docs/schedule.md).  The candidate plane rides the
+    # same ladder shapes as evaluate_batch, so the whole point costs one
+    # compile cold and ZERO warm — and the structural never-worse
+    # invariant (candidate 0 is the coarse mapping) holds on the batch
+    from repro.schedule.search import _schedule_jit, schedule_batch
+
+    sch0 = _schedule_jit._cache_size()
+    t0 = time.time()
+    r = schedule_batch(sdb, ses.tables(net), ses.device_tables(dev))
+    jax.block_until_ready(r["ref_latency_s"])
+    first_s = time.time() - t0
+    sch_cold = _schedule_jit._cache_size() - sch0
+    t0 = time.time()
+    for _ in range(reps):
+        r = schedule_batch(sdb, ses.tables(net), ses.device_tables(dev))
+        jax.block_until_ready(r["ref_latency_s"])
+    schsteady = (time.time() - t0) / reps
+    sch_warm = _schedule_jit._cache_size() - sch0 - sch_cold
+    sch_ok = bool(np.all(np.asarray(r["ref_latency_s"])
+                         <= np.asarray(r["coarse_latency_s"])))
+    points["schedule_search"] = {
+        "B": sB,
+        "us_per_design": schsteady / sB * 1e6,
+        "steady_s": schsteady,
+        "compile_s": max(first_s - schsteady, 0.0),
+        "compile_count_cold": sch_cold,
+        "compile_count_warm": sch_warm,
+        "cost_vs_evaluate": schsteady / ssteady,
+        "refined_leq_coarse": sch_ok,
+    }
+    table.append([f"schedule B={sB}", f"{schsteady / sB * 1e6:.1f}",
+                  f"{schsteady / sB * 1e6:.1f}", str(sB),
+                  f"{max(first_s - schsteady, 0.0):.2f}",
+                  f"x{schsteady / ssteady:.1f} eval"])
+
     # ---- sharded weak-scaling: one subprocess per forced host-device
     # count (the backend pins its device count at init, so every point
     # needs a fresh interpreter; benchmarks.sharded_eval exports
@@ -401,6 +437,11 @@ def run(verbose: bool = True, quick: bool = False,
             # quick CI batches are too noisy at this granularity)
             "telemetry_overhead_lt_3pct": (
                 telemetry_overhead < 0.03 if not quick else True),
+            # the schedule layer's compile policy + never-worse
+            # invariant (docs/schedule.md): warm searches add zero
+            # compiles, refined latency <= coarse on the whole batch
+            "schedule_no_new_compiles_on_warm": sch_warm == 0,
+            "schedule_refined_leq_coarse": sch_ok,
             "sharded_no_recompile_at_reeval": recompiles == 0,
             # scaled throughput: each in-cores device must hold >= 60%
             # of the single-device rate; vacuous on a 1-core host

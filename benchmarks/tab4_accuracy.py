@@ -13,30 +13,48 @@ agreement is >99.9% on latency/throughput/buffers and >99% on accesses
 The *architecture-choice* fidelity check mirrors the paper's "MCCM
 correctly predicted the best architecture in 139/150 (buffers) and 150/150
 (latency/throughput/accesses)".
+
+``--schedule`` adds a second cross-validation axis (docs/schedule.md):
+the per-CE temporal-mapping search replays the same grid with explicit
+loop-order/tiling/buffering choices, and the coarse estimate is scored
+against the schedule-refined one by the same Eq. 10 metric.  Because
+candidate 0 of the mapping plane IS the coarse mapping, refined latency
+is never worse — the gap measures exactly what the coarse model's
+implied-ideal-mapping assumption costs, per board.
 """
 from __future__ import annotations
+
+import argparse
 
 import numpy as np
 
 from repro.cnn.registry import CNN_NAMES, get_cnn
 from repro.fpga.archs import ARCH_NAMES, make_arch
 from repro.fpga.boards import get_board
+from repro.schedule import schedule_specs
 
 from .common import fmt_table, get_session, save
 
 METRICS = ("latency_s", "throughput_ips", "buffer_bytes", "access_bytes")
 
+#: boards the schedule cross-validation sweeps: the paper's VCU108 plus
+#: the tight-BRAM ZC706, where explicit mappings actually win buffer
+SCHEDULE_BOARDS = ("vcu108", "zc706")
 
-def run(verbose: bool = True) -> dict:
+
+def run(verbose: bool = True, schedule: bool = False,
+        quick: bool = False) -> dict:
     dev = get_board("vcu108")
     ses = get_session()
+    cnns = CNN_NAMES[:2] if quick else CNN_NAMES
+    n_range = range(2, 6) if quick else range(2, 12)
     acc: dict[str, list[float]] = {m: [] for m in METRICS}
     best_match = {m: 0 for m in METRICS}
     n_cases = 0
-    for cnn in CNN_NAMES:
+    for cnn in cnns:
         net = get_cnn(cnn)
         specs = [make_arch(a, net, n)
-                 for a in ARCH_NAMES for n in range(2, 12)]
+                 for a in ARCH_NAMES for n in n_range]
         scalar = [ses.evaluate(s, net, dev) for s in specs]
         batch = ses.evaluate(specs, net, dev)
         svals = {
@@ -50,9 +68,10 @@ def run(verbose: bool = True) -> dict:
             acc[metric].extend(
                 (100.0 * (1.0 - np.abs(o - e) / np.maximum(o, 1e-12))).tolist())
         # per (cnn, n): does the vector model pick the same best arch?
-        for n_i, n in enumerate(range(2, 12)):
+        nn = len(n_range)
+        for n_i, n in enumerate(n_range):
             n_cases += 1
-            idx = [a_i * 10 + n_i for a_i in range(len(ARCH_NAMES))]
+            idx = [a_i * nn + n_i for a_i in range(len(ARCH_NAMES))]
             for metric in METRICS:
                 o, e = svals[metric][idx], np.asarray(batch[metric])[idx]
                 pick = np.argmax if metric == "throughput_ips" else np.argmin
@@ -76,9 +95,80 @@ def run(verbose: bool = True) -> dict:
         print("checks:", checks)
     out = {"summary": summary, "checks": checks,
            "n_experiments": len(acc["latency_s"])}
+
+    if schedule:
+        out["schedule"] = _schedule_crossval(ses, cnns, n_range, verbose)
+        checks.update(out["schedule"]["checks"])
     save("tab4_accuracy", out)
     return out
 
 
+def _schedule_crossval(ses, cnns, n_range, verbose: bool) -> dict:
+    """Coarse-vs-schedule-refined cross-validation over the same grid:
+    Eq. 10 accuracy of the coarse latency against the refined one, per
+    board, plus the never-worse invariant as a hard check."""
+    boards = {}
+    any_worse = 0
+    rows = []
+    for bname in SCHEDULE_BOARDS:
+        bdev = get_board(bname)
+        accs, wins, savings = [], 0, []
+        n_designs = 0
+        for cnn in cnns:
+            net = get_cnn(cnn)
+            specs = [make_arch(a, net, n)
+                     for a in ARCH_NAMES for n in n_range]
+            r = schedule_specs(specs, net, ses.device_tables(bdev),
+                               tables=ses.tables(net))
+            coarse = np.asarray(r["coarse_latency_s"], np.float64)
+            refined = np.asarray(r["ref_latency_s"], np.float64)
+            n_designs += coarse.size
+            any_worse += int((refined > coarse).sum())
+            wins += int((refined < coarse).sum())
+            accs.extend((100.0 * (1.0 - np.abs(refined - coarse)
+                                  / np.maximum(refined, 1e-300))).tolist())
+            savings.extend((1.0 - refined
+                            / np.maximum(coarse, 1e-300)).tolist())
+        a = np.array(accs)
+        boards[bname] = {
+            "n_designs": n_designs,
+            "coarse_vs_refined_acc_mean": float(a.mean()),
+            "coarse_vs_refined_acc_min": float(a.min()),
+            "strict_refinements": wins,
+            "max_saving_frac": float(np.max(savings)),
+        }
+        rows.append([bname, f"{a.mean():.2f}%", f"{a.min():.2f}%",
+                     f"{wins}/{n_designs}",
+                     f"{100.0 * float(np.max(savings)):.2f}%"])
+    checks = {
+        # the structural invariant: the mapping search can never make a
+        # design slower than the coarse estimate
+        "schedule_refined_leq_coarse": any_worse == 0,
+        # the cross-validation verdict: the coarse model stays >90%
+        # accurate against its own finer-grained mapping costs — the
+        # implied-ideal-mapping assumption is cheap on every board
+        "schedule_crossval_mean_above_90": all(
+            b["coarse_vs_refined_acc_mean"] > 90.0
+            for b in boards.values()),
+    }
+    if verbose:
+        print(fmt_table(rows, ["board", "coarse-vs-refined acc", "min",
+                               "refined designs", "max saving"]))
+        print("schedule checks:", checks)
+    return {"boards": boards, "checks": checks}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--schedule", action="store_true",
+                    help="add the coarse-vs-schedule-refined "
+                         "cross-validation (docs/schedule.md)")
+    ap.add_argument("--quick", action="store_true",
+                    help="2 CNNs x 4 CE counts (CI smoke)")
+    args = ap.parse_args(argv)
+    out = run(schedule=args.schedule, quick=args.quick)
+    return 0 if all(out["checks"].values()) else 1
+
+
 if __name__ == "__main__":
-    run()
+    raise SystemExit(main())

@@ -21,8 +21,10 @@ from .core.resilience import (EvalError, load_checkpoint,  # noqa: F401
                               save_checkpoint)
 from .core.session import (EvalConfig, Session, SessionStats,
                            default_session)
+from .schedule import ScheduleArtifact  # noqa: F401
 from .telemetry import bottleneck_report, format_report  # noqa: F401
 
-__all__ = ["EvalConfig", "EvalError", "Session", "SessionStats",
-           "bottleneck_report", "default_session", "format_report",
-           "load_checkpoint", "save_checkpoint", "telemetry"]
+__all__ = ["EvalConfig", "EvalError", "ScheduleArtifact", "Session",
+           "SessionStats", "bottleneck_report", "default_session",
+           "format_report", "load_checkpoint", "save_checkpoint",
+           "telemetry"]

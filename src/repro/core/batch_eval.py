@@ -370,10 +370,57 @@ def _pair_layer_tables(t: NetTables, pairs):
     return fc_pair, coh_pair
 
 
-def _evaluate_core(design: DesignBatch, t: NetTables, dev: DeviceTables,
-                   m: _CEMaps, par, fm_tile_rows: int
-                   ) -> dict[str, jnp.ndarray]:
-    """Eqs. 2–9 given the CE maps and the per-CE ⟨pf, ph, pw⟩ winners."""
+class LayerState(NamedTuple):
+    """Per-layer cost state between Eq. 1 and the Eq. 2–9 composition.
+
+    ``layer_state`` computes it; ``compose_metrics`` reduces it to the
+    metric dict.  The split exists for the schedule layer
+    (``repro.schedule``): temporal-mapping search re-scores the
+    per-layer fields (latency/busy/traffic) for its chosen mappings and
+    re-runs the SAME composition, so coarse and schedule-refined costs
+    stay in one currency — when every layer keeps the ideal mapping the
+    result is bit-identical to ``_evaluate_core``.
+
+    Per-layer arrays are (B, L); per-segment arrays are (B, NS).
+    """
+
+    # Eq. 1 compute + utilization
+    comp: jnp.ndarray           # compute cycles
+    util: jnp.ndarray
+    # single-CE (Eq. 6) costs
+    lat_single: jnp.ndarray     # max(comp, mem) — pre single_l masking
+    acc_single: jnp.ndarray     # off-chip bytes
+    wacc_single: jnp.ndarray
+    facc_single: jnp.ndarray
+    mem_cyc_single: jnp.ndarray
+    # pipelined (Eq. 7) costs
+    busy_pipe: jnp.ndarray      # max(comp, mem) per layer slot
+    w_acc_pipe: jnp.ndarray
+    mem_cyc_pipe: jnp.ndarray
+    n_tiles_l: jnp.ndarray
+    # mapping inputs the schedule search scores candidates against
+    buf_l: jnp.ndarray          # single: the segment's buffer alloc
+    ce_buf_l: jnp.ndarray       # pipelined: the layer's CE buffer slice
+    wtile: jnp.ndarray          # streaming weight-tile bytes (pf rows)
+    fm_tile2: jnp.ndarray       # double-buffered fm tile bytes
+    ofm_res: jnp.ndarray        # OFM bytes held resident (Eq. 6)
+    ofm_acc: jnp.ndarray        # OFM bytes streamed off-chip
+    ideal: jnp.ndarray          # bool: whole working set fits
+    ifm_onchip: jnp.ndarray     # bool: IFM left on chip by producer
+    use_a: jnp.ndarray          # bool: Eq. 6 picked option A (IS) over B
+    resident_l: jnp.ndarray     # bool: Eq. 5 whole-segment weight regime
+    # per-segment allocations / boundaries
+    alloc: jnp.ndarray
+    desires: jnp.ndarray
+    inter_onchip: jnp.ndarray   # bool
+    bound_valid: jnp.ndarray    # bool
+    is_pipe_seg: jnp.ndarray    # bool
+
+
+def layer_state(design: DesignBatch, t: NetTables, dev: DeviceTables,
+                m: _CEMaps, par, fm_tile_rows: int) -> LayerState:
+    """Eqs. 1 + 4–7 given the CE maps and the ⟨pf, ph, pw⟩ winners:
+    buffer allocation, per-layer compute/memory costs, residency regimes."""
     B, max_L = design.batch, t.max_L
     wb = dev.wordbytes
     bpc = dev.bpc
@@ -555,13 +602,58 @@ def _evaluate_core(design: DesignBatch, t: NetTables, dev: DeviceTables,
                             jnp.where(ifm_onchip, ofm_acc, facc_opt))
     mem_cyc_single = acc_single / bpc
 
+    return LayerState(
+        comp=comp, util=util,
+        lat_single=jnp.maximum(comp, mem_cyc_single),
+        acc_single=acc_single, wacc_single=wacc_single,
+        facc_single=facc_single, mem_cyc_single=mem_cyc_single,
+        busy_pipe=jnp.maximum(comp, mem_cyc_pipe),
+        w_acc_pipe=w_acc_pipe, mem_cyc_pipe=mem_cyc_pipe,
+        n_tiles_l=n_tiles_l,
+        buf_l=buf, ce_buf_l=ce_buf_of_layer, wtile=wtile,
+        fm_tile2=fm_tile2, ofm_res=ofm_res, ofm_acc=ofm_acc,
+        ideal=ideal, ifm_onchip=ifm_onchip, use_a=use_a,
+        resident_l=resident_l,
+        alloc=alloc, desires=desires, inter_onchip=inter_onchip,
+        bound_valid=bound_valid, is_pipe_seg=is_pipe_seg)
+
+
+def compose_metrics(design: DesignBatch, t: NetTables, dev: DeviceTables,
+                    m: _CEMaps, st: LayerState) -> dict[str, jnp.ndarray]:
+    """Eqs. 2–3 + 8–9: per-layer costs -> design metrics.
+
+    Monotone nondecreasing in every per-layer latency/busy/traffic field
+    of ``st`` — the property the schedule layer's refined-≤-coarse
+    guarantee rests on."""
+    B, max_L = design.batch, t.max_L
+    wb = dev.wordbytes
+    (seg_start, seg_len, seg_valid, n_seg, seg_of_layer, onehot, valid_b,
+     idx_in_seg, nce_of_layer, pipe_bool, slot_of_layer, _round,
+     ce_base, _ce_of_layer, ce_oh, _pes, ce_valid) = m
+    valid_f = valid_b.astype(jnp.float32)
+    seg_end = design.seg_end
+    pipe_l = pipe_bool.astype(jnp.float32)
+    single_l = (1.0 - pipe_l) * valid_f
+    is_round_start = slot_of_layer == 0
+    is_round_last = (slot_of_layer == nce_of_layer - 1) | \
+        (idx_in_seg == jnp.take_along_axis(seg_len, seg_of_layer, axis=1) - 1)
+    last_of_seg = jnp.clip(seg_end - 1, 0, t.L - 1)      # (B, NS)
+    OFM = jnp.asarray(t.OFM)
+    IFM = jnp.asarray(t.IFM)
+    macs = jnp.asarray(t.MACS)
+    n_tiles_l = st.n_tiles_l
+    inter_onchip = st.inter_onchip
+    bound_valid = st.bound_valid
+    is_pipe_seg = st.is_pipe_seg
+    alloc, desires = st.alloc, st.desires
+
     # ---- latency / busy ---------------------------------------------------
-    lat_l_single = jnp.maximum(comp, mem_cyc_single) * single_l
+    lat_l_single = st.lat_single * single_l
     seg_lat_single = _seg_sum(lat_l_single, onehot)      # (B, NS)
 
     # pipelined: tile lat per layer; exact stage-sum per round via the
     # prefix/suffix-max identity (segmented max-scans, log2(L) steps).
-    tile_lat = jnp.maximum(comp, mem_cyc_pipe) / n_tiles_l   # (B, L)
+    tile_lat = st.busy_pipe / n_tiles_l                  # (B, L)
     pmax_seq = seg_scan_max(tile_lat, is_round_start)
     smax_seq = seg_scan_max(tile_lat, is_round_last, reverse=True)
     pipe_f = pipe_bool
@@ -578,7 +670,7 @@ def _evaluate_core(design: DesignBatch, t: NetTables, dev: DeviceTables,
                       + ((T_round - slots_round - 1.0) * gmax_l).sum(-1))
 
     # per-CE busy (Eq. 3 / throughput)
-    busy_l = jnp.maximum(comp, mem_cyc_pipe)             # pipelined layers
+    busy_l = st.busy_pipe                                # pipelined layers
     busy_slot = jnp.einsum("bl,blc->bc", busy_l * pipe_l, ce_oh)  # (B, NC)
     # pipelined block busy = max over its slots; map back per segment:
     seg_of_ce = jnp.sum(
@@ -603,9 +695,9 @@ def _evaluate_core(design: DesignBatch, t: NetTables, dev: DeviceTables,
     ce_busy = add_single + add_pipe
 
     # ---- interfaces: mandatory IO + Eq. 9 ---------------------------------
-    access = (acc_single * single_l + w_acc_pipe * pipe_l).sum(-1)
-    w_access = (wacc_single * single_l + w_acc_pipe * pipe_l).sum(-1)
-    fm_access = (facc_single * single_l).sum(-1)
+    access = (st.acc_single * single_l + st.w_acc_pipe * pipe_l).sum(-1)
+    w_access = (st.wacc_single * single_l + st.w_acc_pipe * pipe_l).sum(-1)
+    fm_access = (st.facc_single * single_l).sum(-1)
     mandatory = (IFM[0] + jnp.take(OFM, t.L - 1)) * wb
     access = access + mandatory
     fm_access = fm_access + mandatory
@@ -632,7 +724,7 @@ def _evaluate_core(design: DesignBatch, t: NetTables, dev: DeviceTables,
     buffer_req = desires.sum(-1) + jnp.where(
         design.inter_pipe, (2 * bound_sz).sum(-1), 0.0)
 
-    util_avg = (util * macs[None]).sum(-1) / jnp.maximum(macs.sum(), 1.0)
+    util_avg = (st.util * macs[None]).sum(-1) / jnp.maximum(macs.sum(), 1.0)
 
     return {
         "latency_s": latency_s,
@@ -645,6 +737,13 @@ def _evaluate_core(design: DesignBatch, t: NetTables, dev: DeviceTables,
         "utilization": util_avg,
         "n_ces": ce_valid.sum(-1),
     }
+
+
+def _evaluate_core(design: DesignBatch, t: NetTables, dev: DeviceTables,
+                   m: _CEMaps, par, fm_tile_rows: int) -> dict:
+    """Full MCCM evaluation: per-layer state then Eq. 2–9 composition."""
+    return compose_metrics(design, t, dev, m,
+                           layer_state(design, t, dev, m, par, fm_tile_rows))
 
 
 def _pad_rows(design: DesignBatch, n: int) -> DesignBatch:

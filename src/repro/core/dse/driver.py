@@ -32,6 +32,9 @@ class DSEResult:
     n_evals: int = 0
     objectives: tuple[str, ...] = DEFAULT_OBJECTIVES
     front: np.ndarray = field(default_factory=lambda: np.empty(0, np.intp))
+    #: schedule-refined front metrics, front-aligned arrays — populated
+    #: only by ``Session.explore(refine="schedule")`` (docs/schedule.md)
+    refined: dict | None = None
 
     def front_points(self) -> np.ndarray:
         """Oriented (lower-better) objective points of the front rows."""

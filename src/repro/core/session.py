@@ -182,6 +182,10 @@ class SessionStats:
     batch_designs: int = 0
     explore_calls: int = 0
     deploy_calls: int = 0
+    # schedule layer (docs/schedule.md)
+    schedule_calls: int = 0
+    schedule_builds: int = 0   # schedule searches actually run on device
+    schedule_hits: int = 0     # artifacts served from the bounded memo
     submits: int = 0
     megabatches: int = 0
     megabatch_requests: int = 0
@@ -195,6 +199,7 @@ class SessionStats:
     net_table_evictions: int = 0
     device_table_evictions: int = 0
     multi_table_evictions: int = 0
+    schedule_evictions: int = 0
     # resilience counters (docs/robustness.md)
     rejected: int = 0          # submits refused by admission control
     retried: int = 0           # primary-backend retry attempts
@@ -309,6 +314,12 @@ class Session:
         self._multi_tables = BoundedLRU(
             bound, on_evict=lambda *_:
             self.stats.bump("multi_table_evictions"))
+        # schedule artifacts per (net, board, design-hash): small decoded
+        # dataclasses, but keys churn with every distinct design — same
+        # bound, same eviction-counter contract (docs/schedule.md)
+        self._schedule_memo = BoundedLRU(
+            bound, on_evict=lambda *_:
+            self.stats.bump("schedule_evictions"))
         self._cv = threading.Condition()
         self._pending: list[_Request] = []
         self._worker: threading.Thread | None = None
@@ -601,21 +612,77 @@ class Session:
                 dev: DeviceSpec | None = None, *, strategy: str = "random",
                 family: str = "custom", seed: int = 0, chunk: int = 4096,
                 objectives: tuple[str, ...] = DEFAULT_OBJECTIVES,
-                config=None):
+                config=None, refine: str | None = None):
         """Single-model DSE (random sweep or guided search) through the
         session's cached tables — bit-identical to the deprecated
-        ``explore`` free function at equal arguments."""
+        ``explore`` free function at equal arguments.
+
+        ``refine="schedule"`` re-scores the final Pareto front with the
+        per-CE temporal-mapping search (``docs/schedule.md``): the sweep
+        itself still runs on the coarse model (the refinement can only
+        lower latency, never invalidate a front member), and the result
+        gains a ``refined`` dict with schedule-refined latency/access
+        arrays aligned with ``front``.
+        """
         from .dse.driver import _explore
 
+        if refine not in (None, "schedule"):
+            raise EvalError(EvalError.INVALID_INPUT,
+                            f"unknown refine mode {refine!r} "
+                            "(expected None or 'schedule')")
         self.stats.bump("explore_calls")
         with telemetry.span("session.explore") as sp:
             sp.set_attr("n", n)
             sp.set_attr("strategy", strategy)
-            return _explore(net, self._device(dev), n, family=family,
-                            seed=seed, chunk=chunk, strategy=strategy,
-                            objectives=objectives, config=config,
-                            tables=self.tables(net),
-                            backend=self._search_backend(), mesh=self.mesh)
+            res = _explore(net, self._device(dev), n, family=family,
+                           seed=seed, chunk=chunk, strategy=strategy,
+                           objectives=objectives, config=config,
+                           tables=self.tables(net),
+                           backend=self._search_backend(), mesh=self.mesh)
+            if refine == "schedule" and res.front.size:
+                res.refined = self._refine_front(res, net, dev, sp)
+            return res
+
+    def _refine_front(self, res, net: Network, dev, sp) -> dict:
+        """Schedule-refine a DSE result's Pareto front: one batched
+        schedule search over the front designs (padded to the ladder
+        bucket — no compile forks), returning front-aligned arrays."""
+        from ..schedule.search import schedule_batch
+        from .batch_eval import _bucket, _pad_rows
+
+        dev = self._device(dev)
+        cfg = self.config
+        front = res.batch.take(np.asarray(res.front))
+        nf = int(res.front.size)
+        padded = _pad_rows(front, _bucket(nf, cfg.tile))
+        with telemetry.span("session.schedule_front") as fsp:
+            fsp.set_attr("designs", nf)
+            out = self._resilient_call(lambda b: schedule_batch(
+                padded, self.tables(net), self.device_tables(dev),
+                fm_tile_rows=cfg.fm_tile_rows, backend=b, tile=cfg.tile,
+                design_tile=cfg.design_tile))
+        lat = np.asarray(out["ref_latency_s"])[:nf]
+        coarse = np.asarray(out["coarse_latency_s"])[:nf]
+        telemetry.count("schedule.candidates",
+                        int(np.asarray(out["valid_l"])[:nf].sum())
+                        * self._ncand())
+        sp.set_attr("refined_front", nf)
+        return {
+            "latency_s": lat,
+            "coarse_latency_s": coarse,
+            "throughput_ips": np.asarray(out["ref_throughput_ips"])[:nf],
+            "access_bytes": np.asarray(out["ref_access_bytes"])[:nf],
+            "coarse_access_bytes":
+                np.asarray(out["coarse_access_bytes"])[:nf],
+            "saving_frac": np.where(coarse > 0.0,
+                                    1.0 - lat / np.maximum(coarse, 1e-30),
+                                    0.0),
+        }
+
+    @staticmethod
+    def _ncand() -> int:
+        from ..kernels.schedule_score import NCAND
+        return NCAND
 
     def deploy(self, nets, n: int = 4096, dev: DeviceSpec | None = None, *,
                strategy: str = "search", seed: int = 0, chunk: int = 512,
@@ -650,7 +717,8 @@ class Session:
 
     # ---- bottleneck attribution (paper use case 2) -----------------------
     def explain(self, design, net: Network, dev: DeviceSpec | None = None,
-                *, inter_segment_pipelining: bool = True) -> dict:
+                *, inter_segment_pipelining: bool = True,
+                refine: str | None = None) -> dict:
         """Rank where a single design's time and off-chip traffic go.
 
         Evaluates ``design`` through the exact scalar path (full
@@ -661,6 +729,12 @@ class Session:
         Fig. 7's weights-vs-FMs access split — bit-identical to
         ``benchmarks/fig6_fig7_breakdown.py``'s formulas
         (``docs/observability.md`` walks through the output).
+
+        ``refine="schedule"`` additionally runs the per-CE temporal-
+        mapping search (:meth:`schedule`) and attaches its refined
+        per-segment costs as a ``"schedule"`` section — coarse vs
+        refined cycles per segment and the headline latency saving
+        (``docs/schedule.md``).
         """
         from ..telemetry.report import bottleneck_report
 
@@ -669,10 +743,87 @@ class Session:
                 EvalError.INVALID_INPUT,
                 "explain() takes one design (notation string or "
                 "AcceleratorSpec); use evaluate() for batches")
+        if refine not in (None, "schedule"):
+            raise EvalError(EvalError.INVALID_INPUT,
+                            f"unknown refine mode {refine!r} "
+                            "(expected None or 'schedule')")
         with telemetry.span("session.explain") as sp:
             m = self._evaluate(design, net, dev,
                                inter_segment_pipelining, sp)
-            return bottleneck_report(m)
+            art = None
+            if refine == "schedule":
+                art = self.schedule(
+                    design, net, dev,
+                    inter_segment_pipelining=inter_segment_pipelining)
+            return bottleneck_report(m, schedule=art)
+
+    def schedule(self, design, net: Network, dev: DeviceSpec | None = None,
+                 *, inter_segment_pipelining: bool = True):
+        """Per-CE temporal-mapping search under one design: refine the
+        coarse MCCM estimate by choosing each layer's loop order, tile
+        size and buffering from an explicit candidate plane, scored in
+        the same cost terms (``docs/schedule.md``).
+
+        Returns the JSON-serializable
+        :class:`~repro.schedule.ScheduleArtifact` — refined vs coarse
+        latency/traffic/energy, per-layer chosen mappings, per-CE buffer
+        plans and per-segment costs.  Refined latency never exceeds the
+        coarse estimate (candidate 0 IS the coarse mapping).  Artifacts
+        memoize per (net, board, design) in a bounded LRU; the device
+        search rides the same bucket-ladder shapes as ``evaluate``, so
+        warm calls add zero compiles.
+        """
+        from ..schedule import build_artifact
+        from ..schedule.search import schedule_specs
+        from .dse.encoding import encode_specs
+        from .notation import format_spec
+
+        if not isinstance(design, (str, AcceleratorSpec)):
+            raise EvalError(
+                EvalError.INVALID_INPUT,
+                "schedule() takes one design (notation string or "
+                "AcceleratorSpec)")
+        dev = self._device(dev)
+        self.stats.bump("schedule_calls")
+        try:
+            spec = self._parse(design, net, inter_segment_pipelining)
+            spec.validate(len(net))
+            enc = encode_specs([spec], len(net))
+        except Exception as e:  # noqa: BLE001
+            raise wrap(e, EvalError.INVALID_INPUT) from e
+        key = (self._net_key(net), dev) + tuple(
+            np.asarray(a).tobytes() for a in enc.to_numpy())
+        with self._table_lock:
+            hit = self._schedule_memo.get(key)
+        if hit is not None:
+            self.stats.bump("schedule_hits")
+            return hit
+        cfg = self.config
+        with telemetry.span("session.schedule") as sp:
+            sp.set_attr("net", net.name)
+            sp.set_attr("board", dev.name)
+            out = self._resilient_call(lambda b: schedule_specs(
+                [spec], net, self.device_tables(dev),
+                tables=self.tables(net), backend=b, tile=cfg.tile,
+                fm_tile_rows=cfg.fm_tile_rows,
+                design_tile=cfg.design_tile))
+            if not np.isfinite([float(out["ref_latency_s"][0]),
+                                float(out["coarse_latency_s"][0])]).all():
+                raise EvalError(EvalError.NONFINITE_METRICS,
+                                "schedule search produced non-finite "
+                                "latency")
+            art = build_artifact(
+                out, 0, net=net, board_name=dev.name,
+                design_repr=format_spec(spec, len(net)),
+                wordbytes=dev.wordbytes)
+            sp.set_attr("candidates", art.n_candidates)
+            sp.set_attr("n_refined", art.meta.get("n_refined", 0))
+        telemetry.count("schedule.candidates", art.n_candidates)
+        telemetry.count("schedule.searches")
+        with self._table_lock:
+            self._schedule_memo.put(key, art)
+        self.stats.bump("schedule_builds")
+        return art
 
     # ---- queued requests (the serve-many-users path) ---------------------
     def submit(self, designs, net: Network,
@@ -1134,6 +1285,12 @@ class Session:
             counts["joint_hybrid"] = je._joint_hybrid_jit._cache_size()
         except ImportError:  # pragma: no cover — multinet always ships
             pass
+        try:
+            from ..schedule import search as sched
+            counts["schedule_batch"] = sched._schedule_jit._cache_size()
+            counts["schedule_plane"] = sched._plane_jit._cache_size()
+        except ImportError:  # pragma: no cover — schedule always ships
+            pass
         from .shard import mesh_compile_counts
         for name, n in mesh_compile_counts().items():
             counts[f"mesh_{name}"] = n
@@ -1157,6 +1314,7 @@ class Session:
                 "net_tables": self._net_tables.stats(),
                 "device_tables": self._dev_tables.stats(),
                 "multi_tables": self._multi_tables.stats(),
+                "schedule_artifacts": self._schedule_memo.stats(),
             }
         out["mesh_jits"] = {"size": len(self.mesh._jits),
                             "maxsize": self.mesh.max_jits,

@@ -1,0 +1,19 @@
+"""Per-layer temporal-mapping candidate scoring (the schedule layer's
+kernel): one (B, L, NCAND) plane of MCCM-cost-scored mapping candidates,
+argmin-reduced on device.
+
+``ref.py`` holds the namespace-generic scorer (pass ``jnp`` or ``numpy``
+— same op sequence, so device results are bit-comparable against the
+host reference); ``ops.py`` holds the backend dispatch + candidate
+metadata used to decode an argmin index back into a mapping.
+"""
+from .ops import (BACKEND_ENV, BACKENDS, resolve_backend, set_fault_hook,
+                  candidate_meta, decode_candidate)
+from .ref import (NCAND, ORDER_NAMES, FRACS, CAND_ORDER, CAND_FRAC,
+                  CAND_DB, BIG, score_plane)
+
+__all__ = [
+    "BACKEND_ENV", "BACKENDS", "resolve_backend", "set_fault_hook",
+    "candidate_meta", "decode_candidate", "NCAND", "ORDER_NAMES",
+    "FRACS", "CAND_ORDER", "CAND_FRAC", "CAND_DB", "BIG", "score_plane",
+]

@@ -1,0 +1,68 @@
+"""Backend dispatch + candidate metadata for the schedule scorer.
+
+The scorer itself (``ref.score_plane``) is namespace-generic; this
+module picks the namespace.  ``device`` traces it under jit on the
+bucket-ladder shapes (the production path); ``ref`` runs the identical
+statement sequence in numpy on the host — the bit-parity oracle the
+tests compare against, and a debugging escape hatch
+(``REPRO_SCHEDULE_BACKEND=ref``) that keeps ``Session.schedule``
+working with jax compilation out of the loop.
+"""
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from .ref import CAND_META, ORDER_NAMES, score_plane
+
+#: env var selecting the schedule-scoring namespace: "device" (jnp under
+#: jit — default), "ref" (numpy on host), or "auto" (device)
+BACKEND_ENV = "REPRO_SCHEDULE_BACKEND"
+BACKENDS = ("device", "ref")
+
+
+def resolve_backend(backend: str | None = None) -> str:
+    backend = backend or os.environ.get(BACKEND_ENV, "auto")
+    if backend == "auto":
+        return "device"
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown schedule backend {backend!r}; known: "
+                         f"{BACKENDS + ('auto',)}")
+    return backend
+
+
+#: test-only fault-injection hook (see tests/faults.py): when set, called
+#: as ``hook("schedule_score", backend)`` at every dispatch — at trace
+#: time for the device backend, so a raising hook aborts the compile
+#: (mirrors kernels.mccm_eval; failed compiles are never cached)
+_FAULT_HOOK = None
+
+
+def set_fault_hook(hook):
+    """Install (or, with ``None``, uninstall) the fault-injection hook;
+    returns the previous hook so tests can restore it."""
+    global _FAULT_HOOK
+    prev, _FAULT_HOOK = _FAULT_HOOK, hook
+    return prev
+
+
+def score_plane_dispatch(backend: str, **inputs):
+    """Score the candidate plane with the selected namespace."""
+    if _FAULT_HOOK is not None:
+        _FAULT_HOOK("schedule_score", backend)
+    xp = jnp if backend == "device" else np
+    return score_plane(xp, **inputs)
+
+
+def candidate_meta(index: int) -> tuple[str, float, bool]:
+    """(order_name, tile_frac, double_buffer) for a candidate index."""
+    order_id, frac, db = CAND_META[int(index)]
+    return ORDER_NAMES[order_id], float(frac), bool(db)
+
+
+def decode_candidate(index: int) -> dict:
+    """Argmin index -> JSON-ready mapping description."""
+    order, frac, db = candidate_meta(index)
+    return {"order": order, "tile_frac": frac, "double_buffer": db}

@@ -1,0 +1,221 @@
+"""Namespace-generic temporal-mapping candidate scorer.
+
+``score_plane(xp, ...)`` is written against the array-API subset shared
+by ``jax.numpy`` and ``numpy`` (elementwise mul/div/ceil/floor/clip/
+minimum/maximum/where only, float32 throughout), so the SAME statement
+sequence produces the device plane (``xp=jnp``, traced under the bucket
+ladder) and the pure-host reference plane (``xp=numpy``).  Bit-parity
+between the two is a tested contract (tests/test_schedule.py) — there is
+no second implementation to drift.
+
+Candidate space (NCAND = 1 + 3 orders x 3 tile fractions x 2 buffering
+choices = 19):
+
+- candidate 0, ``ideal``: the mapping the coarse MCCM model assumes
+  (full buffer use, perfect load/compute overlap, the Eq. 5/6 residency
+  chain).  Its cost is the coarse per-layer cost VERBATIM, so the argmin
+  can never exceed the coarse estimate, and argmin's first-index
+  tie-break keeps the refined result bit-identical to coarse whenever no
+  explicit mapping beats it.
+- ``input_stationary`` (loop order N-C-H-W-K-R-S): feature map tiles
+  pinned on chip, weights streamed — Eq. 6 option A; at frac=1.0,
+  db=True it reproduces option A exactly.
+- ``weight_stationary`` (N-K-C-H-W-R-S): weights pinned, feature maps
+  streamed — Eq. 6 option B (exact at frac=1.0, db=True).  On pipelined
+  layers this is the all-or-nothing residency order: either the whole
+  layer's weights fit beside the fm tiles or everything streams.
+- ``row_streaming`` (N-H-W-K-C-R-S): outputs produced row by row.  On
+  single-CE layers it needs the whole weight tensor resident beside one
+  input row band.  On pipelined layers it is the PARTIAL-residency
+  order: a fraction phi of the weights stays on chip across tile rounds
+  and only the remainder re-streams — the genuine refinement over the
+  coarse model's binary keep-all/stream-all choice (Eq. 7).
+
+``frac`` scales how much of the free buffer the streamed-operand tile
+(single) or the resident-weight slice (pipelined) may claim; ``db``
+False trades load/compute overlap (latency becomes comp + mem instead
+of max(comp, mem)) for a single-buffered fm tile, halving the fm floor
+and freeing buffer for weight residency on pipelined layers.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+#: large-but-finite infeasibility sentinel (inf would turn masked
+#: products into NaN)
+BIG = 1.0e30
+
+ORDER_NAMES = ("ideal", "input_stationary", "weight_stationary",
+               "row_streaming")
+FRACS = (1.0, 0.5, 0.25)
+
+
+def _build_meta():
+    rows = [(0, 1.0, True)]          # candidate 0: the coarse/ideal mapping
+    for order in (1, 2, 3):
+        for frac in FRACS:
+            for db in (True, False):
+                rows.append((order, frac, db))
+    return tuple(rows)
+
+
+#: (order_id, tile_frac, double_buffer) per candidate, row-major
+CAND_META = _build_meta()
+NCAND = len(CAND_META)
+
+CAND_ORDER = np.array([r[0] for r in CAND_META], np.float32)
+CAND_FRAC = np.array([r[1] for r in CAND_META], np.float32)
+CAND_DB = np.array([1.0 if r[2] else 0.0 for r in CAND_META], np.float32)
+
+
+def score_plane(xp, *, comp, wl, ifml, ofml, wtile, fm_tile2, ifm_tile,
+                buf, ce_buf, n_tiles, ofm_res, ofm_acc,
+                lat_coarse, acc_coarse, wacc_coarse, facc_coarse,
+                busy_coarse, wacc_pipe_coarse,
+                ideal, ifm_onchip, resident, pipe, valid, bpc):
+    """Score every mapping candidate for every layer: (B, L) inputs ->
+    dict of (B, L, NCAND) float32 planes.
+
+    All size inputs are bytes, ``comp`` is cycles, ``bpc`` bytes/cycle.
+    ``ideal``/``ifm_onchip``/``resident``/``pipe``/``valid`` are bool
+    masks.  Returns per-candidate refined per-layer cost fields (the
+    LayerState substitutions), the argmin key ``score``, and the chosen
+    working-set accounting (``tile_bytes``/``companion_bytes``/
+    ``floor_bytes``/``budget_bytes``/``phi``) that the budget property
+    tests assert against.
+    """
+    f32 = xp.float32
+    order = xp.asarray(CAND_ORDER, f32)           # (NCAND,)
+    frac = xp.asarray(CAND_FRAC, f32)
+    db = xp.asarray(CAND_DB, f32)
+    is_c0 = order == 0.0
+    is_is = order == 1.0
+    is_ws = order == 2.0
+    is_row = order == 3.0
+
+    def e(a):                                     # (B, L) -> (B, L, 1)
+        return xp.asarray(a, f32)[..., None]
+
+    def eb(a):                                    # bool mask -> (B, L, 1)
+        return xp.asarray(a, bool)[..., None]
+
+    zero = xp.asarray(0.0, f32)
+    one = xp.asarray(1.0, f32)
+    bpc = xp.asarray(bpc, f32)
+
+    # ---- single-CE (Eq. 6 world) ------------------------------------------
+    # OFM policy is inherited from the coarse state (ofm_res/ofm_acc);
+    # candidates choose which streamed operand gets how much of the rest.
+    avail_is = e(buf) - e(ofm_res) - e(wtile)
+    ifm_buf = xp.maximum(avail_is * frac, e(ifm_tile))
+    loads_a = xp.where(
+        ifm_buf < e(ifml),
+        e(wl) * xp.ceil(e(ifml) / xp.maximum(ifm_buf, one)) + e(ifml),
+        e(wl) + e(ifml))
+    wacc_a = loads_a - e(ifml)
+
+    avail_ws = e(buf) - e(ofm_res) - e(ifm_tile)
+    w_buf = xp.maximum(avail_ws * frac, e(wtile))
+    loads_b = xp.where(
+        w_buf < e(wl),
+        e(ifml) * xp.ceil(e(wl) / xp.maximum(w_buf, one)) + e(wl),
+        e(ifml) + e(wl))
+    facc_b = loads_b - e(wl)
+
+    # row streaming: whole weight tensor resident beside one row band
+    row_fit = e(wl) + e(ifm_tile) + e(ofm_res) <= e(buf)
+    loads_r = xp.where(row_fit, e(wl) + e(ifml), xp.asarray(BIG, f32))
+
+    sel_acc = xp.where(is_is, loads_a, xp.where(is_ws, loads_b, loads_r))
+    sel_wacc = xp.where(is_is, wacc_a,
+                        xp.where(is_ws, e(wl) + zero * frac,
+                                 xp.where(row_fit, e(wl) + zero * frac,
+                                          xp.asarray(BIG, f32))))
+    sel_facc = xp.where(is_is, e(ifml) + zero * frac,
+                        xp.where(is_ws, facc_b,
+                                 xp.where(row_fit, e(ifml) + zero * frac,
+                                          xp.asarray(BIG, f32))))
+    acc_c = e(ofm_acc) + sel_acc
+    facc_c = e(ofm_acc) + sel_facc
+    wacc_c = sel_wacc
+
+    # residency-chain regimes (whole working set fits, or the producer
+    # left the ifm on chip): every operand already moves at most once —
+    # no mapping can improve, so all candidates collapse to the coarse
+    # cost and the first-index tie-break keeps candidate 0.
+    chain = eb(ideal) | eb(ifm_onchip)
+    acc_c = xp.where(chain, e(acc_coarse), acc_c)
+    wacc_c = xp.where(chain, e(wacc_coarse), wacc_c)
+    facc_c = xp.where(chain, e(facc_coarse), facc_c)
+    mem_c = acc_c / bpc
+    lat_c = xp.where(db > 0, xp.maximum(e(comp), mem_c), e(comp) + mem_c)
+
+    lat_c = xp.where(is_c0, e(lat_coarse), lat_c)
+    acc_c = xp.where(is_c0, e(acc_coarse), acc_c)
+    wacc_c = xp.where(is_c0, e(wacc_coarse), wacc_c)
+    facc_c = xp.where(is_c0, e(facc_coarse), facc_c)
+
+    # ---- pipelined (Eq. 7 world) ------------------------------------------
+    fm_floor = xp.where(db > 0, e(fm_tile2), e(fm_tile2) * 0.5)
+    w_budget = xp.maximum(e(ce_buf) - fm_floor - e(wtile), zero) * frac
+    phi_max = xp.clip(w_budget / xp.maximum(e(wl), one), 0.0, 1.0)
+    # order semantics: IS streams everything, WS is all-or-nothing
+    # (floor(phi_max) is 1 only on a full fit), ROW keeps a partial slice.
+    # phi is quantized DOWN to 1/256 steps: residency is allocated in
+    # BRAM-granule slices, and on the grid every op of the blend below is
+    # exact in f32 — so compiler reassociation/FMA contraction cannot
+    # split the device plane from the host reference plane.
+    phi = xp.where(is_is, zero * phi_max,
+                   xp.where(is_ws, xp.floor(phi_max), phi_max))
+    phi = xp.floor(phi * 256.0) / 256.0
+    # streamed rounds per weight byte: phi once + (1-phi) every round —
+    # exact (integer/256 arithmetic below 2^24), then ONE rounding at *wl
+    blend = (one - phi) * e(n_tiles) + phi
+    wacc_p = e(wl) * blend
+    wacc_p = xp.where(eb(resident), zero * wacc_p, wacc_p)
+    mem_p = wacc_p / bpc
+    busy_c = xp.where(db > 0, xp.maximum(e(comp), mem_p), e(comp) + mem_p)
+
+    busy_c = xp.where(is_c0, e(busy_coarse), busy_c)
+    wacc_p = xp.where(is_c0, e(wacc_pipe_coarse), wacc_p)
+    phi = xp.where(is_c0 | eb(resident), one + zero * phi, phi)
+
+    # ---- argmin key + budget accounting -----------------------------------
+    pipe_b = xp.asarray(pipe, bool)[..., None]
+    valid_b = xp.asarray(valid, bool)[..., None]
+    score = xp.where(pipe_b, busy_c, lat_c)
+    score = xp.where(valid_b | is_c0, score, xp.asarray(BIG, f32))
+
+    # working-set bookkeeping for the chosen mapping: the property tests
+    # assert tile + companions <= budget OR tile == floor (the documented
+    # minimal-working-set clamp, mirroring the coarse model's own floors)
+    tile_s = xp.where(is_is, ifm_buf, xp.where(is_ws, w_buf, e(wl)))
+    comp_s = xp.where(is_is, e(wtile) + e(ofm_res),
+                      e(ifm_tile) + e(ofm_res))
+    floor_s = xp.where(is_is, e(ifm_tile), xp.where(is_ws, e(wtile), e(wl)))
+    tile_p = phi * e(wl) + e(wtile)
+    comp_p = fm_floor
+    floor_p = e(wtile) + zero * frac
+    ws_collapsed = is_c0 | (chain & ~pipe_b) | (eb(resident) & pipe_b)
+    tile_bytes = xp.where(ws_collapsed, zero * frac,
+                          xp.where(pipe_b, tile_p, tile_s))
+    companion_bytes = xp.where(ws_collapsed, zero * frac,
+                               xp.where(pipe_b, comp_p, comp_s))
+    floor_bytes = xp.where(ws_collapsed, zero * frac,
+                           xp.where(pipe_b, floor_p, floor_s))
+    budget_bytes = xp.where(pipe_b, e(ce_buf), e(buf)) + zero * frac
+
+    return {
+        "score": score,
+        "lat_single": lat_c,
+        "acc_single": acc_c,
+        "wacc_single": wacc_c,
+        "facc_single": facc_c,
+        "busy_pipe": busy_c,
+        "w_acc_pipe": wacc_p,
+        "phi": phi,
+        "tile_bytes": tile_bytes,
+        "companion_bytes": companion_bytes,
+        "floor_bytes": floor_bytes,
+        "budget_bytes": budget_bytes,
+    }

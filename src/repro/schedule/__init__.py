@@ -1,0 +1,18 @@
+"""Schedule layer: per-CE temporal-mapping search under every evaluated
+design (docs/schedule.md).
+
+``search`` runs the candidate plane on device (bucket-ladder shapes, no
+compile forks) and re-composes refined metrics through the exact Eq. 2–9
+reduction; ``artifact`` decodes the result into the JSON-serializable
+:class:`ScheduleArtifact` that ``Session.schedule`` returns.
+"""
+from .artifact import (CEPlan, LayerSchedule, ScheduleArtifact, SegmentCost,
+                       build_artifact, energy_proxy)
+from .search import (device_plane, plane_inputs, reference_plane,
+                     schedule_batch, schedule_specs)
+
+__all__ = [
+    "CEPlan", "LayerSchedule", "ScheduleArtifact", "SegmentCost",
+    "build_artifact", "energy_proxy", "device_plane", "plane_inputs",
+    "reference_plane", "schedule_batch", "schedule_specs",
+]

@@ -20,6 +20,7 @@ import json
 import socket
 import threading
 from concurrent.futures import Future
+from concurrent.futures import TimeoutError as FutureTimeout
 
 from ..core.resilience import EvalError
 from .server import ENCODING
@@ -67,9 +68,27 @@ class ServeClient:
 
     def request(self, op: str, *, timeout_s: float | None = None,
                 **params):
-        """Blocking :meth:`request_async`."""
-        return self.request_async(op, **params).result(
-            timeout=self.timeout_s if timeout_s is None else timeout_s)
+        """Blocking :meth:`request_async`.
+
+        ``timeout_s`` (or the client default) is a CLIENT-side deadline:
+        when it passes the call raises ``EvalError(DEADLINE_EXCEEDED)``
+        locally — same taxonomy code the server uses for its own expired
+        deadlines, so callers branch one way — and the request id is
+        abandoned (a late server response is dropped by ``_dispatch``,
+        never delivered to a caller that already gave up).
+        """
+        fut = self.request_async(op, **params)
+        wait = self.timeout_s if timeout_s is None else timeout_s
+        try:
+            return fut.result(timeout=wait)
+        except FutureTimeout:
+            with self._plock:                  # abandon the id
+                self._pending = {k: v for k, v in self._pending.items()
+                                 if v is not fut}
+            raise EvalError(
+                EvalError.DEADLINE_EXCEEDED,
+                f"no response to {op!r} within {wait}s "
+                "(client-side deadline)") from None
 
     def _read_loop(self) -> None:
         buf = b""

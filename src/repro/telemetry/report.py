@@ -22,7 +22,7 @@ from ..core.accelerator import Metrics
 __all__ = ["bottleneck_report", "format_report"]
 
 
-def bottleneck_report(m: Metrics) -> dict:
+def bottleneck_report(m: Metrics, schedule=None) -> dict:
     """Rank where a design's time and traffic go.
 
     Returns a dict with:
@@ -39,6 +39,14 @@ def bottleneck_report(m: Metrics) -> dict:
       maps) with the dominant class called out;
     * ``bottleneck`` — the one-line verdict: the ranked-first segment,
       its bound kind, and the busiest CE.
+
+    ``schedule`` (a :class:`~repro.schedule.ScheduleArtifact`, what
+    ``Session.explain(refine="schedule")`` passes) attaches a
+    ``"schedule"`` section: refined-vs-coarse cycles per segment and the
+    headline latency saving of the temporal-mapping search
+    (``docs/schedule.md``).  The coarse attribution above is untouched —
+    the section reports how much of each segment's cost an explicit
+    mapping recovers.
     """
     total_occ = sum(max(s.compute_s, s.mem_s) for s in m.per_segment) or 1.0
     segments = []
@@ -96,6 +104,27 @@ def bottleneck_report(m: Metrics) -> dict:
     }
 
     top = segments[0] if segments else None
+    sched = None
+    if schedule is not None:
+        sched = {
+            "latency_s": schedule.latency_s,
+            "coarse_latency_s": schedule.coarse_latency_s,
+            "saving_frac": (1.0 - schedule.latency_s
+                            / schedule.coarse_latency_s
+                            if schedule.coarse_latency_s else 0.0),
+            "access_bytes": schedule.access_bytes,
+            "coarse_access_bytes": schedule.coarse_access_bytes,
+            "energy_j": schedule.energy_j,
+            "n_refined_layers": schedule.meta.get("n_refined", 0),
+            "segments": [{
+                "index": s.segment,
+                "pipelined": s.pipelined,
+                "coarse_cyc": s.coarse_cyc,
+                "refined_cyc": s.refined_cyc,
+                "saving_frac": (1.0 - s.refined_cyc / s.coarse_cyc
+                                if s.coarse_cyc else 0.0),
+            } for s in schedule.segments],
+        }
     return {
         "summary": {
             "latency_s": m.latency_s,
@@ -115,6 +144,7 @@ def bottleneck_report(m: Metrics) -> dict:
             "ce": ces[0]["ce"] if ces else None,
             "ce_busy_s": ces[0]["busy_s"] if ces else 0.0,
         },
+        **({"schedule": sched} if sched is not None else {}),
     }
 
 
@@ -147,4 +177,16 @@ def format_report(rep: dict) -> str:
     for c in rep["ces"]:
         lines.append(f"{c['rank']:>4}  {c['ce']:<4}"
                      f"{c['busy_s']:>10.6f} {c['share']:>10.1%}")
+    sched = rep.get("schedule")
+    if sched is not None:
+        lines.append("")
+        lines.append(
+            f"schedule refinement: {sched['latency_s'] * 1e3:.3f} ms "
+            f"vs coarse {sched['coarse_latency_s'] * 1e3:.3f} ms "
+            f"({sched['saving_frac']:.1%} saved, "
+            f"{sched['n_refined_layers']} layer(s) remapped)")
+        for s in sched["segments"]:
+            lines.append(
+                f"  seg {s['index']}: {s['refined_cyc']:.0f} cyc "
+                f"vs {s['coarse_cyc']:.0f} ({s['saving_frac']:.1%})")
     return "\n".join(lines)

@@ -17,7 +17,8 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DOC_FILES = ("README.md", "docs/index.md", "docs/api.md",
              "docs/architecture.md", "docs/perf.md", "docs/dse.md",
              "docs/multinet.md", "docs/robustness.md",
-             "docs/observability.md", "docs/serving.md")
+             "docs/observability.md", "docs/serving.md",
+             "docs/schedule.md")
 
 _LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 #: `path`-style mentions of repo files in the docs' tables/prose

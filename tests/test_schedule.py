@@ -1,0 +1,332 @@
+"""The schedule layer (docs/schedule.md): per-CE temporal-mapping search
+under every evaluated design.
+
+The contracts pinned here:
+
+* **never worse** — schedule-refined latency <= the coarse MCCM latency
+  for every baseline arch x CNN (candidate 0 IS the coarse mapping, the
+  Eq. 2-9 composition is monotone in every per-layer field);
+* **bit-parity** — the device candidate plane (jitted jnp) equals the
+  pure-Python reference plane (numpy, same statement sequence) field by
+  field, including the argmin choice, on every baseline arch x CNN and
+  across all boards;
+* **budget discipline** (property test) — every scored tiling respects
+  its CE's buffer budget, or is the documented minimal-working-set
+  clamp;
+* **artifact round-trip** — ``ScheduleArtifact`` -> JSON -> artifact is
+  bit-identical;
+* **compile policy** — warm ``Session.schedule`` across the full zoo
+  adds ZERO compiles beyond one per ladder shape.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from hypo_fallback import given, settings, st
+from repro.api import EvalError, ScheduleArtifact, Session, telemetry
+from repro.cnn.registry import CNN_NAMES, get_cnn
+from repro.core.batch_eval import bucket_max_L
+from repro.core.dse.encoding import encode_specs
+from repro.fpga.archs import ARCH_NAMES, make_arch
+from repro.fpga.boards import BOARD_NAMES, get_board
+from repro.kernels.schedule_score import (CAND_DB, CAND_FRAC, CAND_ORDER,
+                                          FRACS, NCAND, ORDER_NAMES,
+                                          decode_candidate)
+from repro.schedule import build_artifact, schedule_specs
+from repro.schedule.search import device_plane, reference_plane
+
+BOARD = "zc706"
+SPEC = "{L1-Last:CE1-CE4}"
+
+#: the baseline design sweep of one CNN: every arch family at a range
+#: of CE counts (the tab4 grid, shortened for test runtime)
+N_CES = range(2, 12)
+
+
+@pytest.fixture(scope="module")
+def ses():
+    s = Session(get_board(BOARD))
+    yield s
+    s.close()
+
+
+def _designs(net):
+    return [make_arch(a, net, n) for a in ARCH_NAMES for n in N_CES]
+
+
+def _sweep(ses, net, dev=None):
+    dev = get_board(BOARD) if dev is None else dev
+    return schedule_specs(_designs(net), net, ses.device_tables(dev),
+                          tables=ses.tables(net))
+
+
+# --------------------------------------------------------------------------
+# candidate space sanity
+# --------------------------------------------------------------------------
+def test_candidate_space_shape():
+    assert NCAND == 1 + (len(ORDER_NAMES) - 1) * len(FRACS) * 2 == 19
+    assert CAND_ORDER.shape == CAND_FRAC.shape == CAND_DB.shape == (NCAND,)
+    c0 = decode_candidate(0)
+    assert c0 == {"order": "ideal", "tile_frac": 1.0,
+                  "double_buffer": True}
+    seen = {tuple(decode_candidate(i).items()) for i in range(NCAND)}
+    assert len(seen) == NCAND            # no duplicate mappings
+
+
+# --------------------------------------------------------------------------
+# never worse than coarse + genuine strict refinement
+# --------------------------------------------------------------------------
+def test_refined_never_worse_on_every_arch_and_cnn(ses):
+    """The acceptance criterion: schedule-refined latency <= coarse MCCM
+    latency for EVERY baseline arch x CNN — and across the whole sweep
+    at least one design strictly improves (the search is not a no-op)."""
+    strict = 0
+    for name in CNN_NAMES:
+        net = get_cnn(name)
+        out = _sweep(ses, net)
+        lat, coarse = out["ref_latency_s"], out["coarse_latency_s"]
+        assert np.isfinite(lat).all() and np.isfinite(coarse).all()
+        worse = lat > coarse
+        assert not worse.any(), \
+            f"{name}: {int(worse.sum())} design(s) refined WORSE"
+        strict += int((lat < coarse).sum())
+    assert strict >= 1, "no design anywhere strictly improved"
+
+
+def test_refined_equals_coarse_bitwise_when_nothing_wins(ses):
+    """Where no candidate beats the ideal mapping (choice stays 0 on
+    every valid layer), refined metrics are BIT-IDENTICAL to coarse —
+    candidate 0 carries the coarse cost verbatim and argmin tie-breaks
+    to the first index."""
+    net = get_cnn("vgg16")
+    out = _sweep(ses, net)
+    choice, valid = out["choice"], out["valid_l"].astype(bool)
+    untouched = ~np.any((choice != 0) & valid, axis=1)
+    assert untouched.any()               # the regime exists in the sweep
+    for k in ("latency_s", "throughput_ips", "access_bytes",
+              "buffer_bytes"):
+        np.testing.assert_array_equal(out[f"ref_{k}"][untouched],
+                                      out[f"coarse_{k}"][untouched])
+
+
+# --------------------------------------------------------------------------
+# bit-parity: device plane == pure-Python reference plane
+# --------------------------------------------------------------------------
+def _parity_one(ses, net, board_name, spec):
+    t = ses.tables(net)
+    dev = ses.device_tables(get_board(board_name))
+    design = encode_specs([spec], len(net))
+    dp = device_plane(design, t, dev)
+    rp, rchoice, _st = reference_plane(design, t, dev)
+    np.testing.assert_array_equal(dp["choice"], rchoice)
+    for k, v in rp.items():
+        np.testing.assert_array_equal(dp[k], np.asarray(v),
+                                      err_msg=f"{board_name}/{net.name} "
+                                              f"field {k}")
+
+
+def test_device_plane_matches_reference_every_arch_and_cnn(ses):
+    """Every baseline arch x CNN on the reference board: the jitted
+    device plane and the numpy reference agree bitwise on every field
+    and on the argmin choice."""
+    for name in CNN_NAMES:
+        net = get_cnn(name)
+        for arch in ARCH_NAMES:
+            _parity_one(ses, net, BOARD, make_arch(arch, net, 4))
+
+
+def test_device_plane_matches_reference_every_board(ses):
+    net = get_cnn("resnet50")
+    for board in BOARD_NAMES:
+        for arch in ARCH_NAMES:
+            _parity_one(ses, net, board, make_arch(arch, net, 6))
+
+
+# --------------------------------------------------------------------------
+# budget discipline (property test)
+# --------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(arch=st.sampled_from(ARCH_NAMES),
+       n=st.integers(min_value=2, max_value=11),
+       board=st.sampled_from(BOARD_NAMES),
+       net_name=st.sampled_from(CNN_NAMES))
+def test_every_tiling_respects_the_buffer_budget(arch, n, board, net_name):
+    """For EVERY candidate of every layer: the chosen tile plus its
+    companion working set fits the CE's buffer budget, OR the tile is
+    the documented minimal-working-set clamp (tile == floor, mirroring
+    the coarse model's own buffer floors).  Collapsed rows (ideal /
+    residency-chain / fully-resident) report zeros and pass trivially."""
+    net = get_cnn(net_name)
+    ses = _budget_session()
+    t = ses.tables(net)
+    dev = ses.device_tables(get_board(board))
+    design = encode_specs([make_arch(arch, net, n)], len(net))
+    plane, _choice, _st = reference_plane(design, t, dev)
+    tile = plane["tile_bytes"]
+    comp = plane["companion_bytes"]
+    floor = plane["floor_bytes"]
+    budget = plane["budget_bytes"]
+    eps = 1e-3 * np.maximum(budget, 1.0)
+    fits = tile + comp <= budget + eps
+    clamped = tile <= floor + eps
+    bad = ~(fits | clamped)
+    assert not bad.any(), (
+        f"{net_name}/{board}/{arch}-{n}: {int(bad.sum())} tiling(s) "
+        "overflow their buffer budget without being the floor clamp")
+
+
+_BUDGET_SES = None
+
+
+def _budget_session() -> Session:
+    """One shared session for the property test (tables memoized across
+    examples — the draw space revisits the same nets/boards)."""
+    global _BUDGET_SES
+    if _BUDGET_SES is None:
+        _BUDGET_SES = Session(get_board(BOARD))
+    return _BUDGET_SES
+
+
+# --------------------------------------------------------------------------
+# the artifact
+# --------------------------------------------------------------------------
+def test_artifact_json_round_trip_bit_identical(ses):
+    net = get_cnn("mobilenetv2")
+    for arch in ARCH_NAMES:
+        art = ses.schedule(make_arch(arch, net, 5), net)
+        rt = ScheduleArtifact.from_json(art.to_json())
+        assert rt == art                 # dataclass equality: every float
+        rt2 = ScheduleArtifact.from_json(art.to_json(indent=2))
+        assert rt2 == art
+
+
+def test_artifact_contents_are_consistent(ses):
+    net = get_cnn("resnet50")
+    art = ses.schedule(make_arch("hybrid", net, 6), net)
+    assert art.net == net.name and art.board == BOARD
+    assert art.latency_s <= art.coarse_latency_s
+    assert art.n_candidates == len(art.layers) * NCAND
+    assert art.meta["n_layers"] == len(net)
+    covered = sorted(l.layer for l in art.layers)
+    assert covered == sorted(set(covered))      # each layer at most once
+    for ls in art.layers:
+        assert ls.order in ORDER_NAMES
+        assert ls.latency_cyc <= ls.coarse_cyc
+        assert 0.0 <= ls.phi <= 1.0
+    plan_layers = sorted(l for p in art.ce_plans for l in p.layers)
+    assert plan_layers == covered               # plans partition layers
+    for seg in art.segments:
+        assert seg.refined_cyc <= seg.coarse_cyc
+
+
+def test_build_artifact_rejects_out_of_range_index(ses):
+    net = get_cnn("mobilenetv2")
+    out = _sweep(ses, net)
+    with pytest.raises(IndexError):
+        build_artifact(out, 10_000, net=net, board_name=BOARD,
+                       design_repr="x", wordbytes=1)
+
+
+# --------------------------------------------------------------------------
+# Session surface: schedule / explain / explore
+# --------------------------------------------------------------------------
+def test_session_schedule_validates_input(ses):
+    net = get_cnn("mobilenetv2")
+    with pytest.raises(EvalError) as ei:
+        ses.schedule([SPEC, SPEC], net)          # batches not allowed
+    assert ei.value.code == EvalError.INVALID_INPUT
+    with pytest.raises(EvalError) as ei:
+        ses.schedule("{not notation", net)
+    assert ei.value.code == EvalError.INVALID_INPUT
+
+
+def test_explain_refine_schedule_attaches_section(ses):
+    net = get_cnn("mobilenetv2")
+    plain = ses.explain(SPEC, net)
+    assert "schedule" not in plain
+    rep = ses.explain(SPEC, net, refine="schedule")
+    sched = rep["schedule"]
+    assert sched["latency_s"] <= sched["coarse_latency_s"]
+    assert 0.0 <= sched["saving_frac"] <= 1.0
+    assert len(sched["segments"]) >= 1
+    for s in sched["segments"]:
+        assert s["refined_cyc"] <= s["coarse_cyc"]
+    # the coarse attribution is untouched by the refinement
+    for k in ("segments", "ces", "bottleneck", "summary"):
+        assert rep[k] == plain[k]
+    with pytest.raises(EvalError):
+        ses.explain(SPEC, net, refine="warp")
+
+
+def test_explore_refine_schedule_rescores_front(ses):
+    net = get_cnn("mobilenetv2")
+    res = ses.explore(net, n=256, strategy="random", seed=3,
+                      refine="schedule")
+    base = ses.explore(net, n=256, strategy="random", seed=3)
+    assert base.refined is None
+    # the sweep itself is untouched by the refinement
+    np.testing.assert_array_equal(res.front, base.front)
+    np.testing.assert_array_equal(res.metrics["latency_s"],
+                                  base.metrics["latency_s"])
+    r = res.refined
+    nf = res.front.size
+    assert {k: v.shape for k, v in r.items()} == \
+        {k: (nf,) for k in r}
+    assert (r["latency_s"] <= r["coarse_latency_s"]).all()
+    # refined equals the scalar schedule path for each front member
+    np.testing.assert_array_equal(
+        r["coarse_latency_s"], base.metrics["latency_s"][base.front])
+    with pytest.raises(EvalError):
+        ses.explore(net, n=4, refine="warp")
+
+
+def test_format_report_renders_schedule_section(ses):
+    from repro.api import format_report
+
+    net = get_cnn("mobilenetv2")
+    rep = ses.explain(SPEC, net, refine="schedule")
+    text = format_report(rep)
+    assert "schedule refinement" in text
+
+
+# --------------------------------------------------------------------------
+# compile policy: zero new compiles on warm calls
+# --------------------------------------------------------------------------
+def test_warm_schedule_across_zoo_adds_zero_compiles():
+    """Cold pass over the full zoo compiles at most one schedule program
+    per ladder shape; a second pass with DIFFERENT designs (artifact
+    memo misses, so the device search runs again) adds ZERO compiles."""
+    ses = Session(get_board(BOARD))
+    nets = [get_cnn(n) for n in CNN_NAMES]
+    for net in nets:                         # cold pass
+        ses.schedule(make_arch("segmented", net, 4), net)
+    counts = ses.compile_stats()
+    ladder_shapes = len({bucket_max_L(len(n)) for n in nets})
+    assert 1 <= counts["schedule_batch"] <= ladder_shapes
+    total = counts["total"]
+    builds = ses.stats.schedule_builds
+    for net in nets:                         # warm pass, new designs
+        ses.schedule(make_arch("hybrid", net, 3), net)
+    assert ses.stats.schedule_builds == builds + len(nets)  # memo missed
+    assert ses.compile_stats()["total"] == total            # zero compiles
+    ses.close()
+
+
+def test_schedule_telemetry_counters():
+    telemetry.disable()
+    telemetry.reset()
+    telemetry.enable()
+    try:
+        ses = Session(get_board(BOARD))
+        net = get_cnn("mobilenetv2")
+        art = ses.schedule(SPEC, net)
+        snap = telemetry.snapshot()
+        assert snap["counters"]["schedule.searches"] == 1
+        assert snap["counters"]["schedule.candidates"] == art.n_candidates
+        ses.schedule(SPEC, net)              # memo hit: no new search
+        assert telemetry.snapshot()["counters"]["schedule.searches"] == 1
+        ses.close()
+    finally:
+        telemetry.disable()
+        telemetry.reset()

@@ -159,6 +159,24 @@ def test_deadline_exceeded_over_wire():
     ses.close()
 
 
+def test_client_side_timeout_raises_deadline_exceeded():
+    """A client-side timeout (server still lingering, no reply yet)
+    surfaces as the SAME taxonomy code as a server-expired deadline —
+    EvalError(DEADLINE_EXCEEDED) — and abandons the request id, so the
+    late server reply is dropped instead of leaking a pending future."""
+    ses = Session(get_board(BOARD), linger_s=0.5)
+    with EvalServer(ses) as srv, _client(srv) as cli:
+        with pytest.raises(EvalError) as ei:
+            cli.evaluate(SPEC, NET, timeout_s=0.01)
+        assert ei.value.code == EvalError.DEADLINE_EXCEEDED
+        with cli._plock:
+            assert not cli._pending          # id abandoned, not leaked
+        # the connection stays usable: the next (patient) request lands
+        m = cli.evaluate(SPEC, NET, timeout_s=300.0)
+        assert np.isfinite(m["latency_s"])
+    ses.close()
+
+
 def test_queue_full_over_wire():
     """Admission control crosses the wire: with max_queue=1 and a long
     linger, the second concurrent request is refused as QUEUE_FULL."""

@@ -137,6 +137,43 @@ def test_default_bounds_never_evict_in_normal_use():
     ses.close()
 
 
+def test_schedule_memo_bounded_under_design_churn():
+    """More distinct designs than the bound through Session.schedule():
+    the artifact memo stays at its bound, overflow surfaces as evictions
+    in observability(), and a churned-out design rebuilds to an EQUAL
+    artifact (bit-exact: the search is deterministic and the artifact is
+    plain floats)."""
+    ses = Session(get_board("zc706"), max_cached_tables=3)
+    net = _tiny_net(0)
+    specs = [f"{{L1-Last:CE1-CE{k}}}" for k in range(1, 9)]
+    first = ses.schedule(specs[0], net)
+    for s in specs[1:]:                       # churn the first one out
+        ses.schedule(s, net)
+    caches = ses.observability()["caches"]
+    assert caches["schedule_artifacts"]["size"] <= 3
+    assert caches["schedule_artifacts"]["maxsize"] == 3
+    assert caches["schedule_artifacts"]["evictions"] >= len(specs) - 3
+    assert ses.stats.schedule_evictions == \
+        caches["schedule_artifacts"]["evictions"]
+    builds_before = ses.stats.schedule_builds
+    again = ses.schedule(specs[0], net)
+    assert ses.stats.schedule_builds == builds_before + 1   # rebuilt
+    assert again == first                     # dataclass equality: exact
+    ses.close()
+
+
+def test_schedule_memo_hit_returns_same_object():
+    ses = Session(get_board("zc706"))
+    net = _tiny_net(1)
+    a = ses.schedule(SPEC, net)
+    b = ses.schedule(SPEC, net)
+    assert b is a
+    assert ses.stats.schedule_hits == 1
+    assert ses.stats.schedule_builds == 1
+    assert ses.stats.schedule_calls == 2
+    ses.close()
+
+
 # --------------------------------------------------------------------------
 # mesh sharded-jit LRU
 # --------------------------------------------------------------------------
